@@ -1,0 +1,93 @@
+"""Shared benchmark fixtures: a small trained model + calibrated AQUA
+projections, cached on disk so the per-table benches reuse one training
+run. CPU-scale stand-in for the paper's Llama-3.1-8B testbed (DESIGN.md
+§6 paper-scale note)."""
+from __future__ import annotations
+
+import dataclasses
+import os
+import pickle
+import time
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import reduced
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.calibration import AquaProjections, calibrate
+from repro.data.pipeline import DataConfig, calibration_batches, make_batch
+from repro.launch.train import Trainer
+from repro.models import build_model
+
+CACHE = os.environ.get("REPRO_BENCH_CACHE", "/tmp/repro_bench_cache.pkl")
+
+# GQA-structured small model (kv < heads, like the paper's Llama-3.1 group
+# structure) trained on the learnable LCG language.
+BENCH_SEQ = 64
+BENCH_VOCAB = 128
+
+
+def bench_config() -> ModelConfig:
+    cfg = reduced("qwen3-0.6b", vocab=BENCH_VOCAB, d_model=96)
+    return dataclasses.replace(cfg, remat=False, dtype="float32")
+
+
+def data_config() -> DataConfig:
+    # copy task: quality depends on long-range attention, so AQUA's
+    # approximation level is visible in the NLL (unlike Markovian data).
+    return DataConfig(vocab_size=BENCH_VOCAB, seq_len=BENCH_SEQ,
+                      global_batch=16, kind="copy")
+
+
+def get_trained_model() -> Tuple[ModelConfig, dict, AquaProjections]:
+    if os.path.exists(CACHE):
+        with open(CACHE, "rb") as f:
+            cfg, params, proj = pickle.load(f)
+        return cfg, jax.tree.map(jnp.asarray, params), \
+            AquaProjections(p=jnp.asarray(proj))
+    cfg = bench_config()
+    tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=20, total_steps=400)
+    trainer = Trainer(cfg, tcfg, data_config(), donate=False)
+    state, _ = trainer.run(400, log_every=100)
+    params = state.params
+    model = build_model(cfg)
+
+    def fwd_cap(p, batch):
+        _, aux = model.forward(p, batch, capture=True)
+        return aux
+    proj = calibrate(fwd_cap, params,
+                     calibration_batches(cfg, num_batches=4, batch=4,
+                                         seq=BENCH_SEQ), cfg)
+    with open(CACHE, "wb") as f:
+        pickle.dump((cfg, jax.tree.map(np.asarray, params),
+                     np.asarray(proj.p)), f)
+    return cfg, params, proj
+
+
+def eval_nll(cfg: ModelConfig, params, proj, *, steps=4, seed0=50_000
+             ) -> float:
+    """Teacher-forced NLL on held-out batches under an AQUA config."""
+    from repro.models.layers import cross_entropy
+    model = build_model(cfg)
+    p_arr = None if proj is None else proj.p
+    fwd = jax.jit(lambda pr, b: cross_entropy(
+        model.forward(pr, b, aqua_proj=p_arr), b["labels"],
+        b.get("loss_mask")))
+    dcfg = data_config()
+    vals = [float(fwd(params, make_batch(dcfg, seed0 + i)))
+            for i in range(steps)]
+    return float(np.mean(vals))
+
+
+def timeit(fn, *args, iters: int = 5) -> float:
+    """Median wall time in microseconds (jit-compiled callable)."""
+    fn(*args)  # warmup/compile
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))

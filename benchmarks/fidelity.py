@@ -1,0 +1,272 @@
+"""Paper-table fidelity benchmarks (one function per table/figure).
+
+Each returns a list of CSV rows (name, us_per_call, derived). The derived
+column carries the paper-metric (NLL, L_info, byte ratio, ...) so the CSV
+doubles as the reproduction record in EXPERIMENTS.md §Fidelity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (bench_config, data_config, eval_nll,
+                               get_trained_model, timeit, BENCH_SEQ)
+from repro.configs.base import AquaConfig
+from repro.core import aqua as aqua_lib
+from repro.core.calibration import AquaProjections
+from repro.data.pipeline import make_batch
+from repro.models import build_model
+
+Row = Tuple[str, float, str]
+
+
+# ---------------------------------------------------------------------------
+# Figure 2: information-retention loss — offline vs online projection,
+# magnitude vs naive slicing.
+# ---------------------------------------------------------------------------
+
+
+def fig2_info_retention() -> List[Row]:
+    cfg, params, proj = get_trained_model()
+    model = build_model(cfg)
+    batch = make_batch(data_config(), 70_000)
+    _, aux = model.forward(params, {"tokens": batch["tokens"]}, capture=True)
+    q, k = aux["qk"][0]              # layer 0: (B,S,KV,G,D), (B,S,KV,D)
+    d = q.shape[-1]
+    kvh = k.shape[2]
+    # head 0 group (paper: layer 0 head 0 of the GQA group)
+    qs = q[:, :, 0].reshape(-1, d)   # all group queries
+    ks = k[:, :, 0].reshape(-1, d)
+    vecs = jnp.concatenate([qs, ks], 0)
+
+    p_off = proj.p[0, 0]                                  # offline calibrated
+    p_on = aqua_lib.compute_projection(vecs)              # online "same data"
+
+    rows: List[Row] = []
+    for frac in (0.25, 0.5, 0.75):
+        kd = int(d * frac)
+        for pname, p in (("offline", p_off), ("online", p_on)):
+            vh = vecs @ p
+            m_mag = aqua_lib.magnitude_mask(vh, kd)
+            m_sl = aqua_lib.slicing_mask(d, kd, vh)
+            l_mag = float(aqua_lib.info_retention_loss(vecs, vh, m_mag).mean())
+            l_sl = float(aqua_lib.info_retention_loss(vecs, vh, m_sl).mean())
+            rows.append((f"fig2/{pname}_magnitude_k{frac}", 0.0,
+                         f"L_info={l_mag:.4f}"))
+            rows.append((f"fig2/{pname}_slicing_k{frac}", 0.0,
+                         f"L_info={l_sl:.4f}"))
+    # headline checks: offline≈online; magnitude < slicing
+    vh_off = vecs @ p_off
+    vh_on = vecs @ p_on
+    kd = d // 2
+    lo = float(aqua_lib.info_retention_loss(
+        vecs, vh_off, aqua_lib.magnitude_mask(vh_off, kd)).mean())
+    ln = float(aqua_lib.info_retention_loss(
+        vecs, vh_on, aqua_lib.magnitude_mask(vh_on, kd)).mean())
+    ls = float(aqua_lib.info_retention_loss(
+        vecs, vh_off, aqua_lib.slicing_mask(d, kd, vh_off)).mean())
+    rows.append(("fig2/offline_vs_online_gap", 0.0,
+                 f"gap={abs(lo-ln):.4f}"))
+    rows.append(("fig2/slicing_over_magnitude", 0.0,
+                 f"ratio={ls/max(lo,1e-9):.2f}x"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 1 / 4: standalone AQUA — quality vs k_ratio.
+# ---------------------------------------------------------------------------
+
+
+def table1_standalone() -> List[Row]:
+    cfg, params, proj = get_trained_model()
+    rows: List[Row] = []
+    base = eval_nll(cfg, params, None)
+    rows.append(("table1/baseline", _fwd_time(cfg, params, None),
+                 f"nll={base:.4f}"))
+    for kr in (0.9, 0.75, 0.5, 0.3):
+        c = dataclasses.replace(cfg, aqua=AquaConfig(k_ratio=kr,
+                                                     block_dims=1))
+        nll = eval_nll(c, params, proj)
+        rows.append((f"table1/k{kr}", _fwd_time(c, params, proj),
+                     f"nll={nll:.4f} delta={nll-base:+.4f}"))
+    return rows
+
+
+def _fwd_time(cfg, params, proj) -> float:
+    from repro.models.layers import cross_entropy
+    model = build_model(cfg)
+    p_arr = None if proj is None else proj.p
+    batch = make_batch(data_config(), 80_000)
+    fn = jax.jit(lambda pr, b: cross_entropy(
+        model.forward(pr, b, aqua_proj=p_arr), b["labels"]))
+    return timeit(fn, params, batch)
+
+
+# ---------------------------------------------------------------------------
+# Table 2: AQUA-H2O synergy.
+# ---------------------------------------------------------------------------
+
+
+def table2_aqua_h2o() -> List[Row]:
+    cfg, params, proj = get_trained_model()
+    model = build_model(cfg)
+    dcfg = data_config()
+    rows: List[Row] = []
+    for h2o in (1.0, 0.75, 0.5):
+        for kr in (1.0, 0.75, 0.5):
+            c = dataclasses.replace(
+                cfg, aqua=AquaConfig(k_ratio=kr, h2o_ratio=h2o,
+                                     block_dims=1))
+            nll = _decode_nll(c, params, proj, dcfg)
+            rows.append((f"table2/h2o{h2o}_k{kr}", 0.0, f"nll={nll:.4f}"))
+    return rows
+
+
+def _decode_nll(cfg, params, proj, dcfg, prompt_len=None) -> float:
+    """Teacher-forced decode NLL through the *cache* path (exercises the
+    eviction policy, unlike forward()). Scores only the attention-dependent
+    copy region (the second half)."""
+    model = build_model(cfg)
+    p_arr = None if proj is None else proj.p
+    batch = make_batch(dcfg, 90_000)
+    toks = batch["tokens"][:4]
+    s = toks.shape[1]
+    if prompt_len is None:
+        prompt_len = (s + 1) // 2 + 1   # prompt = the full prefix
+    logits, state = jax.jit(
+        lambda pr, t: model.prefill(pr, {"tokens": t}, BENCH_SEQ,
+                                    aqua_proj=p_arr)
+    )(params, toks[:, :prompt_len])
+    step = jax.jit(lambda pr, st, t: model.decode_step(pr, st, t,
+                                                       aqua_proj=p_arr))
+    nll = []
+    for t in range(prompt_len, s):
+        logp = jax.nn.log_softmax(logits, -1)
+        nll.append(-np.asarray(
+            jnp.take_along_axis(logp, toks[:, t][:, None], -1)).mean())
+        logits, state = step(params, state, toks[:, t])
+    return float(np.mean(nll))
+
+
+# ---------------------------------------------------------------------------
+# Table 3: AQUA-Memory — KV-cache bytes vs quality.
+# ---------------------------------------------------------------------------
+
+
+def table3_aqua_memory() -> List[Row]:
+    cfg, params, proj = get_trained_model()
+    from repro.serving import ServeEngine
+    rows: List[Row] = []
+    base_bytes = ServeEngine(cfg, params, None, max_seq=BENCH_SEQ
+                             ).cache_bytes(4)
+    base = eval_nll(cfg, params, None)
+    rows.append(("table3/full_attn", 0.0,
+                 f"nll={base:.4f} cache_bytes=1.00x"))
+    for sr in (0.1, 0.25):
+        for kr in (1.0, 0.9, 0.75):
+            c = dataclasses.replace(
+                cfg, aqua=AquaConfig(k_ratio=kr, s_ratio=sr, block_dims=1))
+            eng = ServeEngine(c, params, proj, max_seq=BENCH_SEQ)
+            nll = eval_nll(c, params, proj)
+            ratio = eng.cache_bytes(4) / base_bytes
+            e_ratio = c.aqua.e_ratio
+            rows.append((f"table3/s{sr}_k{kr}", 0.0,
+                         f"nll={nll:.4f} cache_bytes={ratio:.2f}x "
+                         f"E_ratio={e_ratio:.3f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Corollary A.3: computational break-even point.
+# ---------------------------------------------------------------------------
+
+
+def breakeven() -> List[Row]:
+    """Corollary A.3. The paper states the bound with the projection cost
+    as O(d²) (both q and k projections folded into the constant); exact
+    multiply counting gives threshold 2d²/(d−k). We report the paper's
+    big-O form and verify the exact count on both sides of the exact
+    threshold."""
+    rows: List[Row] = []
+    d = 128
+    for k in (16, 64, 112):
+        paper_theory = d * d / (d - k)
+        exact = 2 * d * d / (d - k)
+        rows.append((f"breakeven/d128_k{k}", 0.0,
+                     f"paper_O_tokens={paper_theory:.0f} "
+                     f"exact_tokens={exact:.0f}"))
+        for seq in (int(exact * 0.5), int(exact * 2)):
+            c_std = seq * d
+            c_aqua = 2 * d * d + seq * k   # q,k projections + sparse dot
+            faster = c_aqua < c_std
+            expect = seq > exact
+            assert faster == expect, (k, seq)
+            rows.append((f"breakeven/d128_k{k}_seq{seq}", 0.0,
+                         f"aqua_faster={faster}"))
+    # with folded projections (DESIGN.md §2) the overhead term vanishes:
+    rows.append(("breakeven/folded_projection", 0.0,
+                 "breakeven_tokens=0 (projection folded into W_Q/W_K)"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# TPU-adaptation ablation: selection granularity (block_dims 1 vs 8).
+# ---------------------------------------------------------------------------
+
+
+def block_granularity() -> List[Row]:
+    cfg, params, proj = get_trained_model()
+    rows: List[Row] = []
+    for bd in (1, 8):
+        c = dataclasses.replace(cfg, aqua=AquaConfig(k_ratio=0.75,
+                                                     block_dims=bd))
+        nll = eval_nll(c, params, proj)
+        rows.append((f"block_granularity/bd{bd}", 0.0, f"nll={nll:.4f}"))
+    # L_info at both granularities on real activations
+    model = build_model(cfg)
+    batch = make_batch(data_config(), 70_001)
+    _, aux = model.forward(params, {"tokens": batch["tokens"]}, capture=True)
+    q, _ = aux["qk"][0]
+    d = q.shape[-1]
+    qs = (q[:, :, 0].reshape(-1, d)) @ proj.p[0, 0]
+    kd = int(d * 0.75) // 8 * 8
+    for bd in (1, 8):
+        m = aqua_lib.magnitude_mask(qs, kd, block_dims=bd)
+        l = float(aqua_lib.info_retention_loss(qs, qs, m).mean())
+        rows.append((f"block_granularity/Linfo_bd{bd}", 0.0,
+                     f"L_info={l:.4f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Kernel-level: HBM bytes of the block-sparse decode vs dense decode.
+# ---------------------------------------------------------------------------
+
+
+def kernel_bandwidth() -> List[Row]:
+    from repro.kernels.ops import aqua_decode
+    from repro.kernels.ref import aqua_decode_ref
+    from repro.core.aqua import topk_block_indices
+    b, h, kvh, s, d = 1, 4, 2, 512, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, h, d))
+    khat = jax.random.normal(ks[1], (b, kvh, s, d))
+    v = jax.random.normal(ks[2], (b, kvh, s, d))
+    lengths = jnp.full((b,), s, jnp.int32)
+    rows: List[Row] = []
+    dense_bytes = khat.size * 2 + v.size * 2          # bf16 stream of K + V
+    for kr in (0.5, 0.75, 1.0):
+        us = timeit(lambda: aqua_decode(q, khat, v, lengths, k_ratio=kr),
+                    iters=3)
+        nb_sel = max(1, int(round(kr * d)) // 8)
+        kernel_bytes = (khat.size * 2) * (nb_sel / (d // 8)) + v.size * 2
+        rows.append((f"kernel/aqua_decode_k{kr}", us,
+                     f"hbm_bytes_ratio={kernel_bytes/dense_bytes:.3f}"))
+    us_ref = timeit(lambda: aqua_decode_ref(
+        q, khat, v, topk_block_indices(q, 48, 8), lengths, 8), iters=3)
+    rows.append(("kernel/dense_ref", us_ref, "hbm_bytes_ratio=1.000"))
+    return rows

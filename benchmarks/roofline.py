@@ -1,0 +1,122 @@
+"""Roofline analysis: turn dry-run JSONL records into the §Roofline table.
+
+    PYTHONPATH=src python -m benchmarks.roofline results/roofline_single.jsonl
+
+Per (arch × shape): the three roofline terms (compute / memory /
+collective, seconds), the dominant bottleneck, MODEL_FLOPS (6·N·D dense /
+6·N_active·D MoE), the useful-compute ratio MODEL_FLOPS / HLO_FLOPs, and a
+one-line recommendation for the dominant term.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict
+
+from repro.configs import SHAPES_BY_NAME, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def active_params(cfg: ModelConfig) -> float:
+    """Active (per-token) parameter count, embeddings excluded, unembed
+    included as compute-bearing."""
+    dm, L = cfg.d_model, cfg.num_layers
+    n = 0.0
+    a = cfg.attention
+    if a is not None:
+        attn = dm * a.head_dim * (a.num_heads + 2 * a.num_kv_heads) \
+            + a.num_heads * a.head_dim * dm
+        n_attn_layers = L
+        if cfg.family == "hybrid":
+            pat = cfg.rglru.block_pattern
+            n_attn_layers = sum(1 for i in range(L)
+                                if pat[i % len(pat)] == "attention")
+        n += attn * n_attn_layers
+    if cfg.family == "moe":
+        m = cfg.moe
+        n += L * (m.top_k + m.num_shared) * 3 * dm * m.expert_ff
+        n += L * dm * m.num_experts  # router
+    elif cfg.family == "ssm":
+        s = cfg.ssm
+        di = s.expand * dm
+        proj_out = 2 * di + 2 * s.ngroups * s.state_dim + di // s.head_dim
+        n += L * (dm * proj_out + di * dm)
+    elif cfg.family == "hybrid":
+        pat = cfg.rglru.block_pattern
+        w = cfg.rglru.lru_width or dm
+        n_rec = sum(1 for i in range(L)
+                    if pat[i % len(pat)] == "recurrent")
+        n += n_rec * (2 * dm * w + 2 * w * w + w * dm)
+        n += L * 3 * dm * cfg.d_ff
+    else:
+        gate = 3 if cfg.act == "silu" else 2
+        n += L * gate * dm * cfg.d_ff
+        if cfg.family == "encdec":
+            enc_attn = dm * cfg.attention.head_dim * 4 * cfg.attention.num_heads
+            n += cfg.num_encoder_layers * (enc_attn + 2 * dm * cfg.d_ff)
+            n += L * enc_attn  # decoder cross-attention
+    n += dm * cfg.vocab_size  # unembed matmul
+    return n
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig, chips: int) -> float:
+    """Useful model FLOPs per executed step, per chip."""
+    n = active_params(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    a = cfg.attention
+    attn_ctx = 0.0
+    if a is not None:
+        ctx = s if a.window is None else min(s, a.window)
+        per_tok = 4 * a.num_heads * a.head_dim * ctx  # scores + AV
+        attn_ctx = per_tok * cfg.num_layers
+    if shape.mode == "train":
+        f = (6 * n + 3 * attn_ctx / 2) * b * s
+    elif shape.mode == "prefill":
+        f = (2 * n + attn_ctx / 2) * b * s   # causal: half the rectangle
+    else:  # decode: one token per sequence
+        f = (2 * n + attn_ctx) * b
+    return f / chips
+
+
+def render(path: str) -> str:
+    rows = [json.loads(l) for l in open(path)]
+    out = ["| arch | shape | t_compute | t_memory | t_collective | "
+           "bottleneck | MODEL_FLOPS/chip | useful ratio | note |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped |"
+                       f" — | — | {r['skipped'][:60]} |")
+            continue
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | ERROR | "
+                       f"— | — | {r['error'][:60]} |")
+            continue
+        cfg = get_config(r["arch"])
+        shape = SHAPES_BY_NAME[r["shape"]]
+        mf = model_flops(cfg, shape, r["chips"])
+        ratio = mf / r["hlo_flops"] if r["hlo_flops"] else float("nan")
+        note = {
+            "compute": "MXU-bound: increase arithmetic intensity "
+                       "(larger tiles/batch)",
+            "memory": "HBM-bound: cut activation/score traffic (fusion, "
+                      "bf16 scores, AQUA k_ratio, Pallas decode kernel)",
+            "collective": "ICI-bound: overlap TP collectives / "
+                          "reduce-scatter instead of all-reduce",
+        }[r["bottleneck"]]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"{r['bottleneck']} | {mf:.3e} | {ratio:.2f} | {note} |")
+    return "\n".join(out)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else \
+        "benchmarks/results/roofline_single.jsonl"
+    print(render(path))
+
+
+if __name__ == "__main__":
+    main()

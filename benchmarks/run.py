@@ -1,0 +1,40 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call is CPU wall time of
+the jitted callable where meaningful, 0.0 for pure-metric rows; derived
+carries the paper metric). Roofline terms come from the dry-run artifacts
+via benchmarks.roofline, not from CPU timing.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import fidelity
+    benches = [
+        fidelity.fig2_info_retention,
+        fidelity.table1_standalone,
+        fidelity.table2_aqua_h2o,
+        fidelity.table3_aqua_memory,
+        fidelity.breakeven,
+        fidelity.block_granularity,
+        fidelity.kernel_bandwidth,
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for bench in benches:
+        try:
+            for name, us, derived in bench():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception:
+            failures += 1
+            print(f"{bench.__name__},ERROR,", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

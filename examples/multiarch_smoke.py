@@ -1,0 +1,38 @@
+"""Run one forward + one serve step for EVERY assigned architecture at
+reduced scale — the '--arch' selector tour.
+
+    PYTHONPATH=src python examples/multiarch_smoke.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ASSIGNED_ARCHS, reduced
+from repro.data.pipeline import DataConfig, add_frontend_inputs, make_batch
+from repro.models import build_model
+
+
+def main():
+    for arch in ASSIGNED_ARCHS:
+        t0 = time.time()
+        cfg = reduced(arch)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                          global_batch=2)
+        batch = add_frontend_inputs(
+            {"tokens": make_batch(dcfg, 0)["tokens"]}, cfg)
+        logits, state = model.prefill(params, batch, max_seq=32)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        logits2, _ = model.decode_step(params, state, tok)
+        ok = bool(np.isfinite(np.asarray(logits2, np.float32)).all())
+        n_params = sum(a.size for a in jax.tree.leaves(params))
+        print(f"{arch:20s} family={cfg.family:7s} params={n_params:>9,d} "
+              f"prefill+decode {'OK' if ok else 'FAIL'} "
+              f"({time.time()-t0:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Quickstart: AQUA in ~60 lines.
+
+Builds a small GQA transformer, computes the offline projection matrices
+(paper §6.1), and compares exact attention with AQUA at the paper's sweet
+spot (k_ratio = 0.75, §8.2).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import reduced
+from repro.configs.base import AquaConfig
+from repro.core.calibration import calibrate
+from repro.data.pipeline import DataConfig, calibration_batches, make_batch
+from repro.models import build_model
+from repro.models.layers import cross_entropy
+
+
+def main():
+    # 1. a reduced qwen3-family config (same GQA structure as production)
+    cfg = dataclasses.replace(reduced("qwen3-0.6b"), remat=False,
+                              dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # 2. offline phase: collect post-RoPE q/k activations on a calibration
+    #    corpus and SVD per (layer, GQA group) -> projection matrices P.
+    def forward_with_capture(p, batch):
+        _, aux = model.forward(p, batch, capture=True)
+        return aux
+
+    projections = calibrate(
+        forward_with_capture, params,
+        calibration_batches(cfg, num_batches=2, batch=2, seq=64), cfg)
+    print("projection matrices:", projections.p.shape,
+          "(layers, kv_heads, d_head, d_head)")
+
+    # 3. online phase: evaluate with and without AQUA.
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=4)
+    batch = make_batch(dcfg, 0)
+
+    exact = model.forward(params, batch)
+    nll_exact = float(cross_entropy(exact, batch["labels"]))
+
+    aqua_cfg = dataclasses.replace(cfg, aqua=AquaConfig(k_ratio=0.75))
+    aqua_model = build_model(aqua_cfg)
+    approx = aqua_model.forward(params, batch, aqua_proj=projections.p)
+    nll_aqua = float(cross_entropy(approx, batch["labels"]))
+
+    print(f"exact attention NLL: {nll_exact:.4f}")
+    print(f"AQUA k=0.75    NLL: {nll_aqua:.4f}  "
+          f"(25% of score dims pruned per query)")
+    # k_ratio=1.0 is exactly lossless (orthogonal rotation, Lemma A.4)
+    full = dataclasses.replace(cfg, aqua=AquaConfig(k_ratio=1.0))
+    nll_full = float(cross_entropy(
+        build_model(full).forward(params, batch, aqua_proj=projections.p),
+        batch["labels"]))
+    print(f"AQUA k=1.0     NLL: {nll_full:.4f}  (== exact, rotation only)")
+
+
+if __name__ == "__main__":
+    main()

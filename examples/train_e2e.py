@@ -1,0 +1,64 @@
+"""End-to-end training driver: train a ~reduced model for a few hundred
+steps on the copy language with checkpointing and auto-resume, then verify
+the trained model serves correctly through the AQUA engine.
+
+    PYTHONPATH=src python examples/train_e2e.py [--steps 300]
+"""
+import argparse
+import dataclasses
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs import reduced
+from repro.configs.base import AquaConfig, TrainConfig
+from repro.core.calibration import calibrate
+from repro.data.pipeline import DataConfig, calibration_batches, make_batch
+from repro.launch.train import Trainer
+from repro.models import build_model
+from repro.serving import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(reduced(args.arch, vocab=64, d_model=96),
+                              remat=False, dtype="float32")
+    tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=20,
+                       total_steps=args.steps,
+                       checkpoint_every=max(50, args.steps // 4))
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                      global_batch=16, kind="copy")
+
+    with tempfile.TemporaryDirectory() as ckdir:
+        trainer = Trainer(cfg, tcfg, dcfg, ckpt_dir=ckdir)
+        state, losses = trainer.run(args.steps, log_every=50)
+        print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+        # calibrate AQUA on the trained weights and serve
+        model = build_model(cfg)
+
+        def fwd_cap(p, b):
+            _, aux = model.forward(p, b, capture=True)
+            return aux
+        proj = calibrate(fwd_cap, state.params,
+                         calibration_batches(cfg, num_batches=2, batch=4,
+                                             seq=64), cfg)
+        aqua_cfg = dataclasses.replace(
+            cfg, aqua=AquaConfig(k_ratio=0.75, h2o_ratio=0.5))
+        eng = ServeEngine(aqua_cfg, state.params, proj, max_seq=128)
+        prompt = make_batch(dcfg, 12345)["tokens"][:2, :32]
+        res = eng.generate({"tokens": prompt}, steps=16)
+        print("generated:", np.asarray(res.tokens[0]).tolist())
+        # on the copy task the continuation should echo the prompt
+        echo = (np.asarray(res.tokens[0])[:16]
+                == np.asarray(prompt[0])[-16 + 1:][:16])
+        print(f"copy-task echo accuracy: {echo.mean():.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Architecture config registry.
+
+``get_config(name)`` returns the full production config; ``--arch <id>``
+in the launchers resolves through ``ARCHS``. ``reduced(name)`` returns the
+CPU-smoke-test variant of the same family.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import (  # noqa: F401
+    AquaConfig, AttentionConfig, FrontendConfig, ModelConfig, MoEConfig,
+    RGLRUConfig, SHAPES, SHAPES_BY_NAME, ShapeConfig, SSMConfig,
+    TrainConfig, reduce_config,
+)
+
+# arch id -> module name
+_MODULES: Dict[str, str] = {
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "qwen1.5-4b": "qwen15_4b",
+    "minitron-4b": "minitron_4b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "mamba2-370m": "mamba2_370m",
+    "pixtral-12b": "pixtral_12b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a27b",
+    "whisper-tiny": "whisper_tiny",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "llama3.1-8b": "llama31_8b",
+}
+
+#: The 10 assigned architectures (llama3.1-8b is extra: the paper's model).
+ASSIGNED_ARCHS = tuple(k for k in _MODULES if k != "llama3.1-8b")
+ALL_ARCHS = tuple(_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    cfg: ModelConfig = mod.CONFIG
+    cfg.validate()
+    return cfg
+
+
+def reduced(name: str, **kw) -> ModelConfig:
+    return reduce_config(get_config(name), **kw)

@@ -1,0 +1,239 @@
+"""Configuration dataclasses for the repro framework.
+
+Every assigned architecture is expressed as a ``ModelConfig``; AQUA is a
+first-class, orthogonal ``AquaConfig`` attached to any attention-bearing
+model. Configs are plain frozen dataclasses so they hash/compare cleanly
+and can be used as jit static args.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class AquaConfig:
+    """Paper hyperparameters (§8.1, §8.4) plus TPU-adaptation knobs."""
+
+    enabled: bool = True
+    # Fraction of (remaining) dims kept for the score dot-product (paper k_ratio).
+    k_ratio: float = 0.75
+    # AQUA-Memory static slice: fraction of trailing principal dims dropped
+    # before caching (paper S_ratio). 0.0 disables AQUA-Memory.
+    s_ratio: float = 0.0
+    # H2O heavy-hitter cache budget as a fraction of full context
+    # (paper H2O_ratio). 1.0 disables eviction.
+    h2o_ratio: float = 1.0
+    # Fraction of the H2O budget reserved for the most recent tokens.
+    h2o_recent_frac: float = 0.5
+    # TPU adaptation: magnitude selection granularity in dims. 1 = exact
+    # paper semantics (per-dim); 8 = sublane-block granularity used by the
+    # Pallas kernel's scalar-prefetch DMA path.
+    block_dims: int = 1
+    # Fold P into W_Q / W_K offline when legal (no per-step projection cost).
+    fold_projection: bool = True
+
+    @property
+    def e_ratio(self) -> float:
+        """Paper's effective ratio for AQUA-Memory."""
+        return (1.0 - self.s_ratio) * self.k_ratio
+
+    def kept_dims(self, head_dim: int) -> int:
+        """Dims retained after the static slice (AQUA-Memory stage 1)."""
+        d = int(round((1.0 - self.s_ratio) * head_dim))
+        return max(self.block_dims, min(head_dim, d))
+
+    def topk_dims(self, head_dim: int) -> int:
+        """Dims kept by dynamic magnitude selection (stage 2)."""
+        d_kept = self.kept_dims(head_dim)
+        k = int(round(self.k_ratio * d_kept))
+        k = max(self.block_dims, min(d_kept, k))
+        # round up to selection granularity
+        b = self.block_dims
+        return ((k + b - 1) // b) * b
+
+
+@dataclass(frozen=True)
+class AttentionConfig:
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    kind: str = "full"           # full | swa (sliding-window) | local
+    window: Optional[int] = None  # for swa/local
+    qk_norm: bool = False         # qwen3-style per-head RMSNorm on q,k
+    qkv_bias: bool = False        # qwen1.5-style bias on q,k,v projections
+    rope_theta: float = 10000.0
+    use_rope: bool = True         # False -> absolute learned positions (whisper)
+    causal: bool = True           # False for encoder self-attention
+
+    @property
+    def group_size(self) -> int:
+        assert self.num_heads % self.num_kv_heads == 0
+        return self.num_heads // self.num_kv_heads
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    expert_ff: int
+    num_shared: int = 0          # qwen2-moe shared experts
+    router_aux_weight: float = 0.01
+    router_jitter: float = 0.0
+    capacity_factor: float = 1.25
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 SSD block parameters."""
+
+    state_dim: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk_size: int = 64
+    ngroups: int = 1
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    """RecurrentGemma RG-LRU block parameters."""
+
+    lru_width: int = 0            # 0 -> d_model
+    conv_width: int = 4
+    block_pattern: Tuple[str, ...] = ("recurrent", "recurrent", "attention")
+
+
+@dataclass(frozen=True)
+class FrontendConfig:
+    """Stub modality frontends (audio frames / vision patches).
+
+    ``input_specs`` provides precomputed embeddings of shape
+    (batch, num_embeds, embed_dim); the model projects and splices them.
+    """
+
+    kind: str = "none"            # none | audio_frames | vision_patches
+    num_embeds: int = 0
+    embed_dim: int = 0
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    d_ff: int
+    vocab_size: int
+    attention: Optional[AttentionConfig] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    frontend: FrontendConfig = field(default_factory=FrontendConfig)
+    aqua: Optional[AquaConfig] = None
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # encoder-decoder (whisper): encoder depth; decoder uses num_layers.
+    num_encoder_layers: int = 0
+    act: str = "silu"             # silu | gelu
+    max_positions: int = 32768    # learned-position table size (use_rope=False)
+    dtype: str = "bfloat16"       # activation/compute dtype
+    param_dtype: str = "float32"
+    remat: bool = True            # activation checkpointing per block
+    # long-context capability flag (drives shape applicability):
+    # sub-quadratic if SSM/hybrid or windowed attention.
+    skip_long_context: bool = False
+
+    @property
+    def subquadratic(self) -> bool:
+        if self.family in ("ssm", "hybrid"):
+            return True
+        if self.attention is not None and self.attention.kind in ("swa", "local"):
+            return True
+        return False
+
+    def with_aqua(self, aqua: AquaConfig) -> "ModelConfig":
+        return replace(self, aqua=aqua)
+
+    def validate(self) -> None:
+        assert self.family in ("dense", "moe", "ssm", "hybrid", "encdec", "vlm")
+        if self.family != "ssm":
+            assert self.attention is not None
+        if self.family == "moe":
+            assert self.moe is not None
+        if self.family == "hybrid":
+            assert self.rglru is not None
+        if self.family == "encdec":
+            assert self.num_encoder_layers > 0
+
+
+def reduce_config(cfg: ModelConfig, *, layers: int = 2, d_model: int = 64,
+                  vocab: int = 128, ff: int = 128) -> ModelConfig:
+    """Shrink a production config to a CPU-smoke-testable size, preserving
+    every structural feature (GQA ratio, qk_norm, MoE routing, SWA, ...)."""
+    kw: dict = dict(num_layers=layers, d_model=d_model, vocab_size=vocab, d_ff=ff)
+    if cfg.attention is not None:
+        heads = max(2, min(4, cfg.attention.num_heads))
+        # preserve GQA-ness: kv < heads iff original had grouping
+        kv = heads if cfg.attention.num_kv_heads == cfg.attention.num_heads else max(1, heads // 2)
+        kw["attention"] = replace(
+            cfg.attention, num_heads=heads, num_kv_heads=kv,
+            head_dim=max(8, d_model // heads),
+            window=None if cfg.attention.window is None else 16)
+    if cfg.moe is not None:
+        kw["moe"] = replace(cfg.moe, num_experts=8,
+                            top_k=min(2, cfg.moe.top_k), expert_ff=ff // 2,
+                            num_shared=min(1, cfg.moe.num_shared),
+                            capacity_factor=8.0)  # effectively dropless
+    if cfg.ssm is not None:
+        kw["ssm"] = replace(cfg.ssm, state_dim=16, head_dim=16, chunk_size=8)
+    if cfg.rglru is not None:
+        kw["rglru"] = replace(cfg.rglru, lru_width=0)
+    if cfg.frontend.kind != "none":
+        kw["frontend"] = replace(cfg.frontend, num_embeds=4, embed_dim=32)
+    if cfg.num_encoder_layers:
+        kw["num_encoder_layers"] = 2
+    kw["remat"] = False
+    kw["dtype"] = "float32"
+    return replace(cfg, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                      # train | prefill | decode
+
+    @property
+    def is_serve(self) -> bool:
+        return self.mode in ("prefill", "decode")
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4096, 256, "train"),
+    ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32768, 128, "decode"),
+    ShapeConfig("long_500k", 524288, 1, "decode"),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    grad_clip: float = 1.0
+    microbatches: int = 1          # gradient accumulation
+    grad_compress: bool = False    # int8 error-feedback allreduce
+    seed: int = 0
+    checkpoint_every: int = 100
+    keep_checkpoints: int = 3

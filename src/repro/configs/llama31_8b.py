@@ -1,0 +1,20 @@
+"""llama-3.1-8b — the paper's primary evaluation model (§8.1).
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=128256, head_dim=128.
+Not part of the assigned pool; included because the paper's experiments
+target it and the fidelity benchmarks mirror its GQA group structure
+(group size 4, as in paper Fig. 2).
+"""
+from repro.configs.base import AttentionConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.1-8b",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    d_ff=14336,
+    vocab_size=128256,
+    attention=AttentionConfig(num_heads=32, num_kv_heads=8, head_dim=128,
+                              rope_theta=500000.0),
+    skip_long_context=True,
+)

@@ -1,0 +1,19 @@
+"""qwen1.5-4b — dense with QKV bias.
+
+40L d_model=2560 20H (GQA kv=20 == MHA) d_ff=6912 vocab=151936
+[hf:Qwen/Qwen1.5 family]
+"""
+from repro.configs.base import AttentionConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-4b",
+    family="dense",
+    num_layers=40,
+    d_model=2560,
+    d_ff=6912,
+    vocab_size=151936,
+    attention=AttentionConfig(
+        num_heads=20, num_kv_heads=20, head_dim=128,
+        qkv_bias=True, rope_theta=1000000.0),
+    skip_long_context=True,  # pure full attention
+)

@@ -1,0 +1,168 @@
+"""AQUA core primitives (paper §4, §6, §7).
+
+Pure-functional JAX implementations of:
+  * offline SVD projection computation (per GQA group),
+  * dynamic magnitude-based dimension selection (per query, per step),
+  * approximate score computation on the selected dims,
+  * the paper's Information Retention Loss metric (§6.2),
+  * AQUA-Memory static slicing (§8.4).
+
+Masking identity used throughout (TPU adaptation, DESIGN.md §2): selecting
+index set I from both q̂ and K̂ and dotting equals dotting (q̂ ⊙ m_I) with
+the *full* K̂, since dropped coordinates contribute 0. The jnp reference
+path uses the masked-dense form; the Pallas kernel realizes the actual
+HBM-byte saving by not streaming unselected dim-blocks.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AquaConfig
+
+# ---------------------------------------------------------------------------
+# Offline: projection computation (paper §6.1, §6.3)
+# ---------------------------------------------------------------------------
+
+
+def compute_projection(d_calib: jax.Array) -> jax.Array:
+    """SVD of the calibration matrix; returns P = V (d_head × d_head).
+
+    ``d_calib``: (M, d_head) stacked query+key activations for one
+    layer / GQA group (eq. D_calib^GQA in §6.3).
+    """
+    d_calib = d_calib.astype(jnp.float32)
+    # Right singular vectors via eigh of the (d×d) Gram matrix — this is
+    # Path 1 of appendix A.3 and is far cheaper than full SVD for M >> d.
+    gram = d_calib.T @ d_calib
+    eigval, eigvec = jnp.linalg.eigh(gram)
+    # eigh returns ascending order; PCA wants descending variance.
+    order = jnp.argsort(eigval)[::-1]
+    return eigvec[:, order]
+
+
+def gqa_calibration_matrix(queries: jax.Array, keys: jax.Array) -> jax.Array:
+    """Stack per-group queries and the shared key head (paper §6.3).
+
+    queries: (group_size, M, d_head); keys: (M, d_head)
+    returns: ((group_size+1)*M, d_head)
+    """
+    g, m, d = queries.shape
+    return jnp.concatenate([queries.reshape(g * m, d), keys], axis=0)
+
+
+def check_orthogonal(p: jax.Array, atol: float = 1e-3) -> jax.Array:
+    eye = jnp.eye(p.shape[-1], dtype=p.dtype)
+    return jnp.max(jnp.abs(p @ p.T - eye)) < atol
+
+
+# ---------------------------------------------------------------------------
+# Online: magnitude-based dimension selection (paper §4 alg. 1, §7)
+# ---------------------------------------------------------------------------
+
+
+def magnitude_mask(q_hat: jax.Array, k_dims: int, *, block_dims: int = 1
+                   ) -> jax.Array:
+    """0/1 mask over the last axis keeping the top-``k_dims`` dims by |q̂|.
+
+    ``block_dims`` > 1 quantizes selection to contiguous blocks of that many
+    dims (TPU sublane granularity; DESIGN.md §2). ``k_dims`` must then be a
+    multiple of ``block_dims``.
+    """
+    d = q_hat.shape[-1]
+    if k_dims >= d:
+        return jnp.ones_like(q_hat, dtype=q_hat.dtype)
+    mag = jnp.abs(q_hat.astype(jnp.float32))
+    if block_dims == 1:
+        # kth largest value as threshold; ties broken by index via top_k.
+        _, idx = jax.lax.top_k(mag, k_dims)
+        mask = jnp.zeros_like(mag)
+        mask = jnp.put_along_axis(mask, idx, 1.0, axis=-1, inplace=False)
+        return mask.astype(q_hat.dtype)
+    assert d % block_dims == 0 and k_dims % block_dims == 0, (d, k_dims, block_dims)
+    nb = d // block_dims
+    kb = k_dims // block_dims
+    bmag = mag.reshape(*mag.shape[:-1], nb, block_dims).sum(-1)
+    _, bidx = jax.lax.top_k(bmag, kb)
+    bmask = jnp.zeros_like(bmag)
+    bmask = jnp.put_along_axis(bmask, bidx, 1.0, axis=-1, inplace=False)
+    mask = jnp.repeat(bmask, block_dims, axis=-1)
+    return mask.astype(q_hat.dtype)
+
+
+def topk_block_indices(q_hat: jax.Array, k_dims: int, block_dims: int
+                       ) -> jax.Array:
+    """Selected dim-*block* indices (sorted ascending) for the Pallas
+    scalar-prefetch path. Last axis of result has k_dims // block_dims."""
+    d = q_hat.shape[-1]
+    assert d % block_dims == 0 and k_dims % block_dims == 0
+    nb, kb = d // block_dims, k_dims // block_dims
+    mag = jnp.abs(q_hat.astype(jnp.float32))
+    bmag = mag.reshape(*mag.shape[:-1], nb, block_dims).sum(-1)
+    _, bidx = jax.lax.top_k(bmag, kb)
+    return jnp.sort(bidx, axis=-1).astype(jnp.int32)
+
+
+def approx_scores(q_hat: jax.Array, khat: jax.Array, mask: jax.Array
+                  ) -> jax.Array:
+    """S̃ = (q̂ ⊙ m) K̂ᵀ  — alg. 1 lines 6-8 in masked-dense form.
+
+    q_hat: (..., d); khat: (..., S, d); mask: broadcastable to q_hat.
+    returns (..., S).
+    """
+    return jnp.einsum("...d,...sd->...s", q_hat * mask, khat)
+
+
+# ---------------------------------------------------------------------------
+# AQUA-Memory static slicing (paper §8.4 stage 1)
+# ---------------------------------------------------------------------------
+
+
+def static_slice(v_hat: jax.Array, cfg: AquaConfig, head_dim: int) -> jax.Array:
+    """Drop the trailing (lowest-variance) principal dims before caching."""
+    kept = cfg.kept_dims(head_dim)
+    return v_hat[..., :kept]
+
+
+# ---------------------------------------------------------------------------
+# Metrics (paper §6.2)
+# ---------------------------------------------------------------------------
+
+
+def info_retention_loss(v: jax.Array, v_hat: jax.Array, mask: jax.Array
+                        ) -> jax.Array:
+    """L_info = | ||v|| − ||v̂[I_k]|| | / ||v||  (elementwise over batch)."""
+    v = v.astype(jnp.float32)
+    v_hat = v_hat.astype(jnp.float32)
+    norm_v = jnp.linalg.norm(v, axis=-1)
+    norm_kept = jnp.linalg.norm(v_hat * mask, axis=-1)
+    return jnp.abs(norm_v - norm_kept) / jnp.maximum(norm_v, 1e-12)
+
+
+def slicing_mask(d: int, k_dims: int, like: jax.Array) -> jax.Array:
+    """LoKi-style naive static slice mask (first k dims) — the baseline the
+    paper compares against in Fig. 2."""
+    m = (jnp.arange(d) < k_dims).astype(like.dtype)
+    return jnp.broadcast_to(m, like.shape[:-1] + (d,))
+
+
+# ---------------------------------------------------------------------------
+# Weight folding (DESIGN.md §2): store W_Q P and W_K P offline.
+# ---------------------------------------------------------------------------
+
+
+def fold_projection_into_weights(wq: jax.Array, wk: jax.Array, p: jax.Array
+                                 ) -> Tuple[jax.Array, jax.Array]:
+    """Legal only when nothing (e.g. RoPE) sits between projection and use.
+    wq/wk: (..., d_model, H, d_head) or (d_model, d_head); p: (d_head, d_head).
+    """
+    return wq @ p, wk @ p
+
+
+def project(x: jax.Array, p: Optional[jax.Array]) -> jax.Array:
+    """q̂ = q P (runtime path, used when RoPE prevents folding)."""
+    if p is None:
+        return x
+    return x @ p.astype(x.dtype)

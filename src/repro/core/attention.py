@@ -1,0 +1,450 @@
+"""Unified multi-head attention with first-class AQUA support.
+
+Covers: MHA / GQA / MQA, full + sliding-window/local masks, RoPE, qk-norm,
+QKV bias, AQUA projection + magnitude selection, AQUA-Memory static slice,
+and H2O heavy-hitter eviction — for both prefill (sequence) and decode
+(single-step with slot cache) modes. Pure jnp reference path; the Pallas
+kernels in ``repro.kernels`` implement the bandwidth-optimal decode.
+
+Conventions:
+  x            (B, S, d_model)
+  q            (B, S, KV, G, D)   G = group size (H = KV*G)
+  k, v         (B, S, KV, D)
+  proj P       (KV, D, D)         per-layer, per-GQA-group (paper §6.3)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from repro import runtime_flags as _rtf
+
+
+def _scan(*args, **kw):
+    kw.update(_rtf.scan_kwargs())
+    return jax.lax.scan(*args, **kw)
+
+
+from repro.configs.base import AquaConfig, AttentionConfig
+from repro.core import aqua as aqua_lib
+from repro.core import kvcache as kv
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding over the last axis. x: (..., S, ..., D) with
+    positions broadcastable to x's sequence axis; here we require
+    x: (B, S, *, D) and positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    # broadcast over head axes between S and D
+    extra = x.ndim - 3  # number of axes between S and D
+    for _ in range(extra):
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:2 * half]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    rest = x[..., 2 * half:]  # odd head dims (e.g. danube D=80 is even; safe)
+    return jnp.concatenate([out1.astype(x.dtype), out2.astype(x.dtype), rest],
+                           axis=-1)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init / QKV projection
+# ---------------------------------------------------------------------------
+
+
+def init_attention_params(rng: jax.Array, d_model: int, cfg: AttentionConfig,
+                          dtype=jnp.float32) -> dict:
+    h, g, d = cfg.num_kv_heads, cfg.group_size, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    std = d_model ** -0.5
+    p = {
+        "wq": jax.random.normal(k1, (d_model, h, g, d), dtype) * std,
+        "wk": jax.random.normal(k2, (d_model, h, d), dtype) * std,
+        "wv": jax.random.normal(k3, (d_model, h, d), dtype) * std,
+        "wo": jax.random.normal(k4, (h, g, d, d_model), dtype) * std,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, g, d), dtype)
+        p["bk"] = jnp.zeros((h, d), dtype)
+        p["bv"] = jnp.zeros((h, d), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((d,), dtype)
+        p["k_norm"] = jnp.ones((d,), dtype)
+    return p
+
+
+def qkv(params: dict, x: jax.Array, cfg: AttentionConfig,
+        positions: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns q (B,S,KV,G,D), k (B,S,KV,D), v (B,S,KV,D), RoPE'd."""
+    q = jnp.einsum("bsm,mkgd->bskgd", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsm,mkd->bskd", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsm,mkd->bskd", x, params["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if cfg.use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# AQUA projection helpers
+# ---------------------------------------------------------------------------
+
+
+def project_q(q: jax.Array, proj: Optional[jax.Array]) -> jax.Array:
+    if proj is None:
+        return q
+    return jnp.einsum("bskgd,kde->bskge", q, proj.astype(q.dtype))
+
+
+def project_k(k: jax.Array, proj: Optional[jax.Array]) -> jax.Array:
+    if proj is None:
+        return k
+    return jnp.einsum("bskd,kde->bske", k, proj.astype(k.dtype))
+
+
+def _aqua_prep(q, k, aqua: Optional[AquaConfig], proj, head_dim: int):
+    """Project + statically slice q̂ and k̂ per AQUA config."""
+    if aqua is None or not aqua.enabled:
+        return q, k, None
+    qh = project_q(q, proj)
+    kh = project_k(k, proj)
+    kept = aqua.kept_dims(head_dim)
+    qh = qh[..., :kept]
+    kh = kh[..., :kept]
+    k_dims = aqua.topk_dims(head_dim)
+    mask = aqua_lib.magnitude_mask(qh, k_dims, block_dims=aqua.block_dims)
+    return qh, kh, mask
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention — pure-XLA memory-efficient path used for
+# long-sequence prefill; the S×S score matrix never materializes. On real
+# TPU this role is played by kernels/flash_attention.py; the jnp version
+# keeps the dry-run/compile path portable and GSPMD-shardable.
+# ---------------------------------------------------------------------------
+
+CHUNKED_THRESHOLD = 2048  # use chunked path for sequences >= this
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      head_dim: int, causal: bool = True,
+                      window: Optional[int] = None, q_blk: int = 512,
+                      k_blk: int = 1024) -> jax.Array:
+    """q: (B, S, KV, G, D'); k: (B, S, KV, D'); v: (B, S, KV, Dv).
+
+    Online-softmax double scan over (q blocks × k blocks). Scale uses the
+    FULL head_dim (AQUA approximates full scores). Returns (B, S, KV, G, Dv).
+    """
+    b, s, kvh, g, d = q.shape
+    dv = v.shape[-1]
+    q_blk, k_blk = _rtf.attn_blocks(q_blk, k_blk)
+    q_blk = min(q_blk, s)
+    k_blk = min(k_blk, s)
+    assert s % q_blk == 0 and s % k_blk == 0, (s, q_blk, k_blk)
+    nq, nk = s // q_blk, s // k_blk
+    scale = 1.0 / (float(head_dim) ** 0.5)
+
+    qb = q.reshape(b, nq, q_blk, kvh, g, d).transpose(1, 0, 3, 4, 2, 5)
+    kb = k.reshape(b, nk, k_blk, kvh, d).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(b, nk, k_blk, kvh, dv).transpose(1, 0, 3, 2, 4)
+
+    # Window-band restriction (§Perf iteration): for sliding-window
+    # attention only the k-blocks intersecting the (window+q_blk) band
+    # around the diagonal contribute; iterate exactly those (compute and
+    # HBM bytes scale with the window, not the context). For full causal
+    # attention iterate the causal prefix of k-blocks per q-block.
+    band = None
+    if causal and window is not None and window < s:
+        band = min(nk, (q_blk + window) // k_blk + 2)
+
+    def outer(_, qi_idx):
+        qi, iq = qi_idx                     # (B,KV,G,qb,D), scalar
+
+        def step(c, kj, vj, jk, valid):
+            m, l, acc = c
+            sij = jnp.einsum("bkgqd,bktd->bkgqt", qi.astype(jnp.float32),
+                             kj.astype(jnp.float32)) * scale
+            qpos = iq * q_blk + jnp.arange(q_blk)[:, None]
+            kpos = jk * k_blk + jnp.arange(k_blk)[None, :]
+            mask = jnp.ones((q_blk, k_blk), bool)
+            if causal:
+                mask &= qpos >= kpos
+            if window is not None:
+                mask &= kpos > qpos - window
+            mask &= valid
+            sij = jnp.where(mask[None, None, None], sij, NEG_INF)
+            m_new = jnp.maximum(m, sij.max(-1))
+            p = jnp.exp(sij - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,bktd->bkgqd", p, vj.astype(jnp.float32))
+            return (m_new, l, acc)
+
+        init = (jnp.full((b, kvh, g, q_blk), NEG_INF, jnp.float32),
+                jnp.zeros((b, kvh, g, q_blk), jnp.float32),
+                jnp.zeros((b, kvh, g, q_blk, dv), jnp.float32))
+
+        if band is not None:
+            last = ((iq + 1) * q_blk - 1) // k_blk  # last needed k-block
+
+            def inner_band(c, j):
+                raw = last - (band - 1) + j         # may be < 0 early on
+                idx = jnp.clip(raw, 0, nk - 1)
+                kj = jax.lax.dynamic_index_in_dim(kb, idx, 0, False)
+                vj = jax.lax.dynamic_index_in_dim(vb, idx, 0, False)
+                return step(c, kj, vj, idx, raw >= 0), None
+            (m, l, acc), _ = _scan(inner_band, init,
+                                   jnp.arange(band))
+        else:
+            def inner(c, kj_idx):
+                kj, vj, jk = kj_idx
+                return step(c, kj, vj, jk, True), None
+            (m, l, acc), _ = _scan(
+                inner, init, (kb, vb, jnp.arange(nk)))
+        return None, acc / jnp.maximum(l, 1e-30)[..., None]
+
+    _, ob = _scan(outer, None, (qb, jnp.arange(nq)))
+    # (nq, B, KV, G, q_blk, Dv) -> (B, S, KV, G, Dv)
+    out = ob.transpose(1, 0, 4, 2, 3, 5).reshape(b, s, kvh, g, dv)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Prefill attention (full sequence)
+# ---------------------------------------------------------------------------
+
+
+def prefill_attention(params: dict, x: jax.Array, cfg: AttentionConfig,
+                      aqua: Optional[AquaConfig] = None,
+                      proj: Optional[jax.Array] = None,
+                      positions: Optional[jax.Array] = None,
+                      kv_x: Optional[jax.Array] = None,
+                      return_aux: bool = False):
+    """Sequence attention. ``kv_x`` enables cross-attention (keys/values from
+    the encoder); in that mode AQUA and causal masking are bypassed unless
+    configured otherwise.
+
+    Returns out (B, S, d_model) [, aux dict with q/k activations & weights].
+    """
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+    src = x if kv_x is None else kv_x
+
+    q = jnp.einsum("bsm,mkgd->bskgd", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsm,mkd->bskd", src, params["wk"].astype(src.dtype))
+    v = jnp.einsum("bsm,mkd->bskd", src, params["wv"].astype(src.dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if cfg.use_rope and kv_x is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    qh, kh, mask = _aqua_prep(q, k, aqua, proj, cfg.head_dim)
+    qq, kk = (q, k) if mask is None else (qh * mask, kh)
+
+    if (s >= CHUNKED_THRESHOLD and kv_x is None and cfg.causal
+            and positions.ndim == 1):
+        out = chunked_attention(qq, kk, v, head_dim=cfg.head_dim,
+                                causal=True, window=cfg.window)
+        out = out.astype(v.dtype)
+        out = jnp.einsum("bskgd,kgdm->bsm", out, params["wo"].astype(x.dtype))
+        if return_aux:
+            return out, {"q": q, "k": k, "weights": None,
+                         "q_hat": qh if mask is not None else None,
+                         "k_hat": kh if mask is not None else None}
+        return out
+
+    scores = jnp.einsum("bskgd,btkd->bkgst", qq, kk)
+    scores = scores.astype(jnp.float32) / jnp.sqrt(float(cfg.head_dim))
+
+    if cfg.causal and kv_x is None:
+        qpos = positions if positions.ndim == 2 else positions[None]
+        kpos = qpos
+        causal = qpos[:, None, None, :, None] >= kpos[:, None, None, None, :]
+        if cfg.window is not None:
+            causal &= (kpos[:, None, None, None, :]
+                       > qpos[:, None, None, :, None] - cfg.window)
+        scores = jnp.where(causal, scores, NEG_INF)
+    weights = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", weights.astype(v.dtype), v)
+    out = jnp.einsum("bskgd,kgdm->bsm", out, params["wo"].astype(x.dtype))
+    if return_aux:
+        aux = {"q": q, "k": k, "weights": weights,
+               "q_hat": qh if mask is not None else None,
+               "k_hat": kh if mask is not None else None}
+        return out, aux
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Prefill -> cache handoff
+# ---------------------------------------------------------------------------
+
+
+def build_cache_from_prefill(params: dict, x: jax.Array, cfg: AttentionConfig,
+                             aqua: Optional[AquaConfig],
+                             proj: Optional[jax.Array],
+                             max_seq: int) -> kv.AttnCache:
+    """Construct the decode cache after a prefill pass (serving engine)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    q, k, v = qkv(params, x, cfg, positions)
+    head_dim = cfg.head_dim
+    if aqua is not None and aqua.enabled:
+        k = project_k(k, proj)[..., :aqua.kept_dims(head_dim)]
+    dk, dv = k.shape[-1], v.shape[-1]
+
+    h2o_budget = None
+    if aqua is not None and aqua.h2o_ratio < 1.0:
+        h2o_budget = max(8, int(aqua.h2o_ratio * max_seq))
+    slots = kv.cache_slots(max_seq, cfg.window, h2o_budget)
+    cache = kv.init_attn_cache(b, cfg.num_kv_heads, slots, dk, dv, k.dtype)
+
+    if h2o_budget is not None and s > slots:
+        # H2O prefill: accumulated (approximate, if AQUA) attention mass.
+        # NB: k above is already projected + sliced when AQUA is on, so we
+        # only transform the query side here.
+        qq = q
+        if aqua.enabled and proj is not None:
+            qq = project_q(q, proj)[..., :aqua.kept_dims(head_dim)]
+            m = aqua_lib.magnitude_mask(qq, aqua.topk_dims(head_dim),
+                                        block_dims=aqua.block_dims)
+            qq = qq * m
+        sc = jnp.einsum("bskgd,btkd->bkgst", qq, k)
+        sc = sc.astype(jnp.float32) / jnp.sqrt(float(head_dim))
+        causal = positions[:, None] >= positions[None, :]
+        sc = jnp.where(causal[None, None, None], sc, NEG_INF)
+        w = jax.nn.softmax(sc, axis=-1)
+        acc = w.sum(axis=(2, 3))  # (B, KV, S) summed over groups & queries
+        recent = max(1, int(aqua.h2o_recent_frac * slots))
+        keep_hh = slots - recent
+        score_tok = acc.sum(axis=1)  # (B, S)
+        # protect the recent window from scored selection
+        score_tok = score_tok.at[:, s - recent:].set(-jnp.inf)
+        _, hh_idx = jax.lax.top_k(score_tok, keep_hh)
+        recent_idx = jnp.broadcast_to(jnp.arange(s - recent, s), (b, recent))
+        sel = jnp.concatenate([jnp.sort(hh_idx, axis=-1), recent_idx], axis=-1)
+        # gather selected tokens: (S, KV, D)[sel] -> (slots, KV, D) -> (KV, slots, D)
+        take = jax.vmap(lambda a, i: a[i].transpose(1, 0, 2), in_axes=(0, 0))
+        cache = kv.AttnCache(
+            k=take(k, sel), v=take(v, sel),
+            positions=jnp.take_along_axis(
+                jnp.broadcast_to(positions, (b, s)), sel, axis=-1),
+            count=jnp.full((b,), s, jnp.int32),
+            acc_score=jnp.take_along_axis(acc, sel[:, None, :], axis=-1),
+        )
+        return cache
+
+    # full / window caches: last `slots` tokens, ring-consistent placement.
+    start = max(0, s - slots)
+    ring = cfg.window is not None
+    tok_pos = positions[start:]
+    slot_idx = (tok_pos % slots) if ring else (tok_pos - start)
+    cache = kv.AttnCache(
+        k=cache.k.at[:, :, slot_idx].set(k[:, start:].transpose(0, 2, 1, 3)),
+        v=cache.v.at[:, :, slot_idx].set(v[:, start:].transpose(0, 2, 1, 3)),
+        positions=cache.positions.at[:, slot_idx].set(tok_pos[None]),
+        count=jnp.full((b,), s, jnp.int32),
+        acc_score=cache.acc_score,
+    )
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (single step, slot cache)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(params: dict, x_t: jax.Array, cache: kv.AttnCache,
+                     cfg: AttentionConfig, aqua: Optional[AquaConfig] = None,
+                     proj: Optional[jax.Array] = None,
+                     cross: Optional[Tuple[jax.Array, jax.Array]] = None,
+                     ) -> Tuple[jax.Array, kv.AttnCache]:
+    """One decode step. x_t: (B, d_model). Returns (out (B, d_model), cache).
+
+    ``cross`` = (k_enc, v_enc) each (B, S_enc, KV, D) for cross-attention
+    layers (whisper decoder); those bypass the cache entirely.
+    """
+    b = x_t.shape[0]
+    if cross is not None:
+        k_enc, v_enc = cross
+        q = jnp.einsum("bm,mkgd->bkgd", x_t, params["wq"].astype(x_t.dtype))
+        if cfg.qkv_bias:
+            q = q + params["bq"].astype(x_t.dtype)
+        if cfg.qk_norm:
+            q = rms_norm(q, params["q_norm"])
+        sc = jnp.einsum("bkgd,bskd->bkgs", q, k_enc).astype(jnp.float32)
+        w = jax.nn.softmax(sc / jnp.sqrt(float(cfg.head_dim)), axis=-1)
+        out = jnp.einsum("bkgs,bskd->bkgd", w.astype(v_enc.dtype), v_enc)
+        out = jnp.einsum("bkgd,kgdm->bm", out, params["wo"].astype(x_t.dtype))
+        return out, cache
+
+    pos = cache.count  # (B,) position of the incoming token
+    q, k, v = qkv(params, x_t[:, None, :], cfg, pos[:, None])
+    q, k_t, v_t = q[:, 0], k[:, 0], v[:, 0]  # (B,KV,G,D), (B,KV,D)
+
+    head_dim = cfg.head_dim
+    mask = None
+    if aqua is not None and aqua.enabled:
+        qh = jnp.einsum("bkgd,kde->bkge", q, proj.astype(q.dtype))
+        kh = jnp.einsum("bkd,kde->bke", k_t, proj.astype(k_t.dtype))
+        kept = aqua.kept_dims(head_dim)
+        q, k_t = qh[..., :kept], kh[..., :kept]
+        mask = aqua_lib.magnitude_mask(q, aqua.topk_dims(head_dim),
+                                       block_dims=aqua.block_dims)
+
+    h2o = aqua is not None and aqua.enabled and aqua.h2o_ratio < 1.0
+    recent_len = 0
+    if h2o:
+        recent_len = max(1, int(aqua.h2o_recent_frac * cache.num_slots))
+    slot = kv.select_slot(cache, window=cfg.window, h2o=h2o,
+                          recent_len=recent_len)
+    cache = kv.insert(cache, slot, k_t, v_t)
+
+    qq = q if mask is None else q * mask
+    scores = jnp.einsum("bkgd,bksd->bkgs", qq, cache.k.astype(qq.dtype))
+    scores = scores.astype(jnp.float32) / jnp.sqrt(float(head_dim))
+    vm = kv.valid_mask(cache, window=cfg.window)  # (B, S_slots)
+    scores = jnp.where(vm[:, None, None, :], scores, NEG_INF)
+    weights = jax.nn.softmax(scores, axis=-1)
+    if h2o:
+        cache = kv.accumulate_h2o(cache, weights)
+    out = jnp.einsum("bkgs,bksd->bkgd", weights.astype(cache.v.dtype), cache.v)
+    out = jnp.einsum("bkgd,kgdm->bm", out, params["wo"].astype(x_t.dtype))
+    return out, cache

@@ -1,0 +1,94 @@
+"""Offline AQUA calibration (paper §6.1): run the model over a calibration
+corpus, collect post-transform (post-RoPE / post-qk-norm) query and key
+activations per layer and GQA group, and compute the per-group SVD
+projection matrices P.
+
+Output artifact: ``AquaProjections`` — array (num_layers, num_kv_heads,
+d_head, d_head), saved/loaded as .npz alongside checkpoints. Layers without
+a QK dot product (SSM blocks, cross-attention) get identity entries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, Iterable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import aqua as aqua_lib
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class AquaProjections:
+    """p: (num_layers, num_kv_heads, d_head, d_head)."""
+
+    p: jax.Array
+
+    def layer(self, i: int) -> jax.Array:
+        return self.p[i]
+
+
+def identity_projections(num_layers: int, num_kv: int, d: int
+                         ) -> AquaProjections:
+    eye = jnp.broadcast_to(jnp.eye(d), (num_layers, num_kv, d, d))
+    return AquaProjections(p=eye)
+
+
+def calibrate(forward_with_capture: Callable, params, batches: Iterable,
+              cfg: ModelConfig, max_vectors: int = 16384) -> AquaProjections:
+    """Compute projections from captured activations.
+
+    ``forward_with_capture(params, tokens) -> aux`` must return
+    ``aux["qk"]``: list over attention layers of (q, k) with
+    q: (B, S, KV, G, D), k: (B, S, KV, D) — post-RoPE, exactly the vectors
+    the online phase projects (paper §6.1 step 2).
+
+    Accumulates Gram matrices streamingly (no giant concat) — equivalent to
+    SVD right-singular-vectors of the stacked D_calib (appendix A.3 path 1).
+    """
+    acfg = cfg.attention
+    assert acfg is not None, "calibration needs an attention model"
+    d = acfg.head_dim
+    kvh = acfg.num_kv_heads
+    grams: Optional[np.ndarray] = None   # (L, KV, D, D)
+    layer_ids: Optional[List[int]] = None
+    seen = 0
+    for tokens in batches:
+        if seen >= max_vectors:
+            break
+        aux = forward_with_capture(params, tokens)
+        qks = aux["qk"]
+        if grams is None:
+            grams = np.zeros((len(qks), kvh, d, d), np.float64)
+            layer_ids = list(range(len(qks)))
+        for li, (q, k) in enumerate(qks):
+            b, s = q.shape[0], q.shape[1]
+            # D_calib^GQA per group: queries of the group + the shared key.
+            qm = np.asarray(q, np.float64).reshape(b * s, kvh, -1, d)
+            km = np.asarray(k, np.float64).reshape(b * s, kvh, d)
+            for h in range(kvh):
+                dq = qm[:, h].reshape(-1, d)
+                dmat = np.concatenate([dq, km[:, h]], axis=0)
+                grams[li, h] += dmat.T @ dmat
+        seen += int(np.prod(q.shape[:2]))
+    assert grams is not None, "no calibration batches supplied"
+    num_layers = grams.shape[0]
+    p = np.zeros((num_layers, kvh, d, d), np.float32)
+    for li in range(num_layers):
+        for h in range(kvh):
+            eigval, eigvec = np.linalg.eigh(grams[li, h])
+            p[li, h] = eigvec[:, ::-1]  # descending variance
+    return AquaProjections(p=jnp.asarray(p))
+
+
+def save_projections(path: str, proj: AquaProjections) -> None:
+    np.savez(path, p=np.asarray(proj.p))
+
+
+def load_projections(path: str) -> AquaProjections:
+    with np.load(path) as f:
+        return AquaProjections(p=jnp.asarray(f["p"]))

@@ -1,0 +1,46 @@
+"""H2O heavy-hitter token eviction (Zhang et al., 2023) and its AQUA
+coupling (paper §8.3).
+
+The slot mechanics live in ``repro.core.kvcache`` (select_slot /
+accumulate_h2o); this module provides the policy-level API and a reference
+"oracle" implementation used by tests and the Table-2 benchmark:
+given a full attention-weight history, which tokens would H2O keep?
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AquaConfig
+from repro.core import kvcache as kv
+
+
+def h2o_budget(aqua: Optional[AquaConfig], max_seq: int) -> Optional[int]:
+    if aqua is None or not aqua.enabled or aqua.h2o_ratio >= 1.0:
+        return None
+    return max(8, int(aqua.h2o_ratio * max_seq))
+
+
+def reference_keep_set(weights: jax.Array, budget: int, recent_frac: float
+                       ) -> jax.Array:
+    """Oracle H2O keep-set from a full (S_q, S_k) attention-weight matrix
+    (single head). Returns sorted kept indices of size ``budget``.
+
+    Used to validate the online slot-based policy: after processing a
+    sequence, the cache's kept positions must match this set's semantics
+    (heavy hitters by accumulated score + recent window).
+    """
+    s = weights.shape[-1]
+    recent = max(1, int(recent_frac * budget))
+    acc = weights.sum(axis=0)                      # accumulated column mass
+    acc = acc.at[s - recent:].set(jnp.inf)         # recents always kept
+    _, idx = jax.lax.top_k(acc, budget)
+    return jnp.sort(idx)
+
+
+def eviction_step(cache: kv.AttnCache, aqua: AquaConfig) -> jax.Array:
+    """Expose the victim-selection decision for inspection/benchmarks."""
+    recent_len = max(1, int(aqua.h2o_recent_frac * cache.num_slots))
+    return kv.select_slot(cache, window=None, h2o=True, recent_len=recent_len)

@@ -1,0 +1,146 @@
+"""Decode-time caches.
+
+One unified slot-based cache covers every policy in the framework:
+
+  * standard full cache        (slots = max_seq, slot s holds position s)
+  * sliding / local window     (slots = window, ring buffer)
+  * H2O heavy-hitter budget    (slots = budget, victim = argmin acc score)
+  * AQUA projected cache       (keys stored projected, dim-major [D, S],
+                                optionally statically sliced — AQUA-Memory)
+
+Slots carry an explicit ``positions`` array so masking, RoPE and recency
+protection are uniform across policies. Everything is static-shaped and
+jit/pjit friendly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class AttnCache:
+    """Per-layer attention cache.
+
+    k: (B, KV, S_slots, Dk)  — keys; *projected and sliced* when AQUA is on.
+       Stored seq-major here; the Pallas decode kernel consumes the
+       dim-major transpose view (see kernels/aqua_decode.py).
+    v: (B, KV, S_slots, Dv)
+    positions: (B, S_slots) int32 — token position held by each slot, -1 empty.
+    count: (B,) int32 — number of tokens processed so far (= next position).
+    acc_score: (B, KV, S_slots) f32 — H2O accumulated attention mass
+       (zeros when H2O disabled; kept unconditionally for pytree stability).
+    """
+
+    k: jax.Array
+    v: jax.Array
+    positions: jax.Array
+    count: jax.Array
+    acc_score: jax.Array
+
+    @property
+    def num_slots(self) -> int:
+        return self.k.shape[2]
+
+
+def init_attn_cache(batch: int, num_kv: int, slots: int, dk: int, dv: int,
+                    dtype=jnp.bfloat16) -> AttnCache:
+    return AttnCache(
+        k=jnp.zeros((batch, num_kv, slots, dk), dtype),
+        v=jnp.zeros((batch, num_kv, slots, dv), dtype),
+        positions=jnp.full((batch, slots), -1, jnp.int32),
+        count=jnp.zeros((batch,), jnp.int32),
+        acc_score=jnp.zeros((batch, num_kv, slots), jnp.float32),
+    )
+
+
+def cache_slots(max_seq: int, window: Optional[int], h2o_budget: Optional[int]
+                ) -> int:
+    s = max_seq
+    if window is not None:
+        s = min(s, window)
+    if h2o_budget is not None:
+        s = min(s, h2o_budget)
+    return max(s, 1)
+
+
+def select_slot(cache: AttnCache, *, window: Optional[int],
+                h2o: bool, recent_len: int) -> jax.Array:
+    """Slot index (B,) where the incoming token's K/V should be written."""
+    b, _, s_slots, _ = cache.k.shape
+    count = cache.count  # (B,)
+    if window is not None and not h2o:
+        # ring buffer
+        return count % s_slots
+    if not h2o:
+        return jnp.minimum(count, s_slots - 1)
+    # H2O: free slot while not full, else evict argmin-acc among non-recent.
+    cur = count  # position of incoming token
+    protected = cache.positions > (cur[:, None] - recent_len)  # (B, S)
+    protected |= cache.positions < 0  # can't "evict" empties via score path
+    score = cache.acc_score.sum(axis=1)  # (B, S) summed over kv heads
+    score = jnp.where(protected, jnp.inf, score)
+    victim = jnp.argmin(score, axis=-1).astype(jnp.int32)
+    free = jnp.minimum(count, s_slots - 1)
+    return jnp.where(count < s_slots, free, victim)
+
+
+def insert(cache: AttnCache, slot: jax.Array, k_new: jax.Array,
+           v_new: jax.Array) -> AttnCache:
+    """Write one token's (projected/sliced) k, v into ``slot``.
+
+    k_new: (B, KV, Dk); v_new: (B, KV, Dv); slot: (B,).
+    """
+    b = jnp.arange(cache.k.shape[0])
+    k = cache.k.at[b, :, slot].set(k_new.astype(cache.k.dtype))
+    v = cache.v.at[b, :, slot].set(v_new.astype(cache.v.dtype))
+    positions = cache.positions.at[b, slot].set(cache.count)
+    acc = cache.acc_score.at[b, :, slot].set(0.0)
+    return AttnCache(k=k, v=v, positions=positions, count=cache.count + 1,
+                     acc_score=acc)
+
+
+def valid_mask(cache: AttnCache, *, window: Optional[int]) -> jax.Array:
+    """(B, S_slots) bool — slots attendable by the current token."""
+    cur = cache.count[:, None] - 1  # position of the token now attending
+    m = (cache.positions >= 0) & (cache.positions <= cur)
+    if window is not None:
+        m &= cache.positions > (cur - window)
+    return m
+
+
+def accumulate_h2o(cache: AttnCache, attn_weights: jax.Array) -> AttnCache:
+    """attn_weights: (B, KV, G, S_slots) probabilities for the current step;
+    summed over the G query heads of each kv group (H2O statistic)."""
+    acc = cache.acc_score + attn_weights.astype(jnp.float32).sum(axis=2)
+    return dataclasses.replace(cache, acc_score=acc)
+
+
+# ---------------------------------------------------------------------------
+# SSM / recurrent caches
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class SSMCache:
+    """Mamba-2 per-layer state: rolling conv window + SSD state."""
+
+    conv: jax.Array   # (B, conv_width-1, conv_channels)
+    state: jax.Array  # (B, nheads, head_dim, state_dim)
+    count: jax.Array  # (B,)
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class RGLRUCache:
+    """RecurrentGemma recurrent-block state."""
+
+    conv: jax.Array   # (B, conv_width-1, lru_width)
+    state: jax.Array  # (B, lru_width) real-gated LRU hidden state
+    count: jax.Array

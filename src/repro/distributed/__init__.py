@@ -1,0 +1,1 @@
+from repro.distributed import sharding  # noqa: F401

@@ -1,0 +1,145 @@
+"""AQUA block-sparse decode-attention Pallas TPU kernel.
+
+TPU-native realization of the paper's magnitude-pruned score computation
+(DESIGN.md §2): the projected key cache is stored **dim-major**
+(B, KV, NB_total, bd, S) — dim-blocks of ``bd`` sublanes × a long lane-dim
+sequence stripe. Per query head, only the ``NB_sel`` dim-blocks selected by
+query magnitude are DMA'd HBM→VMEM, via ``PrefetchScalarGridSpec``: the
+selected block indices are scalar-prefetched and dereferenced inside the
+K BlockSpec ``index_map``. HBM score-read traffic drops to
+``NB_sel / NB_total = k_ratio`` of baseline — the decode roofline is
+memory-bound, so this is the term the paper's technique buys down on TPU.
+
+The value product and online softmax are fused flash-decode style, so the
+(B, H, S) score matrix never materializes in HBM.
+
+Grid: (B, H, num_seq_blocks, NB_sel)  — dim-block index j innermost; the
+V block index_map is constant in j, so Pallas keeps the V tile resident
+across the j loop (single fetch per seq block).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(idx_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            s_ref, m_ref, l_ref, acc_ref, *, scale: float, seq_blk: int,
+            nb_sel: int, nsb: int):
+    b = pl.program_id(0)
+    sb = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when((sb == 0) & (j == 0))
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(j == 0)
+    def _reset_scores():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    # partial scores for this selected dim-block: (1, bd) @ (bd, S_blk)
+    q_blk = q_ref[0, 0].astype(jnp.float32)          # (1, bd)
+    k_blk = k_ref[0, 0, 0].astype(jnp.float32)       # (bd, S_blk)
+    s_ref[...] += jax.lax.dot_general(
+        q_blk, k_blk, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == nb_sel - 1)
+    def _finalize_block():
+        s = s_ref[...] * scale                        # (1, S_blk)
+        pos = sb * seq_blk + jax.lax.broadcasted_iota(jnp.int32, (1, seq_blk),
+                                                      1)
+        valid = pos < len_ref[b]
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[0, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        p = jnp.exp(s - m_new)                        # (1, S_blk)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[0, 0] = l_ref[0, 0] * corr + jnp.sum(p)
+        v_blk = v_ref[0, 0].astype(jnp.float32)       # (S_blk, Dv)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[0, 0] = m_new
+
+        @pl.when(sb == nsb - 1)
+        def _write():
+            o_ref[...] = (acc_ref[...] /
+                          jnp.maximum(l_ref[0, 0], 1e-30)
+                          ).astype(o_ref.dtype)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_dims", "seq_blk",
+                                             "interpret"))
+def aqua_decode_attention(q_sel: jax.Array, khat_blocks: jax.Array,
+                          v: jax.Array, block_idx: jax.Array,
+                          lengths: jax.Array, *, block_dims: int = 8,
+                          seq_blk: int = 128,
+                          interpret: bool = True) -> jax.Array:
+    """Block-sparse AQUA decode attention.
+
+    q_sel:       (B, H, NB_sel, bd)  — query, pre-gathered selected blocks
+    khat_blocks: (B, KV, NB_total, bd, S) — dim-major projected key cache
+    v:           (B, KV, S, Dv)
+    block_idx:   (B, H, NB_sel) int32 — selected dim-block ids (sorted)
+    lengths:     (B,) int32 — valid cache length per row
+    returns out: (B, H, Dv)
+    """
+    b, h, nb_sel, bd = q_sel.shape
+    _, kvh, nb_total, bd2, s = khat_blocks.shape
+    assert bd == bd2 == block_dims
+    dv = v.shape[-1]
+    g = h // kvh
+    assert s % seq_blk == 0, (s, seq_blk)
+    nsb = s // seq_blk
+    # scale by the FULL head-dim sqrt: the paper approximates full scores.
+    d_full = nb_total * bd
+    scale = 1.0 / (d_full ** 0.5)
+
+    grid = (b, h, nsb, nb_sel)
+
+    def q_map(bi, hi, sbi, ji, idx_ref, len_ref):
+        return (bi, hi, ji, 0)
+
+    def k_map(bi, hi, sbi, ji, idx_ref, len_ref):
+        return (bi, hi // g, idx_ref[bi, hi, ji], 0, sbi)
+
+    def v_map(bi, hi, sbi, ji, idx_ref, len_ref):
+        return (bi, hi // g, sbi, 0)
+
+    def o_map(bi, hi, sbi, ji, idx_ref, len_ref):
+        return (bi, hi, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, bd), q_map),
+            pl.BlockSpec((1, 1, 1, bd, seq_blk), k_map),
+            pl.BlockSpec((1, 1, seq_blk, dv), v_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dv), o_map),
+        scratch_shapes=[
+            pltpu.VMEM((1, seq_blk), jnp.float32),   # score accumulator
+            pltpu.VMEM((1, 1), jnp.float32),         # running max
+            pltpu.VMEM((1, 1), jnp.float32),         # running denom
+            pltpu.VMEM((1, dv), jnp.float32),        # output accumulator
+        ],
+    )
+    kernel = functools.partial(_kernel, scale=scale, seq_blk=seq_blk,
+                               nb_sel=nb_sel, nsb=nsb)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, dv), v.dtype),
+        interpret=interpret,
+    )(block_idx, lengths, q_sel, khat_blocks, v)

@@ -1,0 +1,64 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``aqua_decode`` takes model-layout tensors (seq-major cache), handles the
+dim-major restructuring, padding, query-block gathering and top-k selection,
+and dispatches to the kernel. On CPU the kernels run in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aqua as aqua_lib
+from repro.kernels.aqua_decode import aqua_decode_attention
+from repro.kernels.flash_attention import flash_attention  # noqa: F401
+
+
+def to_dim_major_blocks(khat: jax.Array, block_dims: int) -> jax.Array:
+    """(B, KV, S, D) seq-major -> (B, KV, NB, bd, S) dim-major blocks.
+
+    In production this is the *storage layout* of the projected key cache
+    (written incrementally at insert time); here it is a transpose helper
+    for tests/benchmarks entering from the model layout.
+    """
+    b, kvh, s, d = khat.shape
+    assert d % block_dims == 0, (d, block_dims)
+    nb = d // block_dims
+    kt = khat.transpose(0, 1, 3, 2)                 # (B, KV, D, S)
+    return kt.reshape(b, kvh, nb, block_dims, s)
+
+
+@functools.partial(jax.jit, static_argnames=("k_ratio", "block_dims",
+                                             "seq_blk", "interpret"))
+def aqua_decode(q_hat: jax.Array, khat: jax.Array, v: jax.Array,
+                lengths: jax.Array, *, k_ratio: float = 0.75,
+                block_dims: int = 8, seq_blk: int = 128,
+                interpret: bool = True) -> jax.Array:
+    """End-to-end AQUA decode attention (selection + kernel).
+
+    q_hat: (B, H, D) projected query; khat: (B, KV, S, D) projected key
+    cache (seq-major model layout); v: (B, KV, S, Dv); lengths: (B,).
+    """
+    b, h, d = q_hat.shape
+    s = khat.shape[2]
+    nb = d // block_dims
+    k_dims = max(block_dims, int(round(k_ratio * d)))
+    k_dims = ((k_dims + block_dims - 1) // block_dims) * block_dims
+    k_dims = min(k_dims, d)
+
+    block_idx = aqua_lib.topk_block_indices(q_hat, k_dims, block_dims)
+    # gather the selected q blocks (tiny: H × k elements)
+    qb = q_hat.reshape(b, h, nb, block_dims)
+    q_sel = jnp.take_along_axis(qb, block_idx[..., None], axis=2)
+
+    pad = (-s) % seq_blk
+    if pad:
+        khat = jnp.pad(khat, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    khat_blocks = to_dim_major_blocks(khat, block_dims)
+    return aqua_decode_attention(q_sel, khat_blocks, v, block_idx, lengths,
+                                 block_dims=block_dims, seq_blk=seq_blk,
+                                 interpret=interpret)

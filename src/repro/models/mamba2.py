@@ -1,0 +1,273 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060), chunked matmul
+form: intra-chunk attention-like blocks on the MXU + inter-chunk associative
+scan. Attention-free — AQUA is inapplicable here (DESIGN.md §4); decode uses
+O(1) state instead of a KV cache, which is why this arch runs the
+``long_500k`` cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from repro import runtime_flags as _rtf
+
+
+def _scan(*args, **kw):
+    kw.update(_rtf.scan_kwargs())
+    return jax.lax.scan(*args, **kw)
+
+
+from repro.configs.base import ModelConfig
+from repro.core.kvcache import SSMCache
+from repro.models import layers as L
+from repro.models.base import LM, DecodeState
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., l) -> (..., l, l); out[i, j] = sum a[j+1..i] for i >= j."""
+    l = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_log, b, c, d_skip, chunk: int):
+    """SSD forward (no initial state).
+
+    x:  (B, S, H, P)   dt: (B, S, H)   a_log: (H,) (negative decay)
+    b, c: (B, S, G, N) with G groups broadcast over heads.
+    Returns y: (B, S, H, P) and final state (B, H, P, N).
+    """
+    bsz, s0, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    # pad to a chunk multiple; dt=0 on padding -> decay 1, contribution 0,
+    # so states and real outputs are unaffected.
+    s = ((s0 + chunk - 1) // chunk) * chunk
+    if s != s0:
+        padw = ((0, 0), (0, s - s0), (0, 0), (0, 0))
+        x = jnp.pad(x, padw)
+        b = jnp.pad(b, padw)
+        c = jnp.pad(c, padw)
+        dt = jnp.pad(dt, ((0, 0), (0, s - s0), (0, 0)))
+    nc = s // chunk
+    rep = h // g
+    bh = jnp.repeat(b, rep, axis=2)  # (B,S,H,N)
+    ch = jnp.repeat(c, rep, axis=2)
+
+    xd = (x * dt[..., None]).reshape(bsz, nc, chunk, h, p)
+    a = (dt * a_log[None, None, :]).reshape(bsz, nc, chunk, h)  # log decay
+    bh = bh.reshape(bsz, nc, chunk, h, n)
+    ch = ch.reshape(bsz, nc, chunk, h, n)
+
+    a_t = a.transpose(0, 1, 3, 2)          # (B,C,H,L)
+    a_cum = jnp.cumsum(a_t, axis=-1)       # (B,C,H,L)
+
+    # 1. intra-chunk (diagonal blocks)
+    lmat = jnp.exp(_segsum(a_t))           # (B,C,H,L,L)
+    y_diag = jnp.einsum("bclhn,bcshn,bchls,bcshp->bclhp", ch, bh, lmat, xd)
+
+    # 2. chunk-final states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)       # (B,C,H,L)
+    states = jnp.einsum("bclhn,bchl,bclhp->bchpn", bh, decay_states, xd)
+
+    # 3. inter-chunk recurrence via associative scan
+    chunk_decay = jnp.exp(a_cum[..., -1])  # (B,C,H)
+
+    def combine(e1, e2):
+        d1, s1 = e1
+        d2, s2 = e2
+        return d1 * d2, s1 * d2[..., None, None] + s2
+    dec_all, st_all = jax.lax.associative_scan(
+        combine, (chunk_decay, states), axis=1)
+    final_state = st_all[:, -1]
+    # state entering chunk c = scanned value at c-1 (zeros for c=0)
+    h_in = jnp.concatenate(
+        [jnp.zeros_like(st_all[:, :1]), st_all[:, :-1]], axis=1)
+
+    # 4. off-diagonal contribution
+    out_decay = jnp.exp(a_cum).transpose(0, 1, 3, 2)       # (B,C,L,H)
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp", ch, h_in, out_decay)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)[:, :s0]
+    y = y + x[:, :s0] * d_skip[None, None, :, None]
+    return y, final_state
+
+
+def ssd_step(state, x_t, dt_t, a_log, b_t, c_t, d_skip):
+    """One decode step. state: (B,H,P,N); x_t: (B,H,P); dt_t: (B,H);
+    b_t, c_t: (B,G,N). Returns (y_t, new_state)."""
+    h = x_t.shape[1]
+    g = b_t.shape[1]
+    rep = h // g
+    bh = jnp.repeat(b_t, rep, axis=1)  # (B,H,N)
+    ch = jnp.repeat(c_t, rep, axis=1)
+    da = jnp.exp(dt_t * a_log[None, :])                    # (B,H)
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dt_t, x_t, bh)
+    state = state * da[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", state, ch)
+    return y + x_t * d_skip[None, :, None], state
+
+
+class Mamba2LM(LM):
+    def __init__(self, cfg: ModelConfig):
+        super().__init__(cfg)
+        s = cfg.ssm
+        self.d_inner = s.expand * cfg.d_model
+        self.nheads = self.d_inner // s.head_dim
+        self.conv_channels = self.d_inner + 2 * s.ngroups * s.state_dim
+
+    def _init_block(self, rng, dtype):
+        cfg, s = self.cfg, self.cfg.ssm
+        di, nh, cc = self.d_inner, self.nheads, self.conv_channels
+        ks = jax.random.split(rng, 4)
+        proj_out = 2 * di + 2 * s.ngroups * s.state_dim + nh
+        return {
+            "ln": jnp.ones((cfg.d_model,), dtype),
+            "in_proj": jax.random.normal(
+                ks[0], (cfg.d_model, proj_out), dtype) * cfg.d_model ** -0.5,
+            "conv_w": jax.random.normal(ks[1], (s.conv_width, cc), dtype)
+            * s.conv_width ** -0.5,
+            "conv_b": jnp.zeros((cc,), dtype),
+            "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+            "dt_bias": jnp.zeros((nh,), jnp.float32),
+            "d_skip": jnp.ones((nh,), jnp.float32),
+            "out_norm": jnp.ones((di,), dtype),
+            "out_proj": jax.random.normal(
+                ks[2], (di, cfg.d_model), dtype) * di ** -0.5,
+        }
+
+    def init(self, rng: jax.Array):
+        cfg, dt = self.cfg, self.param_dtype
+        k1, k2 = jax.random.split(rng)
+        rngs = jax.random.split(k2, cfg.num_layers)
+        return {
+            "embed": L.init_embedding(k1, cfg.vocab_size, cfg.d_model, dt),
+            "layers": jax.vmap(lambda r: self._init_block(r, dt))(rngs),
+            "ln_f": jnp.ones((cfg.d_model,), dt),
+        }
+
+    def _split(self, zxbcdt):
+        s, di, nh = self.cfg.ssm, self.d_inner, self.nheads
+        gn = s.ngroups * s.state_dim
+        z = zxbcdt[..., :di]
+        xbc = zxbcdt[..., di:di + di + 2 * gn]
+        dt = zxbcdt[..., di + di + 2 * gn:]
+        return z, xbc, dt
+
+    def _block_seq(self, p, x):
+        """Full-sequence block: x (B,S,M) -> (y, final SSMCache-contents)."""
+        cfg, s = self.cfg, self.cfg.ssm
+        di, nh = self.d_inner, self.nheads
+        h_in = L.rms_norm(x, p["ln"], cfg.norm_eps)
+        zxbcdt = h_in @ p["in_proj"].astype(x.dtype)
+        z, xbc_raw, dt_raw = self._split(zxbcdt)
+        # causal depthwise conv
+        w = p["conv_w"].astype(x.dtype)
+        pad = jnp.pad(xbc_raw, ((0, 0), (s.conv_width - 1, 0), (0, 0)))
+        conv = sum(pad[:, i:i + xbc_raw.shape[1], :] * w[i]
+                   for i in range(s.conv_width))
+        xbc = jax.nn.silu(conv + p["conv_b"].astype(x.dtype))
+        gn = s.ngroups * s.state_dim
+        xin = xbc[..., :di]
+        b = xbc[..., di:di + gn].reshape(*xbc.shape[:2], s.ngroups, s.state_dim)
+        c = xbc[..., di + gn:].reshape(*xbc.shape[:2], s.ngroups, s.state_dim)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                             + p["dt_bias"]).astype(jnp.float32)
+        a_log = -jnp.exp(p["a_log"])
+        xh = xin.reshape(*xin.shape[:2], nh, s.head_dim)
+        y, final_state = ssd_chunked(
+            xh.astype(jnp.float32), dt, a_log, b.astype(jnp.float32),
+            c.astype(jnp.float32), p["d_skip"], s.chunk_size)
+        y = y.reshape(*y.shape[:2], di).astype(x.dtype)
+        y = L.rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+        out = y @ p["out_proj"].astype(x.dtype)
+        # decode conv cache holds the last (w-1) *raw* (pre-conv) xbc inputs
+        raw_tail = pad[:, -(s.conv_width - 1):]
+        return x + out, (raw_tail, final_state)
+
+    def _block_step(self, p, x_t, cache: SSMCache):
+        cfg, s = self.cfg, self.cfg.ssm
+        di, nh = self.d_inner, self.nheads
+        h_in = L.rms_norm(x_t, p["ln"], cfg.norm_eps)
+        zxbcdt = h_in @ p["in_proj"].astype(x_t.dtype)
+        z, xbc_t, dt_raw = self._split(zxbcdt)
+        window = jnp.concatenate([cache.conv, xbc_t[:, None, :]], axis=1)
+        w = p["conv_w"].astype(x_t.dtype)
+        conv = jnp.einsum("bwc,wc->bc", window, w)
+        xbc = jax.nn.silu(conv + p["conv_b"].astype(x_t.dtype))
+        gn = s.ngroups * s.state_dim
+        xin = xbc[..., :di]
+        b = xbc[..., di:di + gn].reshape(-1, s.ngroups, s.state_dim)
+        c = xbc[..., di + gn:].reshape(-1, s.ngroups, s.state_dim)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+        a_log = -jnp.exp(p["a_log"])
+        xh = xin.reshape(-1, nh, s.head_dim)
+        y, state = ssd_step(cache.state, xh.astype(jnp.float32), dt, a_log,
+                            b.astype(jnp.float32), c.astype(jnp.float32),
+                            p["d_skip"])
+        y = y.reshape(-1, di).astype(x_t.dtype)
+        y = L.rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+        out = y @ p["out_proj"].astype(x_t.dtype)
+        new_cache = SSMCache(conv=window[:, 1:], state=state,
+                             count=cache.count + 1)
+        return x_t + out, new_cache
+
+    def forward(self, params, batch, aqua_proj=None, capture: bool = False):
+        cfg = self.cfg
+        x = L.embed(params["embed"], batch["tokens"], self.dtype)
+
+        from repro.distributed.sharding import constrain_seq
+
+        def body(xc, p_i):
+            y, _ = self._block_seq(p_i, xc)
+            return constrain_seq(y), None
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = _scan(body_fn, x, params["layers"])
+        logits = L.unembed(params["embed"],
+                           L.rms_norm(x, params["ln_f"], cfg.norm_eps))
+        return logits
+
+    def init_decode_state(self, batch_size: int, max_seq: int) -> DecodeState:
+        cfg, s = self.cfg, self.cfg.ssm
+        one = SSMCache(
+            conv=jnp.zeros((batch_size, s.conv_width - 1, self.conv_channels),
+                           self.dtype),
+            state=jnp.zeros((batch_size, self.nheads, s.head_dim,
+                             s.state_dim), jnp.float32),
+            count=jnp.zeros((batch_size,), jnp.int32))
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape), one)
+        return DecodeState(layers=stacked, extra={})
+
+    def prefill(self, params, batch, max_seq: int, aqua_proj=None):
+        cfg, s = self.cfg, self.cfg.ssm
+        x = L.embed(params["embed"], batch["tokens"], self.dtype)
+        bsz = x.shape[0]
+
+        def body(xc, p_i):
+            y, (conv_tail, state) = self._block_seq(p_i, xc)
+            cache = SSMCache(conv=conv_tail.astype(self.dtype),
+                             state=state,
+                             count=jnp.full((bsz,), xc.shape[1], jnp.int32))
+            return y, cache
+        x, caches = _scan(body, x, params["layers"])
+        logits = L.unembed(params["embed"],
+                           L.rms_norm(x[:, -1:], params["ln_f"],
+                                      cfg.norm_eps))[:, 0]
+        return logits, DecodeState(layers=caches, extra={})
+
+    def decode_step(self, params, state: DecodeState, tokens, aqua_proj=None):
+        cfg = self.cfg
+        x = L.embed(params["embed"], tokens, self.dtype)
+
+        def body(xc, layer_in):
+            p_i, cache_i = layer_in
+            y, cache_i = self._block_step(p_i, xc, cache_i)
+            return y, cache_i
+        x, caches = _scan(body, x, (params["layers"], state.layers))
+        logits = L.unembed(params["embed"],
+                           L.rms_norm(x, params["ln_f"], cfg.norm_eps))
+        return logits, DecodeState(layers=caches, extra=state.extra)

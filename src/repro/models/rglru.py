@@ -1,0 +1,258 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local sliding
+attention, pattern (recurrent, recurrent, attention) (arXiv:2402.19427).
+
+The recurrent path is a real-gated linear recurrence computed with an
+associative scan (log-depth, matmul-free); the attention layers use the
+shared attention core (so AQUA applies to them — DESIGN.md §4). Bounded
+window + O(1) recurrent state make this arch run ``long_500k``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import attention as attn
+from repro.core import kvcache as kv
+from repro.core.kvcache import RGLRUCache
+from repro.models import layers as L
+from repro.models.base import LM, DecodeState
+from repro.models.transformer import block_forward, block_step, init_block
+
+_C = 8.0  # RG-LRU exponent constant (Griffin §2.4)
+
+
+def rglru_scan(x: jax.Array, r: jax.Array, i_gate: jax.Array,
+               lam: jax.Array, h0: Optional[jax.Array] = None
+               ) -> Tuple[jax.Array, jax.Array]:
+    """x, r, i_gate: (B, S, W); lam: (W,). h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t x_t).
+
+    Returns (hidden sequence (B,S,W), final hidden (B,W))."""
+    log_a = -_C * jax.nn.softplus(lam)[None, None, :] * r  # (B,S,W) <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i_gate * x)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+    a_s, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    if h0 is not None:
+        h = h + a_s * h0[:, None, :]
+    return h, h[:, -1, :]
+
+
+def rglru_step(x_t, r_t, i_t, lam, h_prev):
+    log_a = -_C * jax.nn.softplus(lam)[None, :] * r_t
+    a = jnp.exp(log_a)
+    h = a * h_prev + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i_t * x_t)
+    return h, h
+
+
+def init_recurrent_block(rng, cfg: ModelConfig, dtype) -> dict:
+    w = cfg.rglru.lru_width or cfg.d_model
+    ks = jax.random.split(rng, 7)
+    std = cfg.d_model ** -0.5
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "wx": jax.random.normal(ks[0], (cfg.d_model, w), dtype) * std,
+        "wgate": jax.random.normal(ks[1], (cfg.d_model, w), dtype) * std,
+        "conv_w": jax.random.normal(ks[2], (cfg.rglru.conv_width, w), dtype)
+        * cfg.rglru.conv_width ** -0.5,
+        "conv_b": jnp.zeros((w,), dtype),
+        "wr": jax.random.normal(ks[3], (w, w), jnp.float32) * w ** -0.5,
+        "wi": jax.random.normal(ks[4], (w, w), jnp.float32) * w ** -0.5,
+        "lam": jnp.full((w,), 1.0, jnp.float32),
+        "wout": jax.random.normal(ks[5], (w, cfg.d_model), dtype) * w ** -0.5,
+        "ffn": L.init_mlp(ks[6], cfg.d_model, cfg.d_ff,
+                          gated=(cfg.act == "silu"), dtype=dtype),
+    }
+
+
+def _conv1d_causal(x, w, b):
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    return sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(width)) + b
+
+
+def recurrent_block_forward(cfg: ModelConfig, p: dict, x: jax.Array,
+                            h0: Optional[jax.Array] = None):
+    """Returns (y, (conv_tail, final_hidden))."""
+    h_in = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    gate = jax.nn.gelu(h_in @ p["wgate"].astype(x.dtype))
+    u_raw = h_in @ p["wx"].astype(x.dtype)
+    u = _conv1d_causal(u_raw, p["conv_w"].astype(x.dtype),
+                       p["conv_b"].astype(x.dtype))
+    # gate matmuls in activation dtype: on a TP-sharded W×W gate the
+    # (B,S,W) product is all-reduced across the model axis — bf16 halves
+    # that collective + HBM traffic (§Perf iteration, recurrentgemma);
+    # sigmoid/scan run in f32 for stability.
+    from repro.distributed.sharding import constrain_lru_gate
+    r = jax.nn.sigmoid(constrain_lru_gate(
+        u @ p["wr"].astype(u.dtype)).astype(jnp.float32))
+    i_g = jax.nn.sigmoid(constrain_lru_gate(
+        u @ p["wi"].astype(u.dtype)).astype(jnp.float32))
+    u32 = u.astype(jnp.float32)
+    h, h_last = rglru_scan(u32, r, i_g, p["lam"], h0)
+    y = (h.astype(x.dtype) * gate) @ p["wout"].astype(x.dtype)
+    x = x + y
+    f = L.mlp(p["ffn"], L.rms_norm(x, p["ln2"], cfg.norm_eps), cfg.act)
+    width = cfg.rglru.conv_width
+    conv_tail = jnp.pad(u_raw, ((0, 0), (width - 1, 0), (0, 0))
+                        )[:, -(width - 1):]
+    return x + f, (conv_tail, h_last)
+
+
+def recurrent_block_step(cfg: ModelConfig, p: dict, x_t: jax.Array,
+                         cache: RGLRUCache):
+    h_in = L.rms_norm(x_t, p["ln1"], cfg.norm_eps)
+    gate = jax.nn.gelu(h_in @ p["wgate"].astype(x_t.dtype))
+    u_raw = h_in @ p["wx"].astype(x_t.dtype)
+    window = jnp.concatenate([cache.conv, u_raw[:, None, :]], axis=1)
+    u = jnp.einsum("bwc,wc->bc", window, p["conv_w"].astype(x_t.dtype)) \
+        + p["conv_b"].astype(x_t.dtype)
+    r = jax.nn.sigmoid((u @ p["wr"].astype(u.dtype)).astype(jnp.float32))
+    i_g = jax.nn.sigmoid((u @ p["wi"].astype(u.dtype)).astype(jnp.float32))
+    u32 = u.astype(jnp.float32)
+    h, _ = rglru_step(u32, r, i_g, p["lam"], cache.state)
+    y = (h.astype(x_t.dtype) * gate) @ p["wout"].astype(x_t.dtype)
+    x = x_t + y
+    f = L.mlp(p["ffn"], L.rms_norm(x, p["ln2"], cfg.norm_eps), cfg.act)
+    new_cache = RGLRUCache(conv=window[:, 1:], state=h,
+                           count=cache.count + 1)
+    return x + f, new_cache
+
+
+class HybridLM(LM):
+    """recurrentgemma-9b family. Layers follow cfg.rglru.block_pattern
+    cyclically; unrolled python loop (heterogeneous layer types)."""
+
+    def __init__(self, cfg: ModelConfig):
+        super().__init__(cfg)
+        pat = cfg.rglru.block_pattern
+        self.kinds = tuple(pat[i % len(pat)] for i in range(cfg.num_layers))
+
+    def init(self, rng: jax.Array):
+        cfg, dt = self.cfg, self.param_dtype
+        k_emb, k_layers = jax.random.split(rng)
+        rngs = jax.random.split(k_layers, cfg.num_layers)
+        layers = []
+        for i, kind in enumerate(self.kinds):
+            if kind == "recurrent":
+                layers.append(init_recurrent_block(rngs[i], cfg, dt))
+            else:
+                layers.append(init_block(rngs[i], cfg, dt))
+        return {
+            "embed": L.init_embedding(k_emb, cfg.vocab_size, cfg.d_model, dt),
+            "layers": layers,
+            "ln_f": jnp.ones((cfg.d_model,), dt),
+        }
+
+    def forward(self, params, batch, aqua_proj=None, capture: bool = False):
+        cfg = self.cfg
+        x = L.embed(params["embed"], batch["tokens"], self.dtype)
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+        from repro.distributed.sharding import constrain_seq
+        qk = []
+        attn_idx = 0
+        for i, kind in enumerate(self.kinds):
+            p_i = params["layers"][i]
+            if kind == "recurrent":
+                fwd = (jax.checkpoint(recurrent_block_forward,
+                                      static_argnums=(0,))
+                       if cfg.remat and not capture else recurrent_block_forward)
+                x, _ = fwd(cfg, p_i, x)
+            else:
+                proj = None if aqua_proj is None else aqua_proj[attn_idx]
+                if capture:
+                    x, _, aux = block_forward(cfg, p_i, x, positions, proj,
+                                              capture=True)
+                    qk.append((aux["q"], aux["k"]))
+                else:
+                    fwd = (jax.checkpoint(block_forward, static_argnums=(0,))
+                           if cfg.remat else block_forward)
+                    x, _, _ = fwd(cfg, p_i, x, positions, proj)
+                attn_idx += 1
+            x = constrain_seq(x)
+        logits = L.unembed(params["embed"],
+                           L.rms_norm(x, params["ln_f"], cfg.norm_eps))
+        if capture:
+            return logits, {"qk": qk}
+        return logits
+
+    @property
+    def num_attn_layers(self) -> int:
+        return sum(1 for k in self.kinds if k == "attention")
+
+    def init_decode_state(self, batch_size: int, max_seq: int) -> DecodeState:
+        cfg, acfg = self.cfg, self.cfg.attention
+        aqua = cfg.aqua
+        dk = acfg.head_dim
+        if aqua is not None and aqua.enabled:
+            dk = aqua.kept_dims(acfg.head_dim)
+        from repro.core.h2o import h2o_budget
+        slots = kv.cache_slots(max_seq, acfg.window, h2o_budget(aqua, max_seq))
+        w = cfg.rglru.lru_width or cfg.d_model
+        layers = []
+        for kind in self.kinds:
+            if kind == "recurrent":
+                layers.append(RGLRUCache(
+                    conv=jnp.zeros((batch_size, cfg.rglru.conv_width - 1, w),
+                                   self.dtype),
+                    state=jnp.zeros((batch_size, w), jnp.float32),
+                    count=jnp.zeros((batch_size,), jnp.int32)))
+            else:
+                layers.append(kv.init_attn_cache(
+                    batch_size, acfg.num_kv_heads, slots, dk, acfg.head_dim,
+                    self.dtype))
+        return DecodeState(layers=tuple(layers), extra={})
+
+    def prefill(self, params, batch, max_seq: int, aqua_proj=None):
+        cfg = self.cfg
+        x = L.embed(params["embed"], batch["tokens"], self.dtype)
+        bsz, s = x.shape[0], x.shape[1]
+        positions = jnp.arange(s, dtype=jnp.int32)
+        caches = []
+        attn_idx = 0
+        for i, kind in enumerate(self.kinds):
+            p_i = params["layers"][i]
+            if kind == "recurrent":
+                y, (conv_tail, h_last) = recurrent_block_forward(cfg, p_i, x)
+                caches.append(RGLRUCache(
+                    conv=conv_tail.astype(self.dtype), state=h_last,
+                    count=jnp.full((bsz,), s, jnp.int32)))
+                x = y
+            else:
+                proj = None if aqua_proj is None else aqua_proj[attn_idx]
+                caches.append(attn.build_cache_from_prefill(
+                    p_i["attn"], L.rms_norm(x, p_i["ln1"], cfg.norm_eps),
+                    cfg.attention, cfg.aqua, proj, max_seq))
+                x, _, _ = block_forward(cfg, p_i, x, positions, proj)
+                attn_idx += 1
+        logits = L.unembed(params["embed"],
+                           L.rms_norm(x[:, -1:], params["ln_f"],
+                                      cfg.norm_eps))[:, 0]
+        return logits, DecodeState(layers=tuple(caches), extra={})
+
+    def decode_step(self, params, state: DecodeState, tokens, aqua_proj=None):
+        cfg = self.cfg
+        x = L.embed(params["embed"], tokens, self.dtype)
+        caches = []
+        attn_idx = 0
+        for i, kind in enumerate(self.kinds):
+            p_i = params["layers"][i]
+            cache_i = state.layers[i]
+            if kind == "recurrent":
+                x, cache_i = recurrent_block_step(cfg, p_i, x, cache_i)
+            else:
+                proj = None if aqua_proj is None else aqua_proj[attn_idx]
+                x, cache_i = block_step(cfg, p_i, x, cache_i, proj)
+                attn_idx += 1
+            caches.append(cache_i)
+        logits = L.unembed(params["embed"],
+                           L.rms_norm(x, params["ln_f"], cfg.norm_eps))
+        return logits, DecodeState(layers=tuple(caches), extra=state.extra)

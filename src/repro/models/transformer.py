@@ -1,0 +1,446 @@
+"""Dense / VLM transformer LMs and the whisper-style encoder-decoder.
+
+Layers are *stacked* (leading L axis) and iterated with ``jax.lax.scan`` so
+HLO size and compile time stay flat in depth — essential for the 512-device
+dry-run. The calibration/capture path uses an unrolled loop instead (small
+models only).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from repro import runtime_flags as _rtf
+
+
+def _scan(*args, **kw):
+    kw.update(_rtf.scan_kwargs())
+    return jax.lax.scan(*args, **kw)
+
+
+from repro.configs.base import ModelConfig
+from repro.core import attention as attn
+from repro.core import kvcache as kv
+from repro.models import layers as L
+from repro.models.base import LM, DecodeState
+
+
+# ---------------------------------------------------------------------------
+# One transformer block (attention + FFN), stacked-params form.
+# ---------------------------------------------------------------------------
+
+
+def init_block(rng, cfg: ModelConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(rng)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn.init_attention_params(k1, cfg.d_model, cfg.attention,
+                                           dtype),
+    }
+    if cfg.family == "moe":
+        from repro.models.moe import init_moe_ffn
+        p["ffn"] = init_moe_ffn(k2, cfg, dtype)
+    else:
+        p["ffn"] = L.init_mlp(k2, cfg.d_model, cfg.d_ff,
+                              gated=(cfg.act == "silu"), dtype=dtype)
+    return p
+
+
+def ffn_apply(cfg: ModelConfig, p: dict, x: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    if cfg.family == "moe":
+        from repro.models.moe import moe_ffn
+        return moe_ffn(cfg, p, x)
+    return L.mlp(p, x, cfg.act), jnp.zeros((), jnp.float32)
+
+
+def block_forward(cfg: ModelConfig, p: dict, x: jax.Array,
+                  positions: jax.Array, proj: Optional[jax.Array],
+                  capture: bool = False):
+    aqua = cfg.aqua
+    h_in = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if capture:
+        h, aux = attn.prefill_attention(p["attn"], h_in, cfg.attention, aqua,
+                                        proj, positions, return_aux=True)
+    else:
+        h = attn.prefill_attention(p["attn"], h_in, cfg.attention, aqua,
+                                   proj, positions)
+        aux = None
+    x = x + h
+    f, aux_loss = ffn_apply(cfg, p["ffn"], L.rms_norm(x, p["ln2"], cfg.norm_eps))
+    return x + f, aux_loss, aux
+
+
+def block_step(cfg: ModelConfig, p: dict, x_t: jax.Array, cache: kv.AttnCache,
+               proj: Optional[jax.Array]):
+    h, cache = attn.decode_attention(
+        p["attn"], L.rms_norm(x_t, p["ln1"], cfg.norm_eps), cache,
+        cfg.attention, cfg.aqua, proj)
+    x = x_t + h
+    f, _ = ffn_apply(cfg, p["ffn"],
+                     L.rms_norm(x, p["ln2"], cfg.norm_eps)[:, None, :])
+    return x + f[:, 0], cache
+
+
+# ---------------------------------------------------------------------------
+# DenseLM — dense & vlm families
+# ---------------------------------------------------------------------------
+
+
+class DenseLM(LM):
+    """Decoder-only transformer (GQA/SWA/qk-norm/bias variants) with
+    first-class AQUA. ``vlm`` family splices stub patch embeddings."""
+
+    def init(self, rng: jax.Array):
+        cfg, dt = self.cfg, self.param_dtype
+        k_emb, k_layers, k_fe = jax.random.split(rng, 3)
+        layer_rngs = jax.random.split(k_layers, cfg.num_layers)
+        params = {
+            "embed": L.init_embedding(k_emb, cfg.vocab_size, cfg.d_model, dt),
+            "layers": jax.vmap(lambda r: init_block(r, cfg, dt))(layer_rngs),
+            "ln_f": jnp.ones((cfg.d_model,), dt),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = {"table": jax.random.normal(
+                jax.random.fold_in(k_emb, 1), (cfg.vocab_size, cfg.d_model),
+                dt) * cfg.d_model ** -0.5}
+        if cfg.frontend.kind == "vision_patches":
+            params["patch_proj"] = L.init_linear(
+                k_fe, cfg.frontend.embed_dim, cfg.d_model, dt)
+        return params
+
+    # -- embedding helpers -------------------------------------------
+    def _embed(self, params, batch):
+        x = L.embed(params["embed"], batch["tokens"], self.dtype)
+        if self.cfg.frontend.kind == "vision_patches" and "patches" in batch:
+            pe = L.linear(params["patch_proj"],
+                          batch["patches"].astype(self.dtype))
+            n = pe.shape[1]
+            x = x.at[:, :n, :].set(pe)
+        return x
+
+    def _unembed(self, params, x):
+        table = params["embed" if self.cfg.tie_embeddings else "unembed"]
+        return L.unembed(table, x)
+
+    # -- full-sequence forward ----------------------------------------
+    def forward(self, params, batch, aqua_proj: Optional[jax.Array] = None,
+                capture: bool = False):
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        s = x.shape[1]
+        positions = jnp.arange(s, dtype=jnp.int32)
+        if capture:
+            qk, aux_losses = [], 0.0
+            for i in range(cfg.num_layers):
+                p_i = jax.tree.map(lambda a: a[i], params["layers"])
+                proj = None if aqua_proj is None else aqua_proj[i]
+                x, al, aux = block_forward(cfg, p_i, x, positions, proj,
+                                           capture=True)
+                qk.append((aux["q"], aux["k"]))
+                aux_losses += al
+            logits = self._unembed(params, L.rms_norm(x, params["ln_f"],
+                                                      cfg.norm_eps))
+            return logits, {"qk": qk, "aux_loss": aux_losses}
+
+        from repro.distributed.sharding import constrain_seq
+
+        def body(carry, layer_in):
+            xc = carry
+            p_i, proj_i = layer_in
+            y, al, _ = block_forward(cfg, p_i, xc, positions, proj_i)
+            return constrain_seq(y), al
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        proj_stack = (aqua_proj if aqua_proj is not None
+                      else jnp.zeros((cfg.num_layers, 0), self.dtype))
+        proj_arg = aqua_proj  # None or (L, KV, D, D)
+        if proj_arg is None:
+            x, aux_losses = _scan(
+                lambda c, p_i: body_fn(c, (p_i, None)), x, params["layers"])
+        else:
+            x, aux_losses = _scan(body_fn, x,
+                                         (params["layers"], proj_arg))
+        logits = self._unembed(params, L.rms_norm(x, params["ln_f"],
+                                                  cfg.norm_eps))
+        if cfg.family == "moe":
+            return logits, {"aux_loss": aux_losses.sum()
+                            * cfg.moe.router_aux_weight}
+        return logits
+
+    # -- serving --------------------------------------------------------
+    def _cache_shape(self, max_seq: int):
+        cfg, acfg, aqua = self.cfg, self.cfg.attention, self.cfg.aqua
+        dk = acfg.head_dim
+        if aqua is not None and aqua.enabled:
+            dk = aqua.kept_dims(acfg.head_dim)
+        from repro.core.h2o import h2o_budget
+        slots = kv.cache_slots(max_seq, acfg.window, h2o_budget(aqua, max_seq))
+        return slots, dk, acfg.head_dim
+
+    def init_decode_state(self, batch_size: int, max_seq: int) -> DecodeState:
+        cfg, acfg = self.cfg, self.cfg.attention
+        slots, dk, dv = self._cache_shape(max_seq)
+        one = lambda: kv.init_attn_cache(batch_size, acfg.num_kv_heads, slots,
+                                         dk, dv, self.dtype)
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape), one())
+        return DecodeState(layers=stacked, extra={})
+
+    def prefill(self, params, batch, max_seq: int,
+                aqua_proj: Optional[jax.Array] = None):
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+        def body(xc, layer_in):
+            p_i, proj_i = layer_in
+            y, _, _ = block_forward(cfg, p_i, xc, positions, proj_i)
+            cache = attn.build_cache_from_prefill(
+                p_i["attn"], L.rms_norm(xc, p_i["ln1"], cfg.norm_eps),
+                cfg.attention, cfg.aqua, proj_i, max_seq)
+            return y, cache
+        if aqua_proj is None:
+            x, caches = _scan(lambda c, p_i: body(c, (p_i, None)),
+                                     x, params["layers"])
+        else:
+            x, caches = _scan(body, x, (params["layers"], aqua_proj))
+        logits = self._unembed(params, L.rms_norm(x[:, -1:], params["ln_f"],
+                                                  cfg.norm_eps))[:, 0]
+        return logits, DecodeState(layers=caches, extra={})
+
+    def decode_step(self, params, state: DecodeState, tokens: jax.Array,
+                    aqua_proj: Optional[jax.Array] = None):
+        cfg = self.cfg
+        x = L.embed(params["embed"], tokens, self.dtype)  # (B, d)
+
+        def body(xc, layer_in):
+            p_i, cache_i, proj_i = layer_in
+            y, cache_i = block_step(cfg, p_i, xc, cache_i, proj_i)
+            return y, cache_i
+        if aqua_proj is None:
+            x, caches = _scan(
+                lambda c, pi: body(c, (pi[0], pi[1], None)),
+                x, (params["layers"], state.layers))
+        else:
+            x, caches = _scan(body, x, (params["layers"], state.layers,
+                                               aqua_proj))
+        logits = self._unembed(params, L.rms_norm(x, params["ln_f"],
+                                                  cfg.norm_eps))
+        return logits, DecodeState(layers=caches, extra=state.extra)
+
+
+# ---------------------------------------------------------------------------
+# Whisper-style encoder-decoder
+# ---------------------------------------------------------------------------
+
+
+def init_decoder_block(rng, cfg: ModelConfig, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln_x": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn.init_attention_params(k1, cfg.d_model, cfg.attention,
+                                           dtype),
+        "xattn": attn.init_attention_params(k2, cfg.d_model, cfg.attention,
+                                            dtype),
+        "ffn": L.init_mlp(k3, cfg.d_model, cfg.d_ff, gated=False, dtype=dtype),
+    }
+
+
+class EncDecLM(LM):
+    """Whisper-tiny family: bidirectional encoder over stub frame embeddings,
+    causal decoder with cross-attention. AQUA applies to decoder self-attn."""
+
+    def __init__(self, cfg: ModelConfig):
+        super().__init__(cfg)
+        self.enc_attn = dataclasses.replace(cfg.attention, causal=False,
+                                            use_rope=False)
+
+    def init(self, rng: jax.Array):
+        cfg, dt = self.cfg, self.param_dtype
+        ks = jax.random.split(rng, 4)
+        enc_rngs = jax.random.split(ks[0], cfg.num_encoder_layers)
+        dec_rngs = jax.random.split(ks[1], cfg.num_layers)
+        enc_cfg = dataclasses.replace(cfg, attention=self.enc_attn,
+                                      family="dense", act="gelu")
+        return {
+            "embed": L.init_embedding(ks[2], cfg.vocab_size, cfg.d_model, dt),
+            "pos": jax.random.normal(ks[3], (cfg.max_positions, cfg.d_model),
+                                     dt) * 0.01,
+            "enc_layers": jax.vmap(lambda r: init_block(r, enc_cfg, dt))(
+                enc_rngs),
+            "enc_ln": jnp.ones((cfg.d_model,), dt),
+            "dec_layers": jax.vmap(lambda r: init_decoder_block(r, cfg, dt))(
+                dec_rngs),
+            "ln_f": jnp.ones((cfg.d_model,), dt),
+        }
+
+    def encode(self, params, frames: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        x = frames.astype(self.dtype)
+        x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model
+                                       ).astype(self.dtype)
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+        enc_cfg = dataclasses.replace(cfg, attention=self.enc_attn,
+                                      family="dense", act="gelu", aqua=None)
+
+        def body(xc, p_i):
+            y, _, _ = block_forward(enc_cfg, p_i, xc, positions, None)
+            return y, None
+        x, _ = _scan(body, x, params["enc_layers"])
+        return L.rms_norm(x, params["enc_ln"], cfg.norm_eps)
+
+    def _dec_block_fwd(self, p, x, enc_out, positions, proj, capture=False):
+        cfg = self.cfg
+        aqua = cfg.aqua
+        h = attn.prefill_attention(p["attn"],
+                                   L.rms_norm(x, p["ln1"], cfg.norm_eps),
+                                   cfg.attention, aqua, proj, positions,
+                                   return_aux=capture)
+        aux = None
+        if capture:
+            h, aux = h
+        x = x + h
+        cx = attn.prefill_attention(p["xattn"],
+                                    L.rms_norm(x, p["ln_x"], cfg.norm_eps),
+                                    cfg.attention, None, None, positions,
+                                    kv_x=enc_out)
+        x = x + cx
+        f = L.mlp(p["ffn"], L.rms_norm(x, p["ln2"], cfg.norm_eps), cfg.act)
+        return x + f, aux
+
+    def forward(self, params, batch, aqua_proj: Optional[jax.Array] = None,
+                capture: bool = False):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        s = tokens.shape[1]
+        x = L.embed(params["embed"], tokens, self.dtype)
+        x = x + params["pos"][:s].astype(self.dtype)
+        positions = jnp.arange(s, dtype=jnp.int32)
+        if capture:
+            qk = []
+            for i in range(cfg.num_layers):
+                p_i = jax.tree.map(lambda a: a[i], params["dec_layers"])
+                proj = None if aqua_proj is None else aqua_proj[i]
+                x, aux = self._dec_block_fwd(p_i, x, enc_out, positions, proj,
+                                             capture=True)
+                qk.append((aux["q"], aux["k"]))
+            logits = L.unembed(params["embed"],
+                               L.rms_norm(x, params["ln_f"], cfg.norm_eps))
+            return logits, {"qk": qk}
+
+        from repro.distributed.sharding import constrain_seq
+
+        def body(xc, layer_in):
+            p_i, proj_i = layer_in
+            y, _ = self._dec_block_fwd(p_i, xc, enc_out, positions, proj_i)
+            return constrain_seq(y), None
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        if aqua_proj is None:
+            x, _ = _scan(lambda c, p_i: body_fn(c, (p_i, None)),
+                                x, params["dec_layers"])
+        else:
+            x, _ = _scan(body_fn, x, (params["dec_layers"], aqua_proj))
+        return L.unembed(params["embed"],
+                         L.rms_norm(x, params["ln_f"], cfg.norm_eps))
+
+    # -- serving -------------------------------------------------------
+    def init_decode_state(self, batch_size: int, max_seq: int) -> DecodeState:
+        cfg, acfg = self.cfg, self.cfg.attention
+        aqua = cfg.aqua
+        dk = acfg.head_dim
+        if aqua is not None and aqua.enabled:
+            dk = aqua.kept_dims(acfg.head_dim)
+        from repro.core.h2o import h2o_budget
+        slots = kv.cache_slots(max_seq, acfg.window, h2o_budget(aqua, max_seq))
+        one = kv.init_attn_cache(batch_size, acfg.num_kv_heads, slots, dk,
+                                 acfg.head_dim, self.dtype)
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape), one)
+        n_frames = cfg.frontend.num_embeds
+        cross = (jnp.zeros((cfg.num_layers, batch_size, n_frames,
+                            acfg.num_kv_heads, acfg.head_dim), self.dtype),
+                 jnp.zeros((cfg.num_layers, batch_size, n_frames,
+                            acfg.num_kv_heads, acfg.head_dim), self.dtype))
+        return DecodeState(layers=stacked, extra={"cross": cross})
+
+    def precompute_cross(self, params, enc_out: jax.Array):
+        """Per-decoder-layer K/V over encoder output (computed once)."""
+        def one(p_x):
+            k = jnp.einsum("bsm,mkd->bskd", enc_out,
+                           p_x["wk"].astype(enc_out.dtype))
+            v = jnp.einsum("bsm,mkd->bskd", enc_out,
+                           p_x["wv"].astype(enc_out.dtype))
+            if self.cfg.attention.qkv_bias:
+                k = k + p_x["bk"].astype(k.dtype)
+                v = v + p_x["bv"].astype(v.dtype)
+            return k, v
+        return jax.vmap(one)(params["dec_layers"]["xattn"])
+
+    def prefill(self, params, batch, max_seq: int,
+                aqua_proj: Optional[jax.Array] = None):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        cross = self.precompute_cross(params, enc_out)
+        tokens = batch["tokens"]
+        s = tokens.shape[1]
+        x = L.embed(params["embed"], tokens, self.dtype)
+        x = x + params["pos"][:s].astype(self.dtype)
+        positions = jnp.arange(s, dtype=jnp.int32)
+
+        def body(xc, layer_in):
+            p_i, proj_i = layer_in
+            y, _ = self._dec_block_fwd(p_i, xc, enc_out, positions, proj_i)
+            cache = attn.build_cache_from_prefill(
+                p_i["attn"], L.rms_norm(xc, p_i["ln1"], cfg.norm_eps),
+                cfg.attention, cfg.aqua, proj_i, max_seq)
+            return y, cache
+        if aqua_proj is None:
+            x, caches = _scan(lambda c, p_i: body(c, (p_i, None)),
+                                     x, params["dec_layers"])
+        else:
+            x, caches = _scan(body, x,
+                                     (params["dec_layers"], aqua_proj))
+        logits = L.unembed(params["embed"],
+                           L.rms_norm(x[:, -1:], params["ln_f"],
+                                      cfg.norm_eps))[:, 0]
+        return logits, DecodeState(layers=caches, extra={"cross": cross})
+
+    def decode_step(self, params, state: DecodeState, tokens: jax.Array,
+                    aqua_proj: Optional[jax.Array] = None):
+        cfg = self.cfg
+        pos = state.layers.count[0]  # (B,) shared across layers
+        x = L.embed(params["embed"], tokens, self.dtype)
+        x = x + params["pos"].astype(self.dtype)[
+            jnp.clip(pos, 0, cfg.max_positions - 1)]
+        cross_k, cross_v = state.extra["cross"]
+
+        def body(xc, layer_in):
+            p_i, cache_i, ck, cv, proj_i = layer_in
+            h, cache_i = attn.decode_attention(
+                p_i["attn"], L.rms_norm(xc, p_i["ln1"], cfg.norm_eps),
+                cache_i, cfg.attention, cfg.aqua, proj_i)
+            y = xc + h
+            cx, _ = attn.decode_attention(
+                p_i["xattn"], L.rms_norm(y, p_i["ln_x"], cfg.norm_eps),
+                cache_i, cfg.attention, None, None, cross=(ck, cv))
+            y = y + cx
+            f = L.mlp(p_i["ffn"], L.rms_norm(y, p_i["ln2"], cfg.norm_eps),
+                      cfg.act)
+            return y + f, cache_i
+        if aqua_proj is None:
+            x, caches = _scan(
+                lambda c, pi: body(c, (pi[0], pi[1], pi[2], pi[3], None)),
+                x, (params["dec_layers"], state.layers, cross_k, cross_v))
+        else:
+            x, caches = _scan(
+                body, x, (params["dec_layers"], state.layers, cross_k,
+                          cross_v, aqua_proj))
+        logits = L.unembed(params["embed"],
+                           L.rms_norm(x, params["ln_f"], cfg.norm_eps))
+        return logits, DecodeState(layers=caches, extra=state.extra)

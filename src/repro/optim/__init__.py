@@ -1,0 +1,1 @@
+from repro.optim import adamw, compress, schedule  # noqa: F401

@@ -1,0 +1,15 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def cosine_with_warmup(step, cfg: TrainConfig):
+    step = jnp.asarray(step, jnp.float32)
+    warm = cfg.learning_rate * jnp.minimum(1.0, step / max(cfg.warmup_steps, 1))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.learning_rate * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)

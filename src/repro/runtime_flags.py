@@ -1,0 +1,29 @@
+"""Process-wide analysis flags.
+
+``UNROLL_SCANS``: XLA's HloCostAnalysis counts a while-loop body ONCE, not
+×trip-count (verified empirically — see EXPERIMENTS.md §Roofline/method).
+Production lowering uses lax.scan for flat HLO and fast compiles; the
+roofline dry-run sets this flag so every scan (layer stack, microbatch
+accumulation, chunked-attention blocks) lowers fully unrolled and
+cost_analysis reports true FLOPs/bytes. Compile is slower; numbers are
+honest. The multi-pod feasibility sweep keeps scans rolled.
+"""
+
+UNROLL_SCANS = False
+
+# Analysis-only override for chunked-attention block sizes (q_blk, k_blk).
+# Unrolling 32k/512 × 32k/1024 = 2048 blocks per layer stalls XLA passes;
+# the roofline run uses larger blocks (identical FLOPs, same HBM-byte
+# totals to first order, never executed) so the unrolled graph stays
+# tractable. None = production sizes.
+ATTN_BLOCK_OVERRIDE = None  # Optional[Tuple[int, int]]
+
+
+def scan_kwargs() -> dict:
+    return {"unroll": True} if UNROLL_SCANS else {}
+
+
+def attn_blocks(q_blk: int, k_blk: int):
+    if ATTN_BLOCK_OVERRIDE is not None:
+        return ATTN_BLOCK_OVERRIDE
+    return q_blk, k_blk

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# tests run single-device on CPU; the dry-run (and only the dry-run)
+# spawns its own subprocess with 512 host devices.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,178 @@
+"""Unit + property tests for the AQUA core (paper §4, §6, §7)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aqua
+
+jax.config.update("jax_enable_x64", False)
+
+
+def random_orthogonal(key, d):
+    m = jax.random.normal(key, (d, d))
+    q, _ = jnp.linalg.qr(m)
+    return q
+
+
+# ---------------------------------------------------------------------------
+# projection computation
+# ---------------------------------------------------------------------------
+
+
+def test_projection_is_orthogonal():
+    key = jax.random.PRNGKey(0)
+    d_calib = jax.random.normal(key, (512, 32))
+    p = aqua.compute_projection(d_calib)
+    assert bool(aqua.check_orthogonal(p))
+
+
+def test_projection_orders_variance_descending():
+    key = jax.random.PRNGKey(1)
+    # anisotropic data: variance concentrated in a known direction
+    base = jax.random.normal(key, (2048, 16))
+    scales = jnp.array([10.0 ** (-i / 4) for i in range(16)])
+    data = base * scales
+    p = aqua.compute_projection(data)
+    proj = data @ p
+    var = jnp.var(proj, axis=0)
+    assert np.all(np.diff(np.asarray(var)) <= 1e-3), var
+
+
+def test_gqa_calibration_matrix_shape():
+    q = jnp.ones((4, 100, 32))
+    k = jnp.ones((100, 32))
+    d = aqua.gqa_calibration_matrix(q, k)
+    assert d.shape == (5 * 100, 32)
+
+
+# ---------------------------------------------------------------------------
+# rotation invariance (paper Lemma A.4) — property test
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), d=st.sampled_from([8, 16, 32]),
+       s=st.integers(1, 32))
+def test_rotation_invariance_of_scores(seed, d, s):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (1, d))
+    kc = jax.random.normal(k2, (s, d))
+    p = random_orthogonal(k3, d)
+    s_orig = q @ kc.T
+    s_proj = (q @ p) @ (kc @ p).T
+    np.testing.assert_allclose(s_proj, s_orig, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# magnitude selection (paper §7)
+# ---------------------------------------------------------------------------
+
+
+def test_magnitude_mask_selects_largest():
+    q = jnp.array([[0.1, -5.0, 0.2, 3.0, -0.05, 1.0, 0.0, -2.0]])
+    m = aqua.magnitude_mask(q, 3)
+    np.testing.assert_array_equal(
+        np.asarray(m[0]), [0, 1, 0, 1, 0, 0, 0, 1])
+
+
+def test_magnitude_mask_full_keep():
+    q = jnp.ones((2, 8))
+    m = aqua.magnitude_mask(q, 8)
+    assert np.all(np.asarray(m) == 1)
+
+
+def test_magnitude_mask_block_granularity():
+    q = jnp.array([[10.0, 10.0, 0.0, 0.0, 0.1, 0.1, 5.0, 5.0]])
+    m = aqua.magnitude_mask(q, 4, block_dims=2)
+    # blocks: [20, 0, 0.2, 10] -> top2 = blocks 0 and 3
+    np.testing.assert_array_equal(np.asarray(m[0]), [1, 1, 0, 0, 0, 0, 1, 1])
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       frac=st.sampled_from([0.25, 0.5, 0.75]))
+def test_magnitude_beats_or_matches_slicing(seed, frac):
+    """Paper Fig. 2: top-k-by-magnitude retains >= energy of naive slicing
+    (holds pointwise by definition of top-k on any vector)."""
+    key = jax.random.PRNGKey(seed)
+    v = jax.random.normal(key, (16, 64))
+    k_dims = int(64 * frac)
+    m_mag = aqua.magnitude_mask(v, k_dims)
+    m_slice = aqua.slicing_mask(64, k_dims, v)
+    l_mag = aqua.info_retention_loss(v, v, m_mag)
+    l_slice = aqua.info_retention_loss(v, v, m_slice)
+    assert np.all(np.asarray(l_mag) <= np.asarray(l_slice) + 1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_approx_scores_exact_at_full_ratio(seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    q = jax.random.normal(k1, (4, 32))
+    kc = jax.random.normal(k2, (4, 16, 32))
+    mask = jnp.ones_like(q)
+    s = aqua.approx_scores(q, kc, mask)
+    ref = jnp.einsum("bd,bsd->bs", q, kc)
+    np.testing.assert_allclose(s, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_topk_block_indices_sorted_and_valid():
+    q = jax.random.normal(jax.random.PRNGKey(3), (2, 4, 64))
+    idx = aqua.topk_block_indices(q, 32, 8)
+    assert idx.shape == (2, 4, 4)
+    a = np.asarray(idx)
+    assert np.all(np.diff(a, axis=-1) > 0)
+    assert a.min() >= 0 and a.max() < 8
+
+
+# ---------------------------------------------------------------------------
+# info retention loss metric (paper §6.2)
+# ---------------------------------------------------------------------------
+
+
+def test_info_loss_zero_when_nothing_dropped():
+    key = jax.random.PRNGKey(5)
+    v = jax.random.normal(key, (8, 32))
+    p = random_orthogonal(jax.random.PRNGKey(6), 32)
+    l = aqua.info_retention_loss(v, v @ p, jnp.ones((8, 32)))
+    np.testing.assert_allclose(np.asarray(l), 0.0, atol=1e-4)
+
+
+def test_info_loss_monotone_in_kept_dims():
+    v = jax.random.normal(jax.random.PRNGKey(7), (32, 64))
+    losses = []
+    for k_dims in (8, 16, 32, 48, 64):
+        m = aqua.magnitude_mask(v, k_dims)
+        losses.append(float(aqua.info_retention_loss(v, v, m).mean()))
+    assert all(a >= b - 1e-6 for a, b in zip(losses, losses[1:])), losses
+
+
+# ---------------------------------------------------------------------------
+# weight folding
+# ---------------------------------------------------------------------------
+
+
+def test_fold_projection_matches_runtime_projection():
+    key = jax.random.PRNGKey(8)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    wq = jax.random.normal(k1, (32, 16))
+    wk = jax.random.normal(k2, (32, 16))
+    p = random_orthogonal(k3, 16)
+    x = jax.random.normal(k4, (5, 32))
+    fq, fk = aqua.fold_projection_into_weights(wq, wk, p)
+    np.testing.assert_allclose((x @ wq) @ p, x @ fq, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose((x @ wk) @ p, x @ fk, rtol=1e-4, atol=1e-4)
+
+
+def test_aqua_config_ratios():
+    from repro.configs.base import AquaConfig
+    c = AquaConfig(k_ratio=0.75, s_ratio=0.25)
+    assert abs(c.e_ratio - 0.5625) < 1e-9
+    assert c.kept_dims(128) == 96
+    assert c.topk_dims(128) == 72
+    c8 = AquaConfig(k_ratio=0.75, block_dims=8)
+    assert c8.topk_dims(128) % 8 == 0

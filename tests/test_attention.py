@@ -1,0 +1,132 @@
+"""Attention core: chunked==dense, AQUA prefill/decode equivalences,
+cache-building correctness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import AquaConfig, AttentionConfig
+from repro.core import attention as A
+from repro.core import kvcache as kv
+from repro.core.calibration import identity_projections
+
+
+def _params(acfg, d_model=32, seed=0):
+    return A.init_attention_params(jax.random.PRNGKey(seed), d_model, acfg)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       window=st.sampled_from([None, 8, 24]))
+def test_chunked_equals_dense(seed, window):
+    b, s, kvh, g, d = 1, 32, 2, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, s, kvh, g, d))
+    k = jax.random.normal(ks[1], (b, s, kvh, d))
+    v = jax.random.normal(ks[2], (b, s, kvh, d))
+    out = A.chunked_attention(q, k, v, head_dim=d, causal=True,
+                              window=window, q_blk=8, k_blk=16)
+    sc = jnp.einsum("bskgd,btkd->bkgst", q, k) / np.sqrt(d)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    mask = qp >= kp
+    if window is not None:
+        mask &= kp > qp - window
+    sc = jnp.where(mask[None, None, None], sc, -1e30)
+    ref = jnp.einsum("bkgst,btkd->bskgd", jax.nn.softmax(sc, -1), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_prefill_uses_chunked_path_same_result():
+    """Force the chunked threshold boundary: results identical either side."""
+    acfg = AttentionConfig(num_heads=4, num_kv_heads=2, head_dim=8)
+    p = _params(acfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 32))
+    dense = A.prefill_attention(p, x, acfg)
+    old = A.CHUNKED_THRESHOLD
+    try:
+        A.CHUNKED_THRESHOLD = 32
+        chunked = A.prefill_attention(p, x, acfg)
+    finally:
+        A.CHUNKED_THRESHOLD = old
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(chunked),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_aqua_full_ratio_equals_standard():
+    """k_ratio=1 with an orthogonal P must equal exact attention
+    (paper Lemma A.4: projection is a lossless rotation)."""
+    acfg = AttentionConfig(num_heads=2, num_kv_heads=2, head_dim=16)
+    p = _params(acfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 12, 32))
+    m = jax.random.normal(jax.random.PRNGKey(3), (16, 16))
+    qmat, _ = jnp.linalg.qr(m)
+    proj = jnp.broadcast_to(qmat, (2, 16, 16))
+    aqua = AquaConfig(k_ratio=1.0, block_dims=1)
+    out_std = A.prefill_attention(p, x, acfg)
+    out_aqua = A.prefill_attention(p, x, acfg, aqua, proj)
+    np.testing.assert_allclose(np.asarray(out_aqua), np.asarray(out_std),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_aqua_identity_proj_partial_ratio_changes_little():
+    acfg = AttentionConfig(num_heads=2, num_kv_heads=2, head_dim=16)
+    p = _params(acfg)
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, 12, 32)) * 0.5
+    proj = identity_projections(1, 2, 16).p[0]
+    out_std = A.prefill_attention(p, x, acfg)
+    out_aqua = A.prefill_attention(
+        p, x, acfg, AquaConfig(k_ratio=0.75, block_dims=1), proj)
+    # approximation error bounded (not zero, not huge)
+    err = np.abs(np.asarray(out_aqua - out_std)).max()
+    assert 0.0 < err < 2.0
+
+
+def test_build_cache_matches_decode_inserts():
+    """Prefill-built cache must equal the cache produced by stepwise
+    decode inserts (full-cache policy)."""
+    acfg = AttentionConfig(num_heads=2, num_kv_heads=2, head_dim=8)
+    d_model = 16
+    p = _params(acfg, d_model)
+    s = 6
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, s, d_model))
+    cache_pre = A.build_cache_from_prefill(p, x, acfg, None, None, max_seq=8)
+
+    cache_step = kv.init_attn_cache(1, 2, 8, 8, 8, jnp.float32)
+    for t in range(s):
+        _, cache_step = A.decode_attention(p, x[:, t], cache_step, acfg)
+    np.testing.assert_allclose(np.asarray(cache_pre.k[:, :, :s]),
+                               np.asarray(cache_step.k[:, :, :s]),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cache_pre.v[:, :, :s]),
+                               np.asarray(cache_step.v[:, :, :s]),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(cache_pre.positions[:, :s]),
+                                  np.asarray(cache_step.positions[:, :s]))
+
+
+def test_rope_positions():
+    x = jax.random.normal(jax.random.PRNGKey(6), (1, 4, 2, 8))
+    r0 = A.rope(x, jnp.arange(4), 10000.0)
+    assert r0.shape == x.shape
+    # position 0 is identity
+    np.testing.assert_allclose(np.asarray(r0[:, 0]), np.asarray(x[:, 0]),
+                               rtol=1e-6)
+    # rope preserves norms
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(r0), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5)
+
+
+def test_qk_norm_and_bias_paths():
+    acfg = AttentionConfig(num_heads=2, num_kv_heads=1, head_dim=8,
+                           qk_norm=True, qkv_bias=True)
+    p = _params(acfg)
+    assert "q_norm" in p and "bq" in p
+    x = jax.random.normal(jax.random.PRNGKey(7), (1, 4, 32))
+    out = A.prefill_attention(p, x, acfg)
+    assert np.isfinite(np.asarray(out)).all()

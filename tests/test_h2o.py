@@ -1,0 +1,110 @@
+"""H2O eviction-policy tests (paper §8.3 coupling)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AquaConfig, AttentionConfig
+from repro.core import attention as attn
+from repro.core import kvcache as kv
+from repro.core.h2o import h2o_budget, reference_keep_set
+
+
+def _cache(b=1, kvh=1, slots=8, d=4):
+    return kv.init_attn_cache(b, kvh, slots, d, d, jnp.float32)
+
+
+def test_h2o_budget():
+    assert h2o_budget(None, 1000) is None
+    assert h2o_budget(AquaConfig(h2o_ratio=1.0), 1000) is None
+    assert h2o_budget(AquaConfig(h2o_ratio=0.25), 1000) == 250
+
+
+def test_select_slot_fills_before_evicting():
+    c = _cache(slots=4)
+    for i in range(4):
+        slot = kv.select_slot(c, window=None, h2o=True, recent_len=2)
+        assert int(slot[0]) == i
+        c = kv.insert(c, slot, jnp.ones((1, 1, 4)), jnp.ones((1, 1, 4)))
+    assert int(c.count[0]) == 4
+
+
+def test_h2o_evicts_lowest_score_nonrecent():
+    c = _cache(slots=4)
+    for i in range(4):
+        slot = kv.select_slot(c, window=None, h2o=True, recent_len=2)
+        c = kv.insert(c, slot, jnp.ones((1, 1, 4)), jnp.ones((1, 1, 4)))
+    # incoming pos=4, recent_len=2 protects positions > 2 (slot 3);
+    # evictable slots 0,1,2 -> argmin acc = slot 2 (0.1)
+    c = dataclasses.replace(
+        c, acc_score=jnp.array([[[5.0, 1.0, 0.1, 0.2]]]))
+    slot = kv.select_slot(c, window=None, h2o=True, recent_len=2)
+    assert int(slot[0]) == 2
+
+
+def test_h2o_never_evicts_recent():
+    c = _cache(slots=4)
+    for i in range(4):
+        slot = kv.select_slot(c, window=None, h2o=True, recent_len=2)
+        c = kv.insert(c, slot, jnp.ones((1, 1, 4)), jnp.ones((1, 1, 4)))
+    # global argmin is slot 3 (score 0) but position 3 is protected;
+    # the victim must come from the evictable set instead.
+    c = dataclasses.replace(
+        c, acc_score=jnp.array([[[5.0, 4.0, 3.0, 0.0]]]))
+    slot = kv.select_slot(c, window=None, h2o=True, recent_len=2)
+    assert int(slot[0]) == 2  # lowest among unprotected slots 0,1,2
+
+
+def test_ring_window_slot():
+    c = _cache(slots=4)
+    for i in range(10):
+        slot = kv.select_slot(c, window=4, h2o=False, recent_len=0)
+        assert int(slot[0]) == i % 4
+        c = kv.insert(c, slot, jnp.zeros((1, 1, 4)), jnp.zeros((1, 1, 4)))
+
+
+def test_valid_mask_window():
+    c = _cache(slots=4)
+    for i in range(6):
+        slot = kv.select_slot(c, window=4, h2o=False, recent_len=0)
+        c = kv.insert(c, slot, jnp.zeros((1, 1, 4)), jnp.zeros((1, 1, 4)))
+    m = kv.valid_mask(c, window=4)
+    # positions held: 4,5,2,3 (ring); current pos=5, window 4 -> valid: 2..5
+    np.testing.assert_array_equal(np.asarray(m[0]), [True] * 4)
+    m3 = kv.valid_mask(c, window=3)
+    pos = np.asarray(c.positions[0])
+    np.testing.assert_array_equal(np.asarray(m3[0]), pos > 5 - 3)
+
+
+def test_reference_keep_set_keeps_recents_and_heavy():
+    w = jnp.zeros((8, 8)).at[:, 2].set(1.0)  # token 2 is the heavy hitter
+    kept = np.asarray(reference_keep_set(w, budget=3, recent_frac=0.5))
+    assert 2 in kept          # heavy hitter
+    assert 7 in kept          # most recent
+
+
+def test_decode_h2o_cache_stays_within_budget():
+    acfg = AttentionConfig(num_heads=2, num_kv_heads=1, head_dim=8)
+    aqua = AquaConfig(k_ratio=1.0, h2o_ratio=0.5, block_dims=1)
+    d_model = 16
+    params = attn.init_attention_params(jax.random.PRNGKey(0), d_model, acfg)
+    from repro.core.calibration import identity_projections
+    proj = identity_projections(1, 1, 8).p[0]
+    max_seq = 16
+    budget = h2o_budget(aqua, max_seq)
+    cache = kv.init_attn_cache(1, 1, budget, 8, 8, jnp.float32)
+    for i in range(12):
+        x = jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(1), i),
+                              (1, d_model))
+        out, cache = attn.decode_attention(params, x, cache, acfg, aqua, proj)
+        assert np.isfinite(np.asarray(out)).all()
+    assert cache.num_slots == budget
+    assert int(cache.count[0]) == 12
+    pos = np.asarray(cache.positions[0])
+    assert (pos >= 0).all() and len(set(pos.tolist())) == budget
+    # recent tokens always present
+    recent = max(1, int(aqua.h2o_recent_frac * budget))
+    for p in range(12 - recent, 12):
+        assert p in pos

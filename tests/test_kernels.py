@@ -1,0 +1,94 @@
+"""Per-kernel validation: shape/dtype sweeps, assert_allclose vs the
+pure-jnp oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aqua import topk_block_indices
+from repro.kernels.ops import aqua_decode, flash_attention, to_dim_major_blocks
+from repro.kernels.ref import aqua_decode_ref, flash_attention_ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,kv,s,d", [
+    (1, 2, 2, 128, 32),
+    (2, 4, 2, 256, 64),
+    (2, 8, 2, 384, 64),   # GQA group 4, padded seq blocks
+    (1, 4, 4, 256, 128),  # MHA
+])
+@pytest.mark.parametrize("k_ratio", [0.5, 0.75, 1.0])
+def test_aqua_decode_matches_oracle(b, h, kv, s, d, dtype, k_ratio):
+    ks = jax.random.split(jax.random.PRNGKey(42), 4)
+    q = _rand(ks[0], (b, h, d), dtype)
+    khat = _rand(ks[1], (b, kv, s, d), dtype)
+    v = _rand(ks[2], (b, kv, s, d), dtype)
+    lengths = jnp.full((b,), s, jnp.int32).at[0].set(max(1, s - 37))
+    out = aqua_decode(q, khat, v, lengths, k_ratio=k_ratio, block_dims=8,
+                      seq_blk=128)
+    k_dims = min(d, max(8, int(round(k_ratio * d)) // 8 * 8))
+    bi = topk_block_indices(q, k_dims, 8)
+    ref = aqua_decode_ref(q, khat, v, bi, lengths, 8)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_aqua_decode_full_ratio_equals_exact_attention():
+    """k_ratio=1.0 must reproduce exact softmax attention."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    b, h, kv, s, d = 1, 2, 1, 128, 32
+    q = _rand(ks[0], (b, h, d), jnp.float32)
+    khat = _rand(ks[1], (b, kv, s, d), jnp.float32)
+    v = _rand(ks[2], (b, kv, s, d), jnp.float32)
+    lengths = jnp.full((b,), s, jnp.int32)
+    out = aqua_decode(q, khat, v, lengths, k_ratio=1.0, block_dims=8)
+    qr = q.reshape(b, kv, h // kv, d)
+    sc = jnp.einsum("bkgd,bksd->bkgs", qr, khat) / np.sqrt(d)
+    w = jax.nn.softmax(sc, -1)
+    ref = jnp.einsum("bkgs,bksd->bkgd", w, v).reshape(b, h, d)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_dim_major_blocks_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 64, 32))
+    blk = to_dim_major_blocks(x, 8)
+    assert blk.shape == (2, 3, 4, 8, 64)
+    back = blk.reshape(2, 3, 32, 64).transpose(0, 1, 3, 2)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,kv,s,d,window", [
+    (1, 2, 2, 256, 32, None),
+    (2, 4, 2, 256, 64, None),
+    (1, 4, 1, 384, 64, 100),   # MQA + sliding window
+    (1, 2, 2, 512, 128, 256),
+])
+def test_flash_attention_matches_oracle(b, h, kv, s, d, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = _rand(ks[0], (b, h, s, d), dtype)
+    k = _rand(ks[1], (b, kv, s, d), dtype)
+    v = _rand(ks[2], (b, kv, s, d), dtype)
+    out = flash_attention(q, k, v, causal=True, window=window)
+    ref = flash_attention_ref(q, k, v, causal=True, window=window)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_noncausal():
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = _rand(ks[0], (1, 2, 128, 32), jnp.float32)
+    k = _rand(ks[1], (1, 2, 128, 32), jnp.float32)
+    v = _rand(ks[2], (1, 2, 128, 32), jnp.float32)
+    out = flash_attention(q, k, v, causal=False)
+    ref = flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)

@@ -1,0 +1,121 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward + one train step (or serve step), asserting shapes and finiteness.
+The FULL configs are exercised only by the dry-run (no allocation)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, get_config, reduced
+from repro.configs.base import AquaConfig, TrainConfig
+from repro.data.pipeline import DataConfig, add_frontend_inputs, make_batch
+from repro.models import build_model
+
+
+def _batch(cfg, b=2, s=16, seed=0):
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=s, global_batch=b,
+                      seed=seed)
+    return add_frontend_inputs(make_batch(dcfg, 0), cfg)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = reduced(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    out = model.forward(params, batch)
+    if isinstance(out, tuple):
+        out = out[0]
+    assert out.shape == (2, 16, cfg.vocab_size)
+    assert np.isfinite(np.asarray(out, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_one_train_step(arch):
+    from repro.launch.train import TrainState, make_train_step
+    from repro.optim import adamw
+    cfg = dataclasses.replace(reduced(arch), remat=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    state = TrainState(params=params, opt=adamw.init(params),
+                       step=jnp.zeros((), jnp.int32))
+    step_fn = jax.jit(make_train_step(model, TrainConfig(warmup_steps=1,
+                                                         total_steps=10)))
+    batch = _batch(cfg)
+    state, metrics = step_fn(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["grad_norm"]) > 0.0
+    assert int(state.step) == 1
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_one_serve_step(arch):
+    cfg = reduced(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, b=2, s=8)
+    logits, state = model.prefill(params, {k: v for k, v in batch.items()
+                                           if k != "labels"}, max_seq=32)
+    assert logits.shape == (2, cfg.vocab_size)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, state = model.decode_step(params, state, tok)
+    assert logits2.shape == (2, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "olmoe-1b-7b",
+                                  "recurrentgemma-9b", "whisper-tiny"])
+def test_serve_step_with_aqua(arch):
+    from repro.core.calibration import identity_projections
+    cfg = dataclasses.replace(
+        reduced(arch), aqua=AquaConfig(k_ratio=0.75, s_ratio=0.25))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    nl = cfg.num_layers if cfg.family != "hybrid" else model.num_attn_layers
+    proj = identity_projections(nl, cfg.attention.num_kv_heads,
+                                cfg.attention.head_dim).p
+    batch = _batch(cfg, b=2, s=8)
+    logits, state = model.prefill(params, {k: v for k, v in batch.items()
+                                           if k != "labels"},
+                                  max_seq=32, aqua_proj=proj)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, _ = model.decode_step(params, state, tok, aqua_proj=proj)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+    # AQUA-Memory: cached key dim is statically sliced
+    kept = cfg.aqua.kept_dims(cfg.attention.head_dim)
+    caches = (state.layers if isinstance(state.layers, tuple)
+              else [state.layers])
+    from repro.core.kvcache import AttnCache
+    k_dims = [c.k.shape[-1] for c in caches if isinstance(c, AttnCache)]
+    assert all(kd == kept for kd in k_dims), (k_dims, kept)
+
+
+def test_full_configs_match_assignment():
+    """The production configs carry the exact assigned hyperparameters."""
+    expect = {
+        "h2o-danube-1.8b": (24, 2560, 32, 8, 6912, 32000),
+        "qwen1.5-4b": (40, 2560, 20, 20, 6912, 151936),
+        "minitron-4b": (32, 3072, 24, 8, 9216, 256000),
+        "qwen3-0.6b": (28, 1024, 16, 8, 3072, 151936),
+        "pixtral-12b": (40, 5120, 32, 8, 14336, 131072),
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+    }
+    for arch, (l, dm, h, kv, ff, v) in expect.items():
+        cfg = get_config(arch)
+        assert cfg.num_layers == l and cfg.d_model == dm
+        assert cfg.attention.num_heads == h
+        assert cfg.attention.num_kv_heads == kv
+        assert cfg.d_ff == ff and cfg.vocab_size == v
+    m = get_config("mamba2-370m")
+    assert (m.num_layers, m.d_model, m.vocab_size) == (48, 1024, 50280)
+    assert m.ssm.state_dim == 128 and m.attention is None
+    moe = get_config("olmoe-1b-7b").moe
+    assert moe.num_experts == 64 and moe.top_k == 8
+    q2 = get_config("qwen2-moe-a2.7b").moe
+    assert q2.num_experts == 60 and q2.top_k == 4 and q2.num_shared == 4
