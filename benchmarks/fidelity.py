@@ -13,11 +13,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (bench_config, data_config, eval_nll,
-                               get_trained_model, timeit, BENCH_SEQ)
+from benchmarks.common import (data_config, eval_nll, get_trained_model,
+                               timeit, BENCH_SEQ)
 from repro.configs.base import AquaConfig
 from repro.core import aqua as aqua_lib
-from repro.core.calibration import AquaProjections
 from repro.data.pipeline import make_batch
 from repro.models import build_model
 
@@ -239,6 +238,49 @@ def block_granularity() -> List[Row]:
         l = float(aqua_lib.info_retention_loss(qs, qs, m).mean())
         rows.append((f"block_granularity/Linfo_bd{bd}", 0.0,
                      f"L_info={l:.4f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Kernel-level: prefill backend equivalence + timing (no trained model; fast
+# enough for the CI smoke).
+# ---------------------------------------------------------------------------
+
+
+def prefill_backends() -> List[Row]:
+    from repro.kernels.ops import (aqua_prefill, flash_attention,
+                                  round_k_dims)
+    from repro.kernels.ref import aqua_prefill_ref, flash_attention_ref
+    from repro.core.aqua import chunk_topk_block_indices
+    b, h, kvh, s, d = 1, 4, 2, 128, 32
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (b, h, s, d))
+    k = jax.random.normal(ks[1], (b, kvh, s, d))
+    v = jax.random.normal(ks[2], (b, kvh, s, d))
+    lengths = jnp.full((b,), s, jnp.int32)
+    rows: List[Row] = []
+
+    us = timeit(lambda: flash_attention(q, k, v, causal=True,
+                                        interpret=True), iters=3)
+    err = float(jnp.max(jnp.abs(
+        flash_attention(q, k, v, causal=True, interpret=True)
+        - flash_attention_ref(q, k, v, causal=True))))
+    rows.append(("prefill/flash_vs_dense", us, f"max_abs_err={err:.2e}"))
+
+    nb = d // 8
+    for kr in (0.5, 0.75, 1.0):
+        fn = lambda: aqua_prefill(q, k, v, lengths, k_ratio=kr,  # noqa: E731
+                                  block_dims=8, q_blk=32, k_blk=32,
+                                  interpret=True)
+        us = timeit(fn, iters=3)
+        k_dims = round_k_dims(d, kr, 8)
+        bi = chunk_topk_block_indices(q, k_dims, 8, 32, lengths)
+        ref = aqua_prefill_ref(q, k, v, bi, lengths, 8, 32)
+        err = float(jnp.max(jnp.abs(fn() - ref)))
+        # score-read HBM traffic of the kernel relative to dense flash
+        ratio = (k_dims // 8) / nb
+        rows.append((f"prefill/aqua_block_sparse_k{kr}", us,
+                     f"max_abs_err={err:.2e} score_bytes_ratio={ratio:.3f}"))
     return rows
 
 

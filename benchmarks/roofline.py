@@ -11,11 +11,9 @@ from __future__ import annotations
 
 import json
 import sys
-from typing import Dict
 
 from repro.configs import SHAPES_BY_NAME, get_config
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 
 
 def active_params(cfg: ModelConfig) -> float:

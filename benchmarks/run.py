@@ -4,34 +4,67 @@ Prints ``name,us_per_call,derived`` CSV (us_per_call is CPU wall time of
 the jitted callable where meaningful, 0.0 for pure-metric rows; derived
 carries the paper metric). Roofline terms come from the dry-run artifacts
 via benchmarks.roofline, not from CPU timing.
+
+``--fast`` runs only the trained-model-free benches (seconds, used by the
+CI smoke); ``--json PATH`` additionally writes the rows as a JSON list of
+``{"name", "us_per_call", "derived"}`` objects (uploaded as a CI
+artifact).
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
 import traceback
 
+# self-sufficient when invoked as `python benchmarks/run.py`
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
-def main() -> None:
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="trained-model-free subset (CI smoke)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON to PATH")
+    args = ap.parse_args(argv)
+
     from benchmarks import fidelity
-    benches = [
+    fast_benches = [
+        fidelity.breakeven,
+        fidelity.prefill_backends,
+        fidelity.kernel_bandwidth,
+    ]
+    full_benches = [
         fidelity.fig2_info_retention,
         fidelity.table1_standalone,
         fidelity.table2_aqua_h2o,
         fidelity.table3_aqua_memory,
-        fidelity.breakeven,
+    ] + fast_benches + [
         fidelity.block_granularity,
-        fidelity.kernel_bandwidth,
     ]
+    benches = fast_benches if args.fast else full_benches
+
     print("name,us_per_call,derived")
+    rows = []
     failures = 0
     for bench in benches:
         try:
             for name, us, derived in bench():
                 print(f"{name},{us:.1f},{derived}")
+                rows.append({"name": name, "us_per_call": us,
+                             "derived": derived})
         except Exception:
             failures += 1
             print(f"{bench.__name__},ERROR,", file=sys.stderr)
             traceback.print_exc()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
     if failures:
         sys.exit(1)
 

@@ -21,7 +21,7 @@ import os
 import shutil
 import threading
 import time
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import ml_dtypes

@@ -7,7 +7,6 @@ and can be used as jit static args.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field, replace
 from typing import Optional, Tuple
 
@@ -33,6 +32,13 @@ class AquaConfig:
     block_dims: int = 1
     # Fold P into W_Q / W_K offline when legal (no per-step projection cost).
     fold_projection: bool = True
+    # Block-sparse kernel tile sizes (repro.kernels.aqua_prefill/aqua_decode):
+    # queries per prefill chunk (one dim-block selection per chunk), keys per
+    # prefill tile, and keys per decode seq-block. Threaded through the
+    # attention backend registry (repro.core.attention).
+    prefill_q_blk: int = 128
+    prefill_k_blk: int = 128
+    decode_seq_blk: int = 128
 
     @property
     def e_ratio(self) -> float:
@@ -66,6 +72,12 @@ class AttentionConfig:
     rope_theta: float = 10000.0
     use_rope: bool = True         # False -> absolute learned positions (whisper)
     causal: bool = True           # False for encoder self-attention
+    # Attention backend registry key (repro.core.attention): "auto" |
+    # "dense-jnp" | "flash" | "aqua-masked-dense" | "aqua-block-sparse".
+    # "auto" picks Pallas kernels on TPU and jnp references elsewhere;
+    # explicit kernel backends fall back to the masked-dense reference when
+    # Pallas is unavailable.
+    backend: str = "auto"
 
     @property
     def group_size(self) -> int:

@@ -63,6 +63,11 @@ def check_orthogonal(p: jax.Array, atol: float = 1e-3) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
+def ceil_to(n: int, m: int) -> int:
+    """Smallest multiple of ``m`` >= ``n`` (shared padding/tiling helper)."""
+    return -(-n // m) * m
+
+
 def magnitude_mask(q_hat: jax.Array, k_dims: int, *, block_dims: int = 1
                    ) -> jax.Array:
     """0/1 mask over the last axis keeping the top-``k_dims`` dims by |q̂|.
@@ -101,6 +106,37 @@ def topk_block_indices(q_hat: jax.Array, k_dims: int, block_dims: int
     nb, kb = d // block_dims, k_dims // block_dims
     mag = jnp.abs(q_hat.astype(jnp.float32))
     bmag = mag.reshape(*mag.shape[:-1], nb, block_dims).sum(-1)
+    _, bidx = jax.lax.top_k(bmag, kb)
+    return jnp.sort(bidx, axis=-1).astype(jnp.int32)
+
+
+def chunk_topk_block_indices(q_hat: jax.Array, k_dims: int, block_dims: int,
+                             q_chunk: int,
+                             lengths: Optional[jax.Array] = None
+                             ) -> jax.Array:
+    """Per-query-*chunk* dim-block selection for the chunked-prefill kernel.
+
+    The paper selects dims per query; a chunked kernel must share one block
+    set across the ``q_chunk`` queries of a tile, so |q̂| block magnitudes
+    are aggregated (summed) over each chunk before the top-k. At
+    ``q_chunk=1`` this reduces exactly to :func:`topk_block_indices`.
+
+    q_hat:   (B, H, S, D) projected queries (head-major kernel layout)
+    lengths: (B,) — query rows at or beyond a row's length are excluded
+             from the aggregation so padding never steers selection
+    returns: (B, H, S // q_chunk, k_dims // block_dims) int32, sorted.
+    """
+    b, h, s, d = q_hat.shape
+    assert s % q_chunk == 0, (s, q_chunk)
+    assert d % block_dims == 0 and k_dims % block_dims == 0, \
+        (d, k_dims, block_dims)
+    nb, kb = d // block_dims, k_dims // block_dims
+    mag = jnp.abs(q_hat.astype(jnp.float32))
+    if lengths is not None:
+        valid = jnp.arange(s)[None, :] < lengths[:, None]       # (B, S)
+        mag = mag * valid[:, None, :, None]
+    bmag = mag.reshape(b, h, s // q_chunk, q_chunk, nb, block_dims
+                       ).sum(axis=(3, 5))                       # (B,H,NQC,NB)
     _, bidx = jax.lax.top_k(bmag, kb)
     return jnp.sort(bidx, axis=-1).astype(jnp.int32)
 

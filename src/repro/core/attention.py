@@ -3,8 +3,31 @@
 Covers: MHA / GQA / MQA, full + sliding-window/local masks, RoPE, qk-norm,
 QKV bias, AQUA projection + magnitude selection, AQUA-Memory static slice,
 and H2O heavy-hitter eviction — for both prefill (sequence) and decode
-(single-step with slot cache) modes. Pure jnp reference path; the Pallas
-kernels in ``repro.kernels`` implement the bandwidth-optimal decode.
+(single-step with slot cache) modes.
+
+Backend registry contract
+-------------------------
+The core attention product is dispatched through a string-keyed registry
+(:data:`_BACKENDS`); ``AttentionConfig.backend`` selects the entry and
+:func:`resolve_backend` applies the fallback policy. A backend's
+``prefill`` callable receives model-layout tensors
+
+  q (B, S, KV, G, Dq), k (B, S, KV, Dq), v (B, S, KV, Dv)
+
+and returns ``(out (B, S, KV, G, Dv), weights | None)``. Non-AQUA
+backends and ``aqua-masked-dense`` get the magnitude-*masked* query
+(masked-q identity, DESIGN.md §2); ``aqua-block-sparse`` gets the
+unmasked projected q̂/k̂ and performs chunk-level dim-block selection
+inside the kernel wrapper. ``decode`` (optional) receives the projected
+query (B, KV, G, Dq) plus the slot cache and returns (B, KV, G, Dv).
+
+Built-in backends: ``dense-jnp`` (materialized scores, auto-switching to
+the chunked online-softmax scan for long sequences), ``flash`` (Pallas
+flash kernel), ``aqua-masked-dense`` (jnp reference for AQUA),
+``aqua-block-sparse`` (Pallas chunked-prefill + decode kernels streaming
+only the selected dim-blocks). ``auto`` resolves to kernels on TPU and
+jnp references elsewhere; kernel backends fall back to the masked-dense
+reference when Pallas is unavailable (``runtime_flags.PALLAS_OVERRIDE``).
 
 Conventions:
   x            (B, S, d_model)
@@ -15,7 +38,8 @@ Conventions:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+import math
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +53,7 @@ def _scan(*args, **kw):
 
 from repro.configs.base import AquaConfig, AttentionConfig
 from repro.core import aqua as aqua_lib
+from repro.core.aqua import ceil_to as _ceil_to
 from repro.core import kvcache as kv
 
 NEG_INF = -1e30
@@ -131,18 +156,21 @@ def project_k(k: jax.Array, proj: Optional[jax.Array]) -> jax.Array:
     return jnp.einsum("bskd,kde->bske", k, proj.astype(k.dtype))
 
 
-def _aqua_prep(q, k, aqua: Optional[AquaConfig], proj, head_dim: int):
-    """Project + statically slice q̂ and k̂ per AQUA config."""
+def _aqua_project(q, k, aqua: Optional[AquaConfig], proj, head_dim: int):
+    """Project + statically slice q̂ and k̂ per AQUA config (no mask — the
+    magnitude mask is only materialized for the masked-dense backends; the
+    block-sparse kernels do their own selection)."""
     if aqua is None or not aqua.enabled:
-        return q, k, None
+        return q, k
     qh = project_q(q, proj)
     kh = project_k(k, proj)
     kept = aqua.kept_dims(head_dim)
-    qh = qh[..., :kept]
-    kh = kh[..., :kept]
-    k_dims = aqua.topk_dims(head_dim)
-    mask = aqua_lib.magnitude_mask(qh, k_dims, block_dims=aqua.block_dims)
-    return qh, kh, mask
+    return qh[..., :kept], kh[..., :kept]
+
+
+def _aqua_mask(qh, aqua: AquaConfig, head_dim: int):
+    return aqua_lib.magnitude_mask(qh, aqua.topk_dims(head_dim),
+                                   block_dims=aqua.block_dims)
 
 
 # ---------------------------------------------------------------------------
@@ -158,18 +186,31 @@ CHUNKED_THRESHOLD = 2048  # use chunked path for sequences >= this
 def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                       head_dim: int, causal: bool = True,
                       window: Optional[int] = None, q_blk: int = 512,
-                      k_blk: int = 1024) -> jax.Array:
+                      k_blk: int = 1024,
+                      lengths: Optional[jax.Array] = None) -> jax.Array:
     """q: (B, S, KV, G, D'); k: (B, S, KV, D'); v: (B, S, KV, Dv).
 
     Online-softmax double scan over (q blocks × k blocks). Scale uses the
-    FULL head_dim (AQUA approximates full scores). Returns (B, S, KV, G, Dv).
+    FULL head_dim (AQUA approximates full scores). ``lengths`` (B,) masks
+    ragged rows per key block. Returns (B, S, KV, G, Dv).
     """
     b, s, kvh, g, d = q.shape
     dv = v.shape[-1]
     q_blk, k_blk = _rtf.attn_blocks(q_blk, k_blk)
     q_blk = min(q_blk, s)
     k_blk = min(k_blk, s)
-    assert s % q_blk == 0 and s % k_blk == 0, (s, q_blk, k_blk)
+    s_real = s
+    pad = (-s) % math.lcm(q_blk, k_blk)
+    if pad:
+        # non-divisible S: pad the sequence and mask the tail via the
+        # lengths mechanism (covers causal and non-causal alike); padded
+        # query rows are sliced off below
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s += pad
+        if lengths is None:
+            lengths = jnp.full((b,), s_real, jnp.int32)
     nq, nk = s // q_blk, s // k_blk
     scale = 1.0 / (float(head_dim) ** 0.5)
 
@@ -201,7 +242,10 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             if window is not None:
                 mask &= kpos > qpos - window
             mask &= valid
-            sij = jnp.where(mask[None, None, None], sij, NEG_INF)
+            mask = mask[None]                        # (1, q_blk, k_blk)
+            if lengths is not None:
+                mask = mask & (kpos[None] < lengths[:, None, None])
+            sij = jnp.where(mask[:, None, None], sij, NEG_INF)
             m_new = jnp.maximum(m, sij.max(-1))
             p = jnp.exp(sij - m_new[..., None])
             corr = jnp.exp(m - m_new)
@@ -236,7 +280,179 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     _, ob = _scan(outer, None, (qb, jnp.arange(nq)))
     # (nq, B, KV, G, q_blk, Dv) -> (B, S, KV, G, Dv)
     out = ob.transpose(1, 0, 4, 2, 3, 5).reshape(b, s, kvh, g, dv)
-    return out
+    return out[:, :s_real]
+
+
+# ---------------------------------------------------------------------------
+# Attention backend registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionBackend:
+    """One registry entry (see the module docstring for the contract).
+
+    ``requires_pallas`` backends fall back to the masked-dense reference
+    when Pallas is unavailable; ``aqua_native`` backends additionally need
+    calibrated AQUA projections (they consume unmasked q̂/k̂).
+    """
+
+    name: str
+    prefill: Callable[..., Tuple[jax.Array, Optional[jax.Array]]]
+    decode: Optional[Callable[..., jax.Array]] = None
+    requires_pallas: bool = False
+    aqua_native: bool = False
+
+
+_BACKENDS: Dict[str, AttentionBackend] = {}
+
+
+def register_backend(backend: AttentionBackend) -> AttentionBackend:
+    _BACKENDS[backend.name] = backend
+    return backend
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_BACKENDS))
+
+
+def get_backend(name: str) -> AttentionBackend:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise KeyError(f"unknown attention backend {name!r}; "
+                       f"available: {available_backends()}") from None
+
+
+def resolve_backend(name: str = "auto",
+                    aqua: Optional[AquaConfig] = None) -> AttentionBackend:
+    """Map a config-selected backend name to a runnable backend.
+
+    ``auto`` prefers the Pallas kernels when they would run compiled (on
+    TPU, or forced via ``runtime_flags.PALLAS_OVERRIDE``) and the jnp
+    references otherwise. Explicitly requested kernel backends run in
+    interpret mode off-TPU, but fall back to the masked-dense reference
+    when Pallas is unavailable; AQUA-native backends fall back to flash /
+    dense when AQUA is disabled (no projections to select over).
+    """
+    aqua_on = aqua is not None and aqua.enabled
+    if name in (None, "", "auto"):
+        if _rtf.kernels_preferred():
+            name = "aqua-block-sparse" if aqua_on else "flash"
+        else:
+            name = "aqua-masked-dense" if aqua_on else "dense-jnp"
+    be = get_backend(name)
+    if be.requires_pallas and not _rtf.pallas_available():
+        be = get_backend("aqua-masked-dense" if aqua_on else "dense-jnp")
+    if be.aqua_native and not aqua_on:
+        be = get_backend("flash" if _rtf.kernels_preferred() else "dense-jnp")
+    return be
+
+
+def _dense_jnp_prefill(qq, kk, v, *, cfg, aqua, positions, lengths, causal):
+    """Materialized-score reference; switches to the chunked online-softmax
+    scan for long causal sequences (the S×S matrix never materializes)."""
+    s = qq.shape[1]
+    if s >= CHUNKED_THRESHOLD and causal and positions.ndim == 1:
+        out = chunked_attention(qq, kk, v, head_dim=cfg.head_dim,
+                                causal=True, window=cfg.window,
+                                lengths=lengths)
+        return out, None
+    scores = jnp.einsum("bskgd,btkd->bkgst", qq, kk)
+    scores = scores.astype(jnp.float32) / jnp.sqrt(float(cfg.head_dim))
+    kpos = positions if positions.ndim == 2 else positions[None]
+    mask = None
+    if causal:
+        qpos = kpos
+        mask = qpos[:, None, None, :, None] >= kpos[:, None, None, None, :]
+        if cfg.window is not None:
+            mask &= (kpos[:, None, None, None, :]
+                     > qpos[:, None, None, :, None] - cfg.window)
+    if lengths is not None:
+        lmask = kpos[:, None, None, None, :] < lengths[:, None, None, None,
+                                                       None]
+        mask = lmask if mask is None else mask & lmask
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    weights = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", weights.astype(v.dtype), v)
+    return out, weights
+
+
+def _flash_prefill(qq, kk, v, *, cfg, aqua, positions, lengths, causal):
+    """Pallas flash kernel on head-major layout. Ragged lengths, 2-D
+    positions, non-causal shapes (sequence padding is only safe under a
+    causal mask) and AQUA-Memory-sliced heads (the kernel assumes
+    dk == dv) are delegated to the dense reference."""
+    if (not causal or positions.ndim == 2 or lengths is not None
+            or qq.shape[-1] != v.shape[-1]):
+        return _dense_jnp_prefill(qq, kk, v, cfg=cfg, aqua=aqua,
+                                  positions=positions, lengths=lengths,
+                                  causal=causal)
+    from repro.kernels import ops as kops
+    b, s, kvh, g, d = qq.shape
+    dv = v.shape[-1]
+    qf = qq.transpose(0, 2, 3, 1, 4).reshape(b, kvh * g, s, d)
+    kf = kk.transpose(0, 2, 1, 3)
+    vf = v.transpose(0, 2, 1, 3)
+    blk = min(128, _ceil_to(s, 8))
+    spad = _ceil_to(s, blk)
+    if spad != s:
+        pad = ((0, 0), (0, 0), (0, spad - s), (0, 0))
+        qf, kf, vf = jnp.pad(qf, pad), jnp.pad(kf, pad), jnp.pad(vf, pad)
+    of = kops.flash_attention(qf, kf, vf, causal=True, window=cfg.window,
+                              q_blk=blk, k_blk=blk)[:, :, :s]
+    out = of.reshape(b, kvh, g, s, dv).transpose(0, 3, 1, 2, 4)
+    return out, None
+
+
+def _aqua_block_sparse_prefill(qh, kh, v, *, cfg, aqua, positions, lengths,
+                               causal):
+    """AQUA block-sparse chunked-prefill kernel: per-chunk dim-block
+    selection over unmasked q̂, dim-major K̂ streaming (kernels/aqua_prefill).
+    Scores are scaled by the FULL head_dim — the paper approximates full
+    scores even when k̂ is statically sliced."""
+    from repro.kernels import ops as kops
+    b, s, kvh, g, dk = qh.shape
+    dv = v.shape[-1]
+    bd = aqua.block_dims
+    qf = qh.transpose(0, 2, 3, 1, 4).reshape(b, kvh * g, s, dk)
+    kf = kh.transpose(0, 2, 1, 3)
+    vf = v.transpose(0, 2, 1, 3)
+    of = kops.aqua_prefill(qf, kf, vf, lengths, k_ratio=aqua.k_ratio,
+                           block_dims=bd, q_blk=aqua.prefill_q_blk,
+                           k_blk=aqua.prefill_k_blk, causal=causal,
+                           window=cfg.window,
+                           scale=1.0 / float(cfg.head_dim) ** 0.5)
+    out = of.reshape(b, kvh, g, s, dv).transpose(0, 3, 1, 2, 4)
+    return out, None
+
+
+def _aqua_block_sparse_decode(q_hat, cache, *, cfg, aqua):
+    """AQUA block-sparse decode kernel over the contiguous slot cache.
+    q_hat: (B, KV, G, Dk) projected (unmasked) query. Returns
+    (B, KV, G, Dv)."""
+    from repro.kernels import ops as kops
+    b, kvh, g, dk = q_hat.shape
+    bd = aqua.block_dims
+    qf = q_hat.reshape(b, kvh * g, dk)
+    lengths = jnp.minimum(cache.count, cache.num_slots)
+    seq_blk = min(aqua.decode_seq_blk, _ceil_to(cache.num_slots, 8))
+    out = kops.aqua_decode(qf, cache.k, cache.v, lengths,
+                           k_ratio=aqua.k_ratio, block_dims=bd,
+                           seq_blk=seq_blk,
+                           scale=1.0 / float(cfg.head_dim) ** 0.5)
+    return out.reshape(b, kvh, g, -1)
+
+
+register_backend(AttentionBackend("dense-jnp", _dense_jnp_prefill))
+register_backend(AttentionBackend("flash", _flash_prefill,
+                                  requires_pallas=True))
+register_backend(AttentionBackend("aqua-masked-dense", _dense_jnp_prefill))
+register_backend(AttentionBackend("aqua-block-sparse",
+                                  _aqua_block_sparse_prefill,
+                                  decode=_aqua_block_sparse_decode,
+                                  requires_pallas=True, aqua_native=True))
 
 
 # ---------------------------------------------------------------------------
@@ -249,14 +465,21 @@ def prefill_attention(params: dict, x: jax.Array, cfg: AttentionConfig,
                       proj: Optional[jax.Array] = None,
                       positions: Optional[jax.Array] = None,
                       kv_x: Optional[jax.Array] = None,
-                      return_aux: bool = False):
-    """Sequence attention. ``kv_x`` enables cross-attention (keys/values from
+                      return_aux: bool = False,
+                      lengths: Optional[jax.Array] = None):
+    """Sequence attention, dispatched through the backend registry
+    (``cfg.backend``). ``kv_x`` enables cross-attention (keys/values from
     the encoder); in that mode AQUA and causal masking are bypassed unless
-    configured otherwise.
+    configured otherwise. ``lengths`` (B,) masks ragged rows: keys at or
+    beyond a row's length are never attended.
 
     Returns out (B, S, d_model) [, aux dict with q/k activations & weights].
     """
     b, s, _ = x.shape
+    if kv_x is not None and lengths is not None:
+        raise ValueError(
+            "`lengths` masks self-attention keys; ragged cross-attention "
+            "would need encoder-side lengths (unsupported)")
     if positions is None:
         positions = jnp.arange(s, dtype=jnp.int32)
     src = x if kv_x is None else kv_x
@@ -275,39 +498,43 @@ def prefill_attention(params: dict, x: jax.Array, cfg: AttentionConfig,
         q = rope(q, positions, cfg.rope_theta)
         k = rope(k, positions, cfg.rope_theta)
 
-    qh, kh, mask = _aqua_prep(q, k, aqua, proj, cfg.head_dim)
-    qq, kk = (q, k) if mask is None else (qh * mask, kh)
+    aqua_on = aqua is not None and aqua.enabled
+    qh, kh = _aqua_project(q, k, aqua, proj, cfg.head_dim)
 
-    if (s >= CHUNKED_THRESHOLD and kv_x is None and cfg.causal
-            and positions.ndim == 1):
-        out = chunked_attention(qq, kk, v, head_dim=cfg.head_dim,
-                                causal=True, window=cfg.window)
-        out = out.astype(v.dtype)
-        out = jnp.einsum("bskgd,kgdm->bsm", out, params["wo"].astype(x.dtype))
-        if return_aux:
-            return out, {"q": q, "k": k, "weights": None,
-                         "q_hat": qh if mask is not None else None,
-                         "k_hat": kh if mask is not None else None}
-        return out
+    causal = cfg.causal and kv_x is None
+    backend = resolve_backend(cfg.backend, aqua=aqua)
+    if kv_x is not None or positions.ndim == 2:
+        # cross-attention / per-row position tables: reference path only
+        backend = get_backend("dense-jnp")
+    if backend.name == "aqua-block-sparse":
+        # The kernel needs dim-*block* selection; block_dims=1 is the
+        # paper's per-dim semantics — never silently coarsen it (numerics
+        # must not depend on which backend a platform resolved to). The
+        # masked-q identity is exact over masked inputs, so on TPU the
+        # flash kernel serves per-dim selection at identical numerics
+        # without materializing S×S scores; jnp reference elsewhere.
+        if (not aqua_on or aqua.block_dims <= 1
+                or kh.shape[-1] % aqua.block_dims != 0):
+            backend = get_backend("flash" if _rtf.kernels_preferred()
+                                  else "aqua-masked-dense")
+    if backend.name == "aqua-block-sparse":
+        qq, kk = qh, kh          # unmasked: kernel selects dim-blocks
+    elif aqua_on:
+        # masked-q identity: per-query magnitude mask, materialized only
+        # on the reference paths (the kernels select inside the wrapper)
+        qq, kk = qh * _aqua_mask(qh, aqua, cfg.head_dim), kh
+    else:
+        qq, kk = q, k
 
-    scores = jnp.einsum("bskgd,btkd->bkgst", qq, kk)
-    scores = scores.astype(jnp.float32) / jnp.sqrt(float(cfg.head_dim))
-
-    if cfg.causal and kv_x is None:
-        qpos = positions if positions.ndim == 2 else positions[None]
-        kpos = qpos
-        causal = qpos[:, None, None, :, None] >= kpos[:, None, None, None, :]
-        if cfg.window is not None:
-            causal &= (kpos[:, None, None, None, :]
-                       > qpos[:, None, None, :, None] - cfg.window)
-        scores = jnp.where(causal, scores, NEG_INF)
-    weights = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bkgst,btkd->bskgd", weights.astype(v.dtype), v)
+    out, weights = backend.prefill(qq, kk, v, cfg=cfg, aqua=aqua,
+                                   positions=positions, lengths=lengths,
+                                   causal=causal)
+    out = out.astype(v.dtype)
     out = jnp.einsum("bskgd,kgdm->bsm", out, params["wo"].astype(x.dtype))
     if return_aux:
         aux = {"q": q, "k": k, "weights": weights,
-               "q_hat": qh if mask is not None else None,
-               "k_hat": kh if mask is not None else None}
+               "q_hat": qh if aqua_on else None,
+               "k_hat": kh if aqua_on else None}
         return out, aux
     return out
 
@@ -320,8 +547,18 @@ def prefill_attention(params: dict, x: jax.Array, cfg: AttentionConfig,
 def build_cache_from_prefill(params: dict, x: jax.Array, cfg: AttentionConfig,
                              aqua: Optional[AquaConfig],
                              proj: Optional[jax.Array],
-                             max_seq: int) -> kv.AttnCache:
-    """Construct the decode cache after a prefill pass (serving engine)."""
+                             max_seq: int,
+                             lengths: Optional[jax.Array] = None
+                             ) -> kv.AttnCache:
+    """Construct the decode cache after a prefill pass (serving engine).
+
+    ``lengths`` (B,) marks ragged rows: their ``count`` starts at the valid
+    prefix length, so decode masks the padding keys and the next token
+    lands at the right position/slot. Only the contiguous full-cache
+    policy places ragged rows coherently — window rings and H2O eviction
+    place slots assuming a rectangular batch, so combining them with
+    ``lengths`` raises rather than silently corrupting generations.
+    """
     b, s, _ = x.shape
     positions = jnp.arange(s, dtype=jnp.int32)
     q, k, v = qkv(params, x, cfg, positions)
@@ -333,6 +570,14 @@ def build_cache_from_prefill(params: dict, x: jax.Array, cfg: AttentionConfig,
     h2o_budget = None
     if aqua is not None and aqua.h2o_ratio < 1.0:
         h2o_budget = max(8, int(aqua.h2o_ratio * max_seq))
+    if lengths is not None and (cfg.window is not None
+                                or h2o_budget is not None):
+        raise ValueError(
+            "ragged `lengths` require the contiguous full-cache policy; "
+            "sliding-window and H2O caches place slots assuming a "
+            "rectangular batch — prefill unpadded rows separately or drop "
+            "`lengths`")
+    count = jnp.full((b,), s, jnp.int32) if lengths is None else lengths
     slots = kv.cache_slots(max_seq, cfg.window, h2o_budget)
     cache = kv.init_attn_cache(b, cfg.num_kv_heads, slots, dk, dv, k.dtype)
 
@@ -380,7 +625,7 @@ def build_cache_from_prefill(params: dict, x: jax.Array, cfg: AttentionConfig,
         k=cache.k.at[:, :, slot_idx].set(k[:, start:].transpose(0, 2, 1, 3)),
         v=cache.v.at[:, :, slot_idx].set(v[:, start:].transpose(0, 2, 1, 3)),
         positions=cache.positions.at[:, slot_idx].set(tok_pos[None]),
-        count=jnp.full((b,), s, jnp.int32),
+        count=count,
         acc_score=cache.acc_score,
     )
     return cache
@@ -420,14 +665,12 @@ def decode_attention(params: dict, x_t: jax.Array, cache: kv.AttnCache,
     q, k_t, v_t = q[:, 0], k[:, 0], v[:, 0]  # (B,KV,G,D), (B,KV,D)
 
     head_dim = cfg.head_dim
-    mask = None
-    if aqua is not None and aqua.enabled:
+    aqua_on = aqua is not None and aqua.enabled
+    if aqua_on:
         qh = jnp.einsum("bkgd,kde->bkge", q, proj.astype(q.dtype))
         kh = jnp.einsum("bkd,kde->bke", k_t, proj.astype(k_t.dtype))
         kept = aqua.kept_dims(head_dim)
         q, k_t = qh[..., :kept], kh[..., :kept]
-        mask = aqua_lib.magnitude_mask(q, aqua.topk_dims(head_dim),
-                                       block_dims=aqua.block_dims)
 
     h2o = aqua is not None and aqua.enabled and aqua.h2o_ratio < 1.0
     recent_len = 0
@@ -437,7 +680,19 @@ def decode_attention(params: dict, x_t: jax.Array, cache: kv.AttnCache,
                           recent_len=recent_len)
     cache = kv.insert(cache, slot, k_t, v_t)
 
-    qq = q if mask is None else q * mask
+    # Registry dispatch: the block-sparse decode kernel serves the
+    # contiguous full-cache policy (no ring buffer, no eviction — those
+    # need the masked-dense path's per-slot position masking / weights).
+    backend = resolve_backend(cfg.backend, aqua=aqua)
+    if (backend.decode is not None and aqua_on and not h2o
+            and cfg.window is None and aqua.block_dims > 1
+            and q.shape[-1] % aqua.block_dims == 0):
+        out = backend.decode(q, cache, cfg=cfg, aqua=aqua)
+        out = jnp.einsum("bkgd,kgdm->bm", out, params["wo"].astype(x_t.dtype))
+        return out, cache
+
+    # masked-dense reference: materialize the per-query magnitude mask
+    qq = q * _aqua_mask(q, aqua, head_dim) if aqua_on else q
     scores = jnp.einsum("bkgd,bksd->bkgs", qq, cache.k.astype(qq.dtype))
     scores = scores.astype(jnp.float32) / jnp.sqrt(float(head_dim))
     vm = kv.valid_mask(cache, window=cfg.window)  # (B, S_slots)

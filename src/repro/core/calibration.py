@@ -9,7 +9,6 @@ a QK dot product (SSM blocks, cross-attention) get identity entries.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Callable, Iterable, List, Optional
 
@@ -18,7 +17,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import aqua as aqua_lib
 
 
 @jax.tree_util.register_dataclass

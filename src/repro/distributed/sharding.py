@@ -19,7 +19,7 @@ without per-arch hand-tuning.
 from __future__ import annotations
 
 import math
-from typing import Optional, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -198,7 +198,10 @@ def decode_state_pspec(path, shape, mesh: Mesh, *,
     slot_axes = tuple(
         (() if batch_shardable else dp)
         + (() if kv_shardable else (model_axis,)))
-    slot_ax = slot_axes if slot_axes else None
+    # canonicalize: bare axis name for singletons (PartitionSpec equality
+    # distinguishes "model" from ("model",))
+    slot_ax = (slot_axes[0] if len(slot_axes) == 1 else slot_axes) \
+        if slot_axes else None
     lead = nd - base if base is not None else 0
     pad = [None] * lead
 

@@ -79,12 +79,12 @@ def _kernel(idx_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("block_dims", "seq_blk",
-                                             "interpret"))
+                                             "scale", "interpret"))
 def aqua_decode_attention(q_sel: jax.Array, khat_blocks: jax.Array,
                           v: jax.Array, block_idx: jax.Array,
                           lengths: jax.Array, *, block_dims: int = 8,
-                          seq_blk: int = 128,
-                          interpret: bool = True) -> jax.Array:
+                          seq_blk: int = 128, scale=None,
+                          interpret=None) -> jax.Array:
     """Block-sparse AQUA decode attention.
 
     q_sel:       (B, H, NB_sel, bd)  — query, pre-gathered selected blocks
@@ -92,8 +92,13 @@ def aqua_decode_attention(q_sel: jax.Array, khat_blocks: jax.Array,
     v:           (B, KV, S, Dv)
     block_idx:   (B, H, NB_sel) int32 — selected dim-block ids (sorted)
     lengths:     (B,) int32 — valid cache length per row
+    scale:       score scale; defaults to 1/sqrt(NB_total * bd). Pass
+                 1/sqrt(head_dim) when k̂ is statically sliced (AQUA-Memory)
+                 — the paper approximates *full* head-dim scores.
+    interpret:   None -> resolved by runtime_flags (compiled iff on TPU)
     returns out: (B, H, Dv)
     """
+    from repro import runtime_flags as _rtf
     b, h, nb_sel, bd = q_sel.shape
     _, kvh, nb_total, bd2, s = khat_blocks.shape
     assert bd == bd2 == block_dims
@@ -101,9 +106,10 @@ def aqua_decode_attention(q_sel: jax.Array, khat_blocks: jax.Array,
     g = h // kvh
     assert s % seq_blk == 0, (s, seq_blk)
     nsb = s // seq_blk
-    # scale by the FULL head-dim sqrt: the paper approximates full scores.
-    d_full = nb_total * bd
-    scale = 1.0 / (d_full ** 0.5)
+    if scale is None:
+        # scale by the FULL head-dim sqrt of the projected cache.
+        scale = 1.0 / ((nb_total * bd) ** 0.5)
+    interpret = _rtf.resolve_interpret(interpret)
 
     grid = (b, h, nsb, nb_sel)
 

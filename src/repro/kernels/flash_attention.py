@@ -67,8 +67,14 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                                              "k_blk", "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window=None, q_blk: int = 128,
-                    k_blk: int = 128, interpret: bool = True) -> jax.Array:
-    """q: (B, H, S, D); k, v: (B, KV, S, D). Returns (B, H, S, D)."""
+                    k_blk: int = 128, interpret=None) -> jax.Array:
+    """q: (B, H, S, D); k, v: (B, KV, S, D). Returns (B, H, S, D).
+
+    ``interpret=None`` resolves via runtime_flags: compiled on TPU,
+    interpreted elsewhere.
+    """
+    from repro import runtime_flags as _rtf
+    interpret = _rtf.resolve_interpret(interpret)
     b, h, s, d = q.shape
     kvh = k.shape[1]
     g = h // kvh

@@ -1,19 +1,31 @@
 """jit'd public wrappers around the Pallas kernels.
 
-``aqua_decode`` takes model-layout tensors (seq-major cache), handles the
-dim-major restructuring, padding, query-block gathering and top-k selection,
-and dispatches to the kernel. On CPU the kernels run in interpret mode.
+``aqua_decode`` / ``aqua_prefill`` take model-layout tensors (seq-major
+cache), handle the dim-major restructuring, padding, query-block gathering
+and top-k selection, and dispatch to the kernels. ``interpret=None``
+auto-resolves via :mod:`repro.runtime_flags` — compiled on TPU,
+interpreted elsewhere — so the same call sites serve production and CI.
+
+Dim-major cache layout contract (shared with ``repro.core.kvcache``):
+the projected key cache is stored seq-major ``(B, KV, S, D)`` at the
+model layer and viewed dim-major ``(B, KV, NB, bd, S)`` by the kernels,
+where ``NB = D // bd`` dim-blocks of ``bd`` sublanes each span the full
+lane-dim sequence stripe. Magnitude selection picks whole dim-blocks, so
+the kernels stream only the selected ``NB_sel`` stripes HBM→VMEM.
 """
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import aqua as aqua_lib
+from repro.core.aqua import ceil_to as _ceil_to
 from repro.kernels.aqua_decode import aqua_decode_attention
+from repro.kernels.aqua_prefill import aqua_prefill_attention
 from repro.kernels.flash_attention import flash_attention  # noqa: F401
 
 
@@ -31,12 +43,24 @@ def to_dim_major_blocks(khat: jax.Array, block_dims: int) -> jax.Array:
     return kt.reshape(b, kvh, nb, block_dims, s)
 
 
+def round_k_dims(d: int, k_ratio: float, block_dims: int) -> int:
+    """Kept-dim count for a k_ratio: rounded to the nearest dim count, then
+    up to a whole number of dim-blocks, clamped to [block_dims, d]. The
+    single source of truth shared by the kernel wrappers, oracles and
+    benchmarks."""
+    k_dims = max(block_dims, int(round(k_ratio * d)))
+    k_dims = ((k_dims + block_dims - 1) // block_dims) * block_dims
+    return min(k_dims, d)
+
+
 @functools.partial(jax.jit, static_argnames=("k_ratio", "block_dims",
-                                             "seq_blk", "interpret"))
+                                             "seq_blk", "scale",
+                                             "interpret"))
 def aqua_decode(q_hat: jax.Array, khat: jax.Array, v: jax.Array,
                 lengths: jax.Array, *, k_ratio: float = 0.75,
                 block_dims: int = 8, seq_blk: int = 128,
-                interpret: bool = True) -> jax.Array:
+                scale: Optional[float] = None,
+                interpret: Optional[bool] = None) -> jax.Array:
     """End-to-end AQUA decode attention (selection + kernel).
 
     q_hat: (B, H, D) projected query; khat: (B, KV, S, D) projected key
@@ -45,9 +69,7 @@ def aqua_decode(q_hat: jax.Array, khat: jax.Array, v: jax.Array,
     b, h, d = q_hat.shape
     s = khat.shape[2]
     nb = d // block_dims
-    k_dims = max(block_dims, int(round(k_ratio * d)))
-    k_dims = ((k_dims + block_dims - 1) // block_dims) * block_dims
-    k_dims = min(k_dims, d)
+    k_dims = round_k_dims(d, k_ratio, block_dims)
 
     block_idx = aqua_lib.topk_block_indices(q_hat, k_dims, block_dims)
     # gather the selected q blocks (tiny: H × k elements)
@@ -61,4 +83,59 @@ def aqua_decode(q_hat: jax.Array, khat: jax.Array, v: jax.Array,
     khat_blocks = to_dim_major_blocks(khat, block_dims)
     return aqua_decode_attention(q_sel, khat_blocks, v, block_idx, lengths,
                                  block_dims=block_dims, seq_blk=seq_blk,
-                                 interpret=interpret)
+                                 scale=scale, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("k_ratio", "block_dims",
+                                             "q_blk", "k_blk", "causal",
+                                             "window", "scale", "interpret"))
+def aqua_prefill(q_hat: jax.Array, khat: jax.Array, v: jax.Array,
+                 lengths: Optional[jax.Array] = None, *,
+                 k_ratio: float = 0.75, block_dims: int = 8,
+                 q_blk: int = 128, k_blk: int = 128, causal: bool = True,
+                 window: Optional[int] = None,
+                 scale: Optional[float] = None,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """End-to-end AQUA block-sparse chunked-prefill attention.
+
+    Queries are processed in seq-chunks of ``q_blk``; each chunk shares the
+    dim-block set selected from its aggregated |q̂| magnitudes (see
+    :func:`repro.core.aqua.chunk_topk_block_indices`), so only
+    ``k_ratio`` of the dim-major key stripes are streamed per tile. The
+    masked-dense oracle is :func:`repro.kernels.ref.aqua_prefill_ref`.
+
+    q_hat: (B, H, S, D) projected queries (head-major kernel layout);
+    khat: (B, KV, S, D) projected keys (seq-major); v: (B, KV, S, Dv);
+    lengths: (B,) valid lengths (None -> all rows full). Returns
+    (B, H, S, Dv); rows at/beyond a row's length are don't-care.
+    """
+    b, h, s, d = q_hat.shape
+    if lengths is None:
+        lengths = jnp.full((b,), s, jnp.int32)
+
+    # clamp chunk sizes for short sequences, then pad S so both divide it
+    q_blk = min(q_blk, _ceil_to(s, 8))
+    k_blk = min(k_blk, _ceil_to(s, 8))
+    spad = _ceil_to(s, math.lcm(q_blk, k_blk))
+    pad = spad - s
+    if pad:
+        q_hat = jnp.pad(q_hat, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        khat = jnp.pad(khat, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nqc = spad // q_blk
+    nb = d // block_dims
+    k_dims = round_k_dims(d, k_ratio, block_dims)
+
+    block_idx = aqua_lib.chunk_topk_block_indices(q_hat, k_dims, block_dims,
+                                                  q_blk, lengths)
+    # gather selected q dim-blocks per chunk: (B,H,NQC,NB_sel,q_blk,bd)
+    qb = q_hat.reshape(b, h, nqc, q_blk, nb, block_dims
+                       ).transpose(0, 1, 2, 4, 3, 5)
+    q_sel = jnp.take_along_axis(qb, block_idx[..., None, None], axis=3)
+
+    khat_blocks = to_dim_major_blocks(khat, block_dims)
+    out = aqua_prefill_attention(q_sel, khat_blocks, v, block_idx, lengths,
+                                 block_dims=block_dims, q_blk=q_blk,
+                                 k_blk=k_blk, causal=causal, window=window,
+                                 scale=scale, interpret=interpret)
+    return out[:, :, :s]

@@ -34,6 +34,47 @@ def aqua_decode_ref(q_hat: jax.Array, khat: jax.Array, v: jax.Array,
     return out.reshape(b, h, -1).astype(v.dtype)
 
 
+def aqua_prefill_ref(q_hat: jax.Array, khat: jax.Array, v: jax.Array,
+                     block_idx: jax.Array, lengths: jax.Array,
+                     block_dims: int, q_chunk: int, *, causal: bool = True,
+                     window: Optional[int] = None,
+                     scale: Optional[float] = None) -> jax.Array:
+    """Masked-dense oracle for the block-sparse chunked-prefill kernel.
+
+    Every query in a chunk shares the chunk's selected dim-block set
+    (masked-q identity: zeroing unselected q̂ dims equals not streaming the
+    matching K̂ dim-blocks).
+
+    q_hat: (B, H, S, D); khat: (B, KV, S, D) seq-major; v: (B, KV, S, Dv);
+    block_idx: (B, H, S // q_chunk, NB_sel); lengths: (B,).
+    Returns (B, H, S, Dv).
+    """
+    b, h, s, d = q_hat.shape
+    kvh = khat.shape[1]
+    g = h // kvh
+    nb = d // block_dims
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    sel = jax.nn.one_hot(block_idx, nb, dtype=jnp.float32).sum(3)  # B,H,NQC,NB
+    mask = jnp.repeat(jnp.minimum(sel, 1.0), block_dims, axis=-1)  # ...,D
+    mask = jnp.repeat(mask, q_chunk, axis=2)                       # B,H,S,D
+    qm = (q_hat.astype(jnp.float32) * mask).reshape(b, kvh, g, s, d)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qm,
+                        khat.astype(jnp.float32)) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    m = jnp.broadcast_to(kpos < lengths[:, None, None, None, None],
+                         (b, 1, 1, s, s))
+    if causal:
+        m = m & (qpos >= kpos)
+    if window is not None:
+        m = m & (kpos > qpos - window)
+    scores = jnp.where(m, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", w, v.astype(jnp.float32))
+    return out.reshape(b, h, s, -1).astype(v.dtype)
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = True,
                         window: Optional[int] = None) -> jax.Array:

@@ -9,7 +9,6 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
-from functools import partial
 from typing import Any, Optional
 
 import jax

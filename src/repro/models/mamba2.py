@@ -6,8 +6,6 @@ O(1) state instead of a KV cache, which is why this arch runs the
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

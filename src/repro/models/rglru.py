@@ -8,7 +8,6 @@ window + O(1) recurrent state make this arch run ``long_500k``.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional, Tuple
 
 import jax

@@ -8,7 +8,7 @@ models only).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -59,15 +59,20 @@ def ffn_apply(cfg: ModelConfig, p: dict, x: jax.Array
 
 def block_forward(cfg: ModelConfig, p: dict, x: jax.Array,
                   positions: jax.Array, proj: Optional[jax.Array],
-                  capture: bool = False):
+                  capture: bool = False,
+                  lengths: Optional[jax.Array] = None):
+    """One block. Attention dispatches through the backend registry in
+    ``repro.core.attention`` (``cfg.attention.backend``); ``lengths``
+    threads ragged per-row valid lengths into the prefill kernels."""
     aqua = cfg.aqua
     h_in = L.rms_norm(x, p["ln1"], cfg.norm_eps)
     if capture:
         h, aux = attn.prefill_attention(p["attn"], h_in, cfg.attention, aqua,
-                                        proj, positions, return_aux=True)
+                                        proj, positions, return_aux=True,
+                                        lengths=lengths)
     else:
         h = attn.prefill_attention(p["attn"], h_in, cfg.attention, aqua,
-                                   proj, positions)
+                                   proj, positions, lengths=lengths)
         aux = None
     x = x + h
     f, aux_loss = ffn_apply(cfg, p["ffn"], L.rms_norm(x, p["ln2"], cfg.norm_eps))
@@ -194,20 +199,30 @@ class DenseLM(LM):
         cfg = self.cfg
         x = self._embed(params, batch)
         positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+        # optional ragged prompts: batch["lengths"] (B,) valid prefix sizes
+        lengths = batch.get("lengths")
 
         def body(xc, layer_in):
             p_i, proj_i = layer_in
-            y, _, _ = block_forward(cfg, p_i, xc, positions, proj_i)
+            y, _, _ = block_forward(cfg, p_i, xc, positions, proj_i,
+                                    lengths=lengths)
             cache = attn.build_cache_from_prefill(
                 p_i["attn"], L.rms_norm(xc, p_i["ln1"], cfg.norm_eps),
-                cfg.attention, cfg.aqua, proj_i, max_seq)
+                cfg.attention, cfg.aqua, proj_i, max_seq, lengths=lengths)
             return y, cache
         if aqua_proj is None:
             x, caches = _scan(lambda c, p_i: body(c, (p_i, None)),
                                      x, params["layers"])
         else:
             x, caches = _scan(body, x, (params["layers"], aqua_proj))
-        logits = self._unembed(params, L.rms_norm(x[:, -1:], params["ln_f"],
+        if lengths is None:
+            x_last = x[:, -1:]
+        else:
+            # ragged rows: next-token logits come from each row's last
+            # *valid* token, not the padding tail
+            idx = jnp.clip(lengths - 1, 0, x.shape[1] - 1)
+            x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        logits = self._unembed(params, L.rms_norm(x_last, params["ln_f"],
                                                   cfg.norm_eps))[:, 0]
         return logits, DecodeState(layers=caches, extra={})
 

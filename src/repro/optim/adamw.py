@@ -2,7 +2,6 @@
 regardless of param dtype). Pure-pytree implementation (no optax)."""
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Any, Tuple
 

@@ -1,4 +1,4 @@
-"""Process-wide analysis flags.
+"""Process-wide analysis + dispatch flags.
 
 ``UNROLL_SCANS``: XLA's HloCostAnalysis counts a while-loop body ONCE, not
 ×trip-count (verified empirically — see EXPERIMENTS.md §Roofline/method).
@@ -7,6 +7,20 @@ roofline dry-run sets this flag so every scan (layer stack, microbatch
 accumulation, chunked-attention blocks) lowers fully unrolled and
 cost_analysis reports true FLOPs/bytes. Compile is slower; numbers are
 honest. The multi-pod feasibility sweep keeps scans rolled.
+
+Pallas dispatch flags (set before first jit; they are read at trace time):
+
+``INTERPRET_OVERRIDE``: force Pallas interpret mode on (True) or off
+(False). ``None`` auto-resolves: compiled on TPU, interpreted elsewhere —
+so the exact same kernel code path runs compiled in production and
+interpreted in CI.
+
+``PALLAS_OVERRIDE``: force the attention backend registry's view of Pallas
+availability. ``None`` = auto (available iff the pallas module imports);
+``False`` simulates an install without Pallas (the registry then falls
+back to the masked-dense jnp reference); ``True`` additionally makes the
+``auto`` backend choice prefer the Pallas kernels even off-TPU (interpret
+mode — useful for kernel-path testing on CPU).
 """
 
 UNROLL_SCANS = False
@@ -18,6 +32,9 @@ UNROLL_SCANS = False
 # tractable. None = production sizes.
 ATTN_BLOCK_OVERRIDE = None  # Optional[Tuple[int, int]]
 
+INTERPRET_OVERRIDE = None   # Optional[bool]
+PALLAS_OVERRIDE = None      # Optional[bool]
+
 
 def scan_kwargs() -> dict:
     return {"unroll": True} if UNROLL_SCANS else {}
@@ -27,3 +44,44 @@ def attn_blocks(q_blk: int, k_blk: int):
     if ATTN_BLOCK_OVERRIDE is not None:
         return ATTN_BLOCK_OVERRIDE
     return q_blk, k_blk
+
+
+def on_tpu() -> bool:
+    """True when the default JAX backend is a TPU."""
+    import jax
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # backend init failure -> definitely not a TPU
+        return False
+
+
+def pallas_available() -> bool:
+    """Can a Pallas kernel run at all (compiled on TPU, else interpret)?"""
+    if PALLAS_OVERRIDE is not None:
+        return PALLAS_OVERRIDE
+    try:
+        from jax.experimental import pallas  # noqa: F401
+    except Exception:
+        return False
+    return True
+
+
+def kernels_preferred() -> bool:
+    """Should the ``auto`` backend choice pick Pallas kernels?
+
+    Compiled kernels on TPU, jnp reference paths elsewhere — unless
+    ``PALLAS_OVERRIDE`` forces the kernel (interpret) path for testing.
+    """
+    if not pallas_available():
+        return False
+    return on_tpu() or PALLAS_OVERRIDE is True
+
+
+def resolve_interpret(interpret=None) -> bool:
+    """Resolve a kernel's ``interpret`` argument: explicit value wins, then
+    ``INTERPRET_OVERRIDE``, then auto-detect (compiled iff on TPU)."""
+    if interpret is not None:
+        return bool(interpret)
+    if INTERPRET_OVERRIDE is not None:
+        return bool(INTERPRET_OVERRIDE)
+    return not on_tpu()

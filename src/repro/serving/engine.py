@@ -5,11 +5,22 @@ step functions (optionally pjit over a mesh), greedy/temperature sampling,
 continuous token accounting, and per-request length tracking. The paper's
 deployment story — calibrate once, serve with a chosen (k_ratio, s_ratio,
 h2o_ratio) operating point — is a constructor argument.
+
+Attention backend: both prefill and decode flow through the backend
+registry in ``repro.core.attention`` (selected by
+``cfg.attention.backend``, overridable per-engine via the ``backend``
+constructor argument). On TPU the AQUA block-sparse chunked-prefill and
+decode kernels stream only the selected key dim-blocks; off-TPU the
+engine automatically serves from the masked-dense jnp reference. Prompt
+batches may carry a ``"lengths"`` (B,) entry for ragged prefill: attention
+masks each row's padding and decode resumes from the row's true prefix
+length. Supported for dense-transformer families (dense/vlm/moe) with the
+contiguous full-cache policy only — other combinations raise rather than
+silently attending padding.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Dict, List, Optional
 
 import jax
@@ -19,7 +30,6 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.calibration import AquaProjections
 from repro.models import build_model
-from repro.models.base import DecodeState
 
 
 @dataclasses.dataclass
@@ -31,7 +41,15 @@ class GenerationResult:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params,
                  projections: Optional[AquaProjections] = None,
-                 max_seq: int = 4096, rng_seed: int = 0):
+                 max_seq: int = 4096, rng_seed: int = 0,
+                 backend: Optional[str] = None):
+        if backend is not None and cfg.attention is not None:
+            from repro.core.attention import resolve_backend
+            # fail fast on unknown names; accepts the "auto" selector
+            resolve_backend(backend, aqua=cfg.aqua)
+            cfg = dataclasses.replace(
+                cfg, attention=dataclasses.replace(cfg.attention,
+                                                   backend=backend))
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params
@@ -61,6 +79,12 @@ class ServeEngine:
     def generate(self, batch: Dict[str, jax.Array], steps: int,
                  temperature: float = 0.0) -> GenerationResult:
         """batch: prompt inputs ({"tokens": (B, S_prompt), ...})."""
+        if "lengths" in batch and self.cfg.family not in ("dense", "vlm",
+                                                          "moe"):
+            raise ValueError(
+                "ragged `lengths` prefill is only supported by the "
+                "dense-transformer families (dense/vlm/moe); "
+                f"{self.cfg.family!r} prefill is rectangular")
         logits, state = self._prefill(self.params, batch, self.proj)
         out: List[np.ndarray] = []
         tok = self._sample(logits, temperature)

@@ -1,12 +1,10 @@
 """Attention core: chunked==dense, AQUA prefill/decode equivalences,
 cache-building correctness."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import AquaConfig, AttentionConfig
 from repro.core import attention as A

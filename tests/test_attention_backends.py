@@ -1,0 +1,345 @@
+"""Attention backend registry: resolution/fallback policy and parametrized
+equivalence of the aqua-block-sparse prefill against the masked-dense
+reference across GQA group sizes, k_ratio values, and ragged lengths."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import runtime_flags as rtf
+from repro.configs.base import AquaConfig, AttentionConfig
+from repro.core import attention as A
+from repro.core import kvcache as kv
+from repro.kernels.ops import aqua_prefill, round_k_dims
+from repro.kernels.ref import aqua_prefill_ref
+from repro.core.aqua import chunk_topk_block_indices
+
+
+def _params(acfg, d_model=32, seed=0):
+    return A.init_attention_params(jax.random.PRNGKey(seed), d_model, acfg)
+
+
+def _ortho_proj(kvh, d, seed=3):
+    m = jax.random.normal(jax.random.PRNGKey(seed), (d, d))
+    q, _ = jnp.linalg.qr(m)
+    return jnp.broadcast_to(q, (kvh, d, d))
+
+
+# ---------------------------------------------------------------------------
+# registry / resolution policy
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_all_builtin_backends():
+    assert set(A.available_backends()) >= {
+        "dense-jnp", "flash", "aqua-masked-dense", "aqua-block-sparse"}
+
+
+def test_unknown_backend_raises_with_available_list():
+    with pytest.raises(KeyError, match="dense-jnp"):
+        A.get_backend("does-not-exist")
+
+
+def test_auto_resolution_off_tpu_prefers_jnp_references():
+    assert A.resolve_backend("auto").name == "dense-jnp"
+    assert A.resolve_backend("auto", aqua=AquaConfig()).name == \
+        "aqua-masked-dense"
+    assert A.resolve_backend("auto",
+                             aqua=AquaConfig(enabled=False)).name == \
+        "dense-jnp"
+
+
+def test_auto_resolution_prefers_kernels_when_forced(monkeypatch):
+    monkeypatch.setattr(rtf, "PALLAS_OVERRIDE", True)
+    assert A.resolve_backend("auto").name == "flash"
+    assert A.resolve_backend("auto", aqua=AquaConfig()).name == \
+        "aqua-block-sparse"
+
+
+def test_kernel_backends_fall_back_when_pallas_unavailable(monkeypatch):
+    monkeypatch.setattr(rtf, "PALLAS_OVERRIDE", False)
+    assert A.resolve_backend("flash").name == "dense-jnp"
+    assert A.resolve_backend("aqua-block-sparse",
+                             aqua=AquaConfig()).name == "aqua-masked-dense"
+    assert A.resolve_backend("auto", aqua=AquaConfig()).name == \
+        "aqua-masked-dense"
+
+
+def test_aqua_native_backend_without_aqua_degrades_to_dense():
+    assert A.resolve_backend("aqua-block-sparse", aqua=None).name == \
+        "dense-jnp"
+
+
+def test_prefill_runs_under_fallback(monkeypatch):
+    """Explicit kernel backend + no Pallas must still produce finite output
+    through the masked-dense reference."""
+    monkeypatch.setattr(rtf, "PALLAS_OVERRIDE", False)
+    acfg = AttentionConfig(num_heads=2, num_kv_heads=2, head_dim=16,
+                           backend="aqua-block-sparse")
+    p = _params(acfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 12, 32))
+    out = A.prefill_attention(p, x, acfg, AquaConfig(block_dims=8),
+                              _ortho_proj(2, 16))
+    assert np.isfinite(np.asarray(out)).all()
+
+
+# ---------------------------------------------------------------------------
+# ops-level equivalence: block-sparse kernel vs masked-dense reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("g", [1, 2, 4])            # GQA group sizes
+@pytest.mark.parametrize("k_ratio", [0.5, 0.75, 1.0])
+@pytest.mark.parametrize("ragged", [False, True])
+def test_block_sparse_prefill_matches_masked_dense(g, k_ratio, ragged):
+    b, kvh, s, d = 2, 2, 64, 32
+    h = kvh * g
+    ks = jax.random.split(jax.random.PRNGKey(17), 3)
+    q = jax.random.normal(ks[0], (b, h, s, d))
+    khat = jax.random.normal(ks[1], (b, kvh, s, d))
+    v = jax.random.normal(ks[2], (b, kvh, s, d))
+    lengths = jnp.full((b,), s, jnp.int32)
+    if ragged:
+        lengths = jnp.array([s - 19, s - 2], jnp.int32)
+    q_blk = 16
+    out = aqua_prefill(q, khat, v, lengths, k_ratio=k_ratio, block_dims=8,
+                       q_blk=q_blk, k_blk=16)
+    k_dims = round_k_dims(d, k_ratio, 8)
+    bi = chunk_topk_block_indices(q, k_dims, 8, q_blk, lengths)
+    ref = aqua_prefill_ref(q, khat, v, bi, lengths, 8, q_blk)
+    valid = jnp.arange(s) < lengths[:, None]
+    np.testing.assert_allclose(
+        np.asarray(jnp.where(valid[:, None, :, None], out, 0)),
+        np.asarray(jnp.where(valid[:, None, :, None], ref, 0)),
+        rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# registry-level equivalence through prefill_attention / decode_attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("heads,kvh", [(2, 2), (4, 2), (4, 1)])
+def test_full_ratio_block_sparse_equals_standard_attention(heads, kvh):
+    """k_ratio=1.0 + orthogonal P: the block-sparse path must reproduce
+    exact attention (paper Lemma A.4) regardless of chunking."""
+    d = 16
+    acfg = AttentionConfig(num_heads=heads, num_kv_heads=kvh, head_dim=d)
+    p = _params(acfg)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 24, 32))
+    aq = AquaConfig(k_ratio=1.0, block_dims=8, prefill_q_blk=8,
+                    prefill_k_blk=8)
+    out_std = A.prefill_attention(p, x, acfg)
+    out_bs = A.prefill_attention(
+        p, x, dataclasses.replace(acfg, backend="aqua-block-sparse"), aq,
+        _ortho_proj(kvh, d))
+    np.testing.assert_allclose(np.asarray(out_bs), np.asarray(out_std),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_backend_matches_dense_backend():
+    acfg = AttentionConfig(num_heads=4, num_kv_heads=2, head_dim=8)
+    p = _params(acfg)
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 24, 32))
+    out_d = A.prefill_attention(
+        p, x, dataclasses.replace(acfg, backend="dense-jnp"))
+    out_f = A.prefill_attention(
+        p, x, dataclasses.replace(acfg, backend="flash"))
+    np.testing.assert_allclose(np.asarray(out_d), np.asarray(out_f),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ragged_lengths_through_prefill_attention():
+    """Rows must be independent: row b's output on its valid prefix equals
+    the output of prefilling that prefix alone."""
+    acfg = AttentionConfig(num_heads=2, num_kv_heads=2, head_dim=16,
+                           backend="aqua-block-sparse")
+    p = _params(acfg)
+    aq = AquaConfig(k_ratio=0.75, block_dims=8, prefill_q_blk=8,
+                    prefill_k_blk=8)
+    proj = _ortho_proj(2, 16)
+    s, short = 32, 20
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, s, 32))
+    lengths = jnp.array([short, s], jnp.int32)
+    out = A.prefill_attention(p, x, acfg, aq, proj, lengths=lengths)
+    out_solo = A.prefill_attention(p, x[:1, :short], acfg, aq, proj)
+    np.testing.assert_allclose(np.asarray(out[0, :short]),
+                               np.asarray(out_solo[0]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_decode_dispatch_matches_masked_dense_reference():
+    """Block-sparse decode kernel vs jnp masked-dense at block_dims=8 —
+    identical selection, so outputs agree to kernel fp tolerance."""
+    d = 16
+    acfg = AttentionConfig(num_heads=4, num_kv_heads=2, head_dim=d)
+    p = _params(acfg)
+    aq = AquaConfig(k_ratio=0.75, block_dims=8)
+    proj = _ortho_proj(2, d)
+    c_bs = kv.init_attn_cache(2, 2, 16, d, d, jnp.float32)
+    c_md = kv.init_attn_cache(2, 2, 16, d, d, jnp.float32)
+    cfg_bs = dataclasses.replace(acfg, backend="aqua-block-sparse")
+    cfg_md = dataclasses.replace(acfg, backend="aqua-masked-dense")
+    for t in range(5):
+        xt = jax.random.normal(jax.random.PRNGKey(20 + t), (2, 32))
+        o1, c_bs = A.decode_attention(p, xt, c_bs, cfg_bs, aq, proj)
+        o2, c_md = A.decode_attention(p, xt, c_md, cfg_md, aq, proj)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(c_bs.k), np.asarray(c_md.k),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_decode_dispatch_falls_back_for_windowed_cache():
+    """Sliding-window caches need per-slot position masking: the registry
+    must route them to the masked-dense decode path (and still be exact)."""
+    d = 16
+    acfg = AttentionConfig(num_heads=2, num_kv_heads=2, head_dim=d,
+                           window=4, backend="aqua-block-sparse")
+    p = _params(acfg)
+    aq = AquaConfig(k_ratio=0.75, block_dims=8)
+    proj = _ortho_proj(2, d)
+    cache = kv.init_attn_cache(1, 2, 4, d, d, jnp.float32)
+    for t in range(6):
+        xt = jax.random.normal(jax.random.PRNGKey(40 + t), (1, 32))
+        out, cache = A.decode_attention(p, xt, cache, acfg, aq, proj)
+        assert np.isfinite(np.asarray(out)).all()
+    assert int(cache.count[0]) == 6
+
+
+def test_ragged_generation_equals_unpadded_generation():
+    """End-to-end ragged serving: a short row in a padded batch must decode
+    the same greedy tokens as prefilling its unpadded prompt alone (logits
+    from the last *valid* token, cache count at the true prefix length)."""
+    from repro.configs import reduced
+    from repro.core.calibration import identity_projections
+    from repro.serving import ServeEngine
+    import numpy as np
+
+    cfg = dataclasses.replace(reduced("qwen3-0.6b"), remat=False,
+                              dtype="float32")
+    cfg = dataclasses.replace(cfg, aqua=AquaConfig(k_ratio=0.75,
+                                                   block_dims=8,
+                                                   prefill_q_blk=8,
+                                                   prefill_k_blk=8))
+    from repro.models import build_model
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    proj = identity_projections(cfg.num_layers, cfg.attention.num_kv_heads,
+                                cfg.attention.head_dim)
+    s, short = 24, 17
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, s), 0,
+                              cfg.vocab_size)
+    eng = ServeEngine(cfg, params, proj, max_seq=64,
+                      backend="aqua-block-sparse")
+    ragged = eng.generate({"tokens": toks,
+                           "lengths": jnp.array([short, s], jnp.int32)},
+                          steps=5)
+    solo = eng.generate({"tokens": toks[:1, :short]}, steps=5)
+    np.testing.assert_array_equal(ragged.tokens[0], solo.tokens[0])
+
+
+def test_chunked_path_handles_ragged_lengths(monkeypatch):
+    """Long ragged prefills must flow through the chunked online-softmax
+    scan (not the materialized S×S path) and still mask per-row tails."""
+    import numpy as np
+    monkeypatch.setattr(A, "CHUNKED_THRESHOLD", 16)
+    acfg = AttentionConfig(num_heads=2, num_kv_heads=2, head_dim=8,
+                           backend="dense-jnp")
+    p = _params(acfg)
+    s, short = 32, 21
+    x = jax.random.normal(jax.random.PRNGKey(8), (2, s, 32))
+    lengths = jnp.array([short, s], jnp.int32)
+    out = A.prefill_attention(p, x, acfg, lengths=lengths)   # chunked
+    out_solo = A.prefill_attention(p, x[:1, :short], acfg)   # dense
+    np.testing.assert_allclose(np.asarray(out[0, :short]),
+                               np.asarray(out_solo[0]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_block_dims1_downgrades_to_flash_at_same_numerics(monkeypatch):
+    """On TPU (kernels preferred) block_dims=1 can't use the block-sparse
+    kernel; it must route to masked-q flash with numerics identical to the
+    masked-dense reference (masked-q identity is exact)."""
+    import numpy as np
+    acfg = AttentionConfig(num_heads=2, num_kv_heads=2, head_dim=16,
+                           backend="aqua-block-sparse")
+    p = _params(acfg)
+    aq = AquaConfig(k_ratio=0.75, block_dims=1)
+    proj = _ortho_proj(2, 16)
+    x = jax.random.normal(jax.random.PRNGKey(9), (1, 16, 32))
+    ref = A.prefill_attention(
+        p, x, dataclasses.replace(acfg, backend="aqua-masked-dense"), aq,
+        proj)
+    monkeypatch.setattr(rtf, "PALLAS_OVERRIDE", True)   # kernels preferred
+    out = A.prefill_attention(p, x, acfg, aq, proj)     # -> masked-q flash
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ragged_lengths_with_window_cache_raises():
+    from repro.core.attention import build_cache_from_prefill
+    acfg = AttentionConfig(num_heads=2, num_kv_heads=2, head_dim=8, window=4)
+    p = _params(acfg)
+    x = jax.random.normal(jax.random.PRNGKey(10), (2, 12, 32))
+    with pytest.raises(ValueError, match="full-cache policy"):
+        build_cache_from_prefill(p, x, acfg, None, None, max_seq=16,
+                                 lengths=jnp.array([8, 12], jnp.int32))
+
+
+def test_ragged_lengths_rejected_for_cross_attention_and_ssm_families():
+    # cross-attention + lengths: self-attn-only semantics -> raise
+    acfg = AttentionConfig(num_heads=2, num_kv_heads=2, head_dim=8)
+    p = _params(acfg)
+    x = jax.random.normal(jax.random.PRNGKey(11), (1, 8, 32))
+    enc = jax.random.normal(jax.random.PRNGKey(12), (1, 6, 32))
+    with pytest.raises(ValueError, match="encoder-side"):
+        A.prefill_attention(p, x, acfg, kv_x=enc,
+                            lengths=jnp.array([4], jnp.int32))
+
+    # non-dense families: engine rejects ragged batches up front
+    from repro.configs import reduced
+    from repro.models import build_model
+    from repro.serving import ServeEngine
+    cfg = dataclasses.replace(reduced("mamba2-370m"), remat=False,
+                              dtype="float32")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, None, max_seq=32)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                              cfg.vocab_size)
+    with pytest.raises(ValueError, match="rectangular"):
+        eng.generate({"tokens": toks,
+                      "lengths": jnp.array([4, 8], jnp.int32)}, steps=1)
+
+
+def test_chunked_attention_pads_non_divisible_sequences():
+    """S not divisible by the block sizes must pad+mask, not assert."""
+    import numpy as np
+    b, s, kvh, g, d = 1, 40, 2, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(13), 3)
+    q = jax.random.normal(ks[0], (b, s, kvh, g, d))
+    k = jax.random.normal(ks[1], (b, s, kvh, d))
+    v = jax.random.normal(ks[2], (b, s, kvh, d))
+    out = A.chunked_attention(q, k, v, head_dim=d, causal=True,
+                              q_blk=16, k_blk=16)          # 40 % 16 != 0
+    sc = jnp.einsum("bskgd,btkd->bkgst", q, k) / np.sqrt(d)
+    mask = jnp.arange(s)[:, None] >= jnp.arange(s)[None, :]
+    sc = jnp.where(mask[None, None, None], sc, -1e30)
+    ref = jnp.einsum("bkgst,btkd->bskgd", jax.nn.softmax(sc, -1), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_engine_accepts_auto_backend_override():
+    from repro.configs import reduced
+    from repro.models import build_model
+    from repro.serving import ServeEngine
+    cfg = dataclasses.replace(reduced("qwen3-0.6b"), remat=False,
+                              dtype="float32")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, None, max_seq=32, backend="auto")
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0,
+                              cfg.vocab_size)
+    r = eng.generate({"tokens": toks}, steps=2)
+    assert r.tokens.shape == (1, 2)

@@ -5,9 +5,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.aqua import topk_block_indices
-from repro.kernels.ops import aqua_decode, flash_attention, to_dim_major_blocks
-from repro.kernels.ref import aqua_decode_ref, flash_attention_ref
+from repro.core.aqua import chunk_topk_block_indices, topk_block_indices
+from repro.kernels.ops import (aqua_decode, aqua_prefill, flash_attention,
+                               round_k_dims, to_dim_major_blocks)
+from repro.kernels.ref import (aqua_decode_ref, aqua_prefill_ref,
+                               flash_attention_ref)
 
 
 def _rand(key, shape, dtype):
@@ -92,3 +94,60 @@ def test_flash_attention_noncausal():
     out = flash_attention(q, k, v, causal=False)
     ref = flash_attention_ref(q, k, v, causal=False)
     np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# AQUA block-sparse chunked prefill
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,kv,s,d,q_blk,k_blk,window", [
+    (1, 2, 2, 64, 32, 16, 16, None),
+    (2, 4, 2, 96, 32, 16, 32, None),    # GQA 2, ragged pad to chunk lcm
+    (2, 8, 2, 128, 64, 32, 32, 24),     # GQA 4 + sliding window
+    (1, 4, 4, 64, 64, 8, 16, None),     # MHA, small chunks
+])
+@pytest.mark.parametrize("k_ratio", [0.5, 0.75, 1.0])
+def test_aqua_prefill_matches_oracle(b, h, kv, s, d, q_blk, k_blk, window,
+                                     k_ratio, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = _rand(ks[0], (b, h, s, d), dtype)
+    khat = _rand(ks[1], (b, kv, s, d), dtype)
+    v = _rand(ks[2], (b, kv, s, d), dtype)
+    lengths = jnp.full((b,), s, jnp.int32).at[0].set(max(1, s - 13))
+    out = aqua_prefill(q, khat, v, lengths, k_ratio=k_ratio, block_dims=8,
+                       q_blk=q_blk, k_blk=k_blk, window=window)
+    k_dims = round_k_dims(d, k_ratio, 8)
+    bi = chunk_topk_block_indices(q, k_dims, 8, q_blk, lengths)
+    ref = aqua_prefill_ref(q, khat, v, bi, lengths, 8, q_blk, window=window)
+    sq = jnp.arange(s) < lengths[:, None]       # compare valid rows only
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(
+        np.asarray(jnp.where(sq[:, None, :, None], out, 0), np.float32),
+        np.asarray(jnp.where(sq[:, None, :, None], ref, 0), np.float32),
+        rtol=tol, atol=tol)
+
+
+def test_aqua_prefill_full_ratio_equals_flash():
+    """k_ratio=1.0 streams every dim-block -> exact causal attention."""
+    ks = jax.random.split(jax.random.PRNGKey(12), 3)
+    b, h, kv, s, d = 1, 4, 2, 128, 32
+    q = _rand(ks[0], (b, h, s, d), jnp.float32)
+    k = _rand(ks[1], (b, kv, s, d), jnp.float32)
+    v = _rand(ks[2], (b, kv, s, d), jnp.float32)
+    out = aqua_prefill(q, k, v, None, k_ratio=1.0, block_dims=8,
+                       q_blk=32, k_blk=32)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_aqua_prefill_chunk1_equals_per_query_selection():
+    """q_blk=1 chunk selection must reduce to the paper's per-query top-k."""
+    ks = jax.random.split(jax.random.PRNGKey(13), 1)[0]
+    q = _rand(ks, (1, 2, 16, 32), jnp.float32)
+    per_chunk = chunk_topk_block_indices(q, 16, 8, 1)
+    per_query = topk_block_indices(q, 16, 8)
+    np.testing.assert_array_equal(np.asarray(per_chunk),
+                                  np.asarray(per_query))

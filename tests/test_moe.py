@@ -4,7 +4,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import reduced
 from repro.models.moe import blocked_dispatch, init_moe_ffn, moe_ffn

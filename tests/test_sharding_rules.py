@@ -1,13 +1,23 @@
 """Unit tests for the sharding rules (divisibility fallbacks) using an
 AbstractMesh (no devices needed)."""
 import jax
-import pytest
 from jax.sharding import AbstractMesh, PartitionSpec as P
 
 from repro.distributed import sharding as sh
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-POD = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+def _abstract_mesh(*axes):
+    """AbstractMesh across JAX signature changes: ((name, size), ...) on
+    0.4.3x, (axis_sizes, axis_names) on newer releases."""
+    try:
+        return AbstractMesh(tuple(axes))
+    except TypeError:
+        return AbstractMesh(tuple(s for _, s in axes),
+                            tuple(n for n, _ in axes))
+
+
+MESH = _abstract_mesh(("data", 16), ("model", 16))
+POD = _abstract_mesh(("pod", 2), ("data", 16), ("model", 16))
 
 
 def _key(name):

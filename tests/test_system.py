@@ -2,7 +2,6 @@
 pipeline works, AQUA degrades gracefully (paper Table 1 direction)."""
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
