@@ -38,6 +38,7 @@ def main(argv=None) -> None:
         fidelity.breakeven,
         fidelity.prefill_backends,
         fidelity.kernel_bandwidth,
+        fidelity.serving_throughput,
     ]
     full_benches = [
         fidelity.fig2_info_retention,

@@ -1,6 +1,8 @@
-"""AQUA-H2O serving (paper §8.3): approximate attention scores drive the
-heavy-hitter eviction statistic; the cache is capped at h2o_ratio of the
-context while decoding stays coherent.
+"""AQUA-H2O continuous-batching serving (paper §8.3 + §8 deployment
+story): calibrate once, pick a (k_ratio, s_ratio, h2o_ratio) operating
+point, then serve mixed-length traffic through the lane scheduler —
+approximate attention scores drive the heavy-hitter eviction statistic
+while requests stream in and out of a fixed set of decode lanes.
 
     PYTHONPATH=src python examples/serve_aqua_h2o.py
 """
@@ -10,11 +12,10 @@ import jax
 import numpy as np
 
 from repro.configs import reduced
-from repro.configs.base import AquaConfig
+from repro.configs.base import AquaConfig, ServingConfig
 from repro.core.calibration import identity_projections
-from repro.data.pipeline import DataConfig, make_batch
+from repro.serving import ContinuousBatchingEngine, Request
 from repro.models import build_model
-from repro.serving import ServeEngine
 
 
 def main():
@@ -25,10 +26,18 @@ def main():
     proj = identity_projections(cfg.num_layers, cfg.attention.num_kv_heads,
                                 cfg.attention.head_dim)
 
-    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=48, global_batch=2)
-    prompt = {"tokens": make_batch(dcfg, 0)["tokens"]}
+    # mixed-length prompts, staggered arrivals (decode-step time units)
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(uid=i, tokens=rng.integers(0, cfg.vocab_size, size=(s,),
+                                           dtype=np.int32),
+                max_new_tokens=8, arrival=float(a))
+        for i, (s, a) in enumerate([(12, 0.0), (48, 0.0), (24, 2.0),
+                                    (8, 5.0), (36, 6.0)])
+    ]
 
-    print(f"{'policy':32s} {'cache slots':>12s} {'cache bytes':>12s}")
+    print(f"{'policy':32s} {'cache bytes':>12s} {'tokens':>7s} "
+          f"{'occupancy':>10s}")
     for name, aqua in [
         ("full attention", None),
         ("AQUA k=0.75", AquaConfig(k_ratio=0.75)),
@@ -38,15 +47,27 @@ def main():
          AquaConfig(k_ratio=0.75, s_ratio=0.25)),
     ]:
         c = dataclasses.replace(cfg, aqua=aqua)
-        eng = ServeEngine(c, params, proj if aqua else None, max_seq=128)
-        res = eng.generate(prompt, steps=8)
-        state = eng.model.init_decode_state(2, 128)
-        from repro.core.kvcache import AttnCache
-        slots = jax.tree.leaves(
-            state.layers.k if not isinstance(state.layers, tuple)
-            else state.layers[0].k)[0].shape[-2]
-        print(f"{name:32s} {slots:12d} {eng.cache_bytes(2):12,d}")
-        assert np.isfinite(res.logits_last).all()
+        eng = ContinuousBatchingEngine(
+            c, params, proj if aqua else None,
+            serving=ServingConfig(max_lanes=3, max_seq=128,
+                                  max_new_tokens=8))
+        outs = eng.run(reqs)
+        assert all(o.finish_reason for o in outs.values())
+        print(f"{name:32s} {eng.cache_bytes():12,d} "
+              f"{eng.stats.tokens_emitted:7d} "
+              f"{eng.stats.mean_occupancy:10.2f}")
+
+    # streaming view of one policy
+    eng = ContinuousBatchingEngine(
+        dataclasses.replace(cfg, aqua=AquaConfig(k_ratio=0.75,
+                                                 h2o_ratio=0.5)),
+        params, proj,
+        serving=ServingConfig(max_lanes=3, max_seq=128, max_new_tokens=8))
+    print("\nstreaming (uid:token):", end=" ")
+    for ev in eng.serve(reqs):
+        print(f"{ev.uid}:{ev.token}" + ("!" if ev.finished else ""),
+              end=" ")
+    print()
 
 
 if __name__ == "__main__":

@@ -212,6 +212,36 @@ def reduce_config(cfg: ModelConfig, *, layers: int = 2, d_model: int = 64,
 
 
 @dataclass(frozen=True)
+class ServingConfig:
+    """Continuous-batching engine knobs (repro.serving).
+
+    A *lane* is one batch row of the shared decode state. Requests are
+    admitted into free lanes and retired independently, so the decode
+    step always runs at the static shape ``(max_lanes,)`` — jit compiles
+    exactly once regardless of traffic.
+    """
+
+    max_lanes: int = 8
+    max_seq: int = 4096
+    # per-request defaults (overridable per Request)
+    max_new_tokens: int = 128
+    temperature: float = 0.0
+    top_k: int = 0               # 0 disables top-k filtering
+    eos_id: int = -1             # -1 disables EOS stop detection
+    pad_id: int = 0              # token reported for inactive lanes
+    # Prompts are right-padded to a multiple of this bucket and prefilled
+    # with ragged ``lengths`` so prefill compiles once per bucket, not once
+    # per prompt length. Policies that reject ragged prefill (sliding
+    # window, H2O eviction) fall back to exact-length prefill.
+    prompt_bucket: int = 16
+
+    def validate(self) -> None:
+        assert self.max_lanes >= 1
+        assert self.max_new_tokens >= 1
+        assert self.prompt_bucket >= 1
+
+
+@dataclass(frozen=True)
 class ShapeConfig:
     """One assigned input-shape cell."""
 

@@ -594,6 +594,10 @@ def build_cache_from_prefill(params: dict, x: jax.Array, cfg: AttentionConfig,
         sc = jnp.einsum("bskgd,btkd->bkgst", qq, k)
         sc = sc.astype(jnp.float32) / jnp.sqrt(float(head_dim))
         causal = positions[:, None] >= positions[None, :]
+        if cfg.window is not None:
+            # combined H2O+window: out-of-window keys never receive mass,
+            # so the heavy-hitter statistic only ranks in-window tokens
+            causal &= positions[None, :] > positions[:, None] - cfg.window
         sc = jnp.where(causal[None, None, None], sc, NEG_INF)
         w = jax.nn.softmax(sc, axis=-1)
         acc = w.sum(axis=(2, 3))  # (B, KV, S) summed over groups & queries
@@ -640,11 +644,17 @@ def decode_attention(params: dict, x_t: jax.Array, cache: kv.AttnCache,
                      cfg: AttentionConfig, aqua: Optional[AquaConfig] = None,
                      proj: Optional[jax.Array] = None,
                      cross: Optional[Tuple[jax.Array, jax.Array]] = None,
+                     write_mask: Optional[jax.Array] = None,
                      ) -> Tuple[jax.Array, kv.AttnCache]:
     """One decode step. x_t: (B, d_model). Returns (out (B, d_model), cache).
 
     ``cross`` = (k_enc, v_enc) each (B, S_enc, KV, D) for cross-attention
     layers (whisper decoder); those bypass the cache entirely.
+
+    ``write_mask`` (B,) bool freezes masked-off rows' cache (no K/V write,
+    no count advance, no H2O accumulation) — the continuous-batching
+    engine's inactive lanes still flow through the batched step at static
+    shape but their state stays bit-identical.
     """
     b = x_t.shape[0]
     if cross is not None:
@@ -678,7 +688,7 @@ def decode_attention(params: dict, x_t: jax.Array, cache: kv.AttnCache,
         recent_len = max(1, int(aqua.h2o_recent_frac * cache.num_slots))
     slot = kv.select_slot(cache, window=cfg.window, h2o=h2o,
                           recent_len=recent_len)
-    cache = kv.insert(cache, slot, k_t, v_t)
+    cache = kv.insert(cache, slot, k_t, v_t, write_mask=write_mask)
 
     # Registry dispatch: the block-sparse decode kernel serves the
     # contiguous full-cache policy (no ring buffer, no eviction — those
@@ -699,7 +709,7 @@ def decode_attention(params: dict, x_t: jax.Array, cache: kv.AttnCache,
     scores = jnp.where(vm[:, None, None, :], scores, NEG_INF)
     weights = jax.nn.softmax(scores, axis=-1)
     if h2o:
-        cache = kv.accumulate_h2o(cache, weights)
+        cache = kv.accumulate_h2o(cache, weights, write_mask=write_mask)
     out = jnp.einsum("bkgs,bksd->bkgd", weights.astype(cache.v.dtype), cache.v)
     out = jnp.einsum("bkgd,kgdm->bm", out, params["wo"].astype(x_t.dtype))
     return out, cache

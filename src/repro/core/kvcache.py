@@ -71,7 +71,15 @@ def cache_slots(max_seq: int, window: Optional[int], h2o_budget: Optional[int]
 
 def select_slot(cache: AttnCache, *, window: Optional[int],
                 h2o: bool, recent_len: int) -> jax.Array:
-    """Slot index (B,) where the incoming token's K/V should be written."""
+    """Slot index (B,) where the incoming token's K/V should be written.
+
+    Policies: ring buffer (window only), contiguous (full cache), H2O
+    heavy-hitter eviction, and the combined window+H2O policy: slots whose
+    position has slid out of the attention window are dead weight (the
+    valid mask will never admit them again), so they are evicted *first*;
+    only when every held slot is still in-window does the accumulated-score
+    victim selection kick in.
+    """
     b, _, s_slots, _ = cache.k.shape
     count = cache.count  # (B,)
     if window is not None and not h2o:
@@ -85,23 +93,43 @@ def select_slot(cache: AttnCache, *, window: Optional[int],
     protected |= cache.positions < 0  # can't "evict" empties via score path
     score = cache.acc_score.sum(axis=1)  # (B, S) summed over kv heads
     score = jnp.where(protected, jnp.inf, score)
+    if window is not None:
+        # combined H2O+window: prefer evicting slots that fell out of the
+        # window — they can never be attended again regardless of score.
+        stale = (cache.positions >= 0) & \
+            (cache.positions <= cur[:, None] - window)
+        score = jnp.where(stale & ~protected, -jnp.inf, score)
     victim = jnp.argmin(score, axis=-1).astype(jnp.int32)
     free = jnp.minimum(count, s_slots - 1)
     return jnp.where(count < s_slots, free, victim)
 
 
 def insert(cache: AttnCache, slot: jax.Array, k_new: jax.Array,
-           v_new: jax.Array) -> AttnCache:
+           v_new: jax.Array,
+           write_mask: Optional[jax.Array] = None) -> AttnCache:
     """Write one token's (projected/sliced) k, v into ``slot``.
 
     k_new: (B, KV, Dk); v_new: (B, KV, Dv); slot: (B,).
+
+    ``write_mask`` (B,) bool suppresses the write for masked-off rows:
+    their k/v/positions/count are left untouched. The continuous-batching
+    engine uses this to freeze inactive lanes while the shared decode step
+    runs at static batch shape.
     """
     b = jnp.arange(cache.k.shape[0])
     k = cache.k.at[b, :, slot].set(k_new.astype(cache.k.dtype))
     v = cache.v.at[b, :, slot].set(v_new.astype(cache.v.dtype))
     positions = cache.positions.at[b, slot].set(cache.count)
     acc = cache.acc_score.at[b, :, slot].set(0.0)
-    return AttnCache(k=k, v=v, positions=positions, count=cache.count + 1,
+    count = cache.count + 1
+    if write_mask is not None:
+        m = write_mask
+        k = jnp.where(m[:, None, None, None], k, cache.k)
+        v = jnp.where(m[:, None, None, None], v, cache.v)
+        positions = jnp.where(m[:, None], positions, cache.positions)
+        acc = jnp.where(m[:, None, None], acc, cache.acc_score)
+        count = jnp.where(m, count, cache.count)
+    return AttnCache(k=k, v=v, positions=positions, count=count,
                      acc_score=acc)
 
 
@@ -114,11 +142,15 @@ def valid_mask(cache: AttnCache, *, window: Optional[int]) -> jax.Array:
     return m
 
 
-def accumulate_h2o(cache: AttnCache, attn_weights: jax.Array) -> AttnCache:
+def accumulate_h2o(cache: AttnCache, attn_weights: jax.Array,
+                   write_mask: Optional[jax.Array] = None) -> AttnCache:
     """attn_weights: (B, KV, G, S_slots) probabilities for the current step;
-    summed over the G query heads of each kv group (H2O statistic)."""
-    acc = cache.acc_score + attn_weights.astype(jnp.float32).sum(axis=2)
-    return dataclasses.replace(cache, acc_score=acc)
+    summed over the G query heads of each kv group (H2O statistic).
+    ``write_mask`` (B,) freezes masked-off rows (inactive lanes)."""
+    upd = attn_weights.astype(jnp.float32).sum(axis=2)
+    if write_mask is not None:
+        upd = jnp.where(write_mask[:, None, None], upd, 0.0)
+    return dataclasses.replace(cache, acc_score=cache.acc_score + upd)
 
 
 # ---------------------------------------------------------------------------

@@ -1,8 +1,13 @@
-"""Serving driver: calibrate-once, serve-with-AQUA.
+"""Serving driver: calibrate-once, then serve a mixed-traffic trace.
+
+Drives the continuous-batching engine over a Poisson arrival trace
+(exponential inter-arrival times in decode-step units, mixed prompt
+lengths) and reports throughput + lane occupancy. ``--rectangular``
+falls back to the old fixed-batch ``ServeEngine`` drive for comparison.
 
 CLI (CPU-scale):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
-      --k-ratio 0.75 --h2o-ratio 0.5 --steps 16
+      --k-ratio 0.75 --h2o-ratio 0.5 --requests 8 --lanes 4
 """
 from __future__ import annotations
 
@@ -10,16 +15,18 @@ import argparse
 import dataclasses
 import time
 
-import jax
 import numpy as np
 
+import jax
+
 from repro.configs import get_config, reduced
-from repro.configs.base import AquaConfig
+from repro.configs.base import AquaConfig, ServingConfig
 from repro.core.calibration import calibrate, identity_projections
 from repro.data.pipeline import DataConfig, add_frontend_inputs, \
     calibration_batches, make_batch
 from repro.models import build_model
-from repro.serving import ServeEngine
+from repro.serving import ContinuousBatchingEngine, ServeEngine, \
+    poisson_trace
 
 
 def main():
@@ -30,11 +37,23 @@ def main():
     ap.add_argument("--s-ratio", type=float, default=0.0)
     ap.add_argument("--h2o-ratio", type=float, default=1.0)
     ap.add_argument("--block-dims", type=int, default=1)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--steps", type=int, default=16)
-    ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--no-aqua", action="store_true")
+    ap.add_argument("--backend", default=None,
+                    help="attention backend override (see core.attention)")
+    # trace shape
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--lanes", type=int, default=4)
+    ap.add_argument("--mean-interarrival", type=float, default=2.0,
+                    help="Poisson trace: mean inter-arrival (decode steps)")
+    ap.add_argument("--prompt-lens", default="8,16,24",
+                    help="comma-separated mixed prompt lengths")
+    ap.add_argument("--steps", type=int, default=16,
+                    help="max new tokens per request")
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--rectangular", action="store_true",
+                    help="old fixed-batch ServeEngine drive (comparison)")
     args = ap.parse_args()
 
     cfg = reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -65,20 +84,69 @@ def main():
                                              seq=32), cfg) \
             if cfg.family != "hybrid" else proj
 
-    eng = ServeEngine(cfg, params, proj, max_seq=args.max_seq)
-    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.prompt_len,
-                      global_batch=args.batch)
-    batch = add_frontend_inputs(
-        {"tokens": make_batch(dcfg, 0)["tokens"]}, cfg)
+    if args.rectangular:
+        _drive_rectangular(cfg, params, proj, args)
+        return
+
+    scfg = ServingConfig(max_lanes=args.lanes, max_seq=args.max_seq,
+                         max_new_tokens=args.steps,
+                         temperature=args.temperature)
+    eng = ContinuousBatchingEngine(cfg, params, proj, serving=scfg,
+                                   backend=args.backend)
+    prompt_lens = tuple(int(x) for x in args.prompt_lens.split(","))
+    reqs = poisson_trace(args.requests,
+                         mean_interarrival=args.mean_interarrival,
+                         prompt_lens=prompt_lens,
+                         max_new_tokens=args.steps,
+                         vocab_size=cfg.vocab_size, seed=args.seed,
+                         temperature=args.temperature)
+    if cfg.frontend.kind != "none":
+        dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=1,
+                          global_batch=1)
+        for r in reqs:
+            r.extra_inputs = {
+                k: v for k, v in add_frontend_inputs(
+                    {"tokens": make_batch(dcfg, 0)["tokens"]}, cfg).items()
+                if k != "tokens"}
 
     t0 = time.time()
-    res = eng.generate(batch, steps=args.steps)
+    finished = 0
+    for ev in eng.serve(reqs):
+        if ev.finished:
+            finished += 1
+            print(f"[serve] request {ev.uid} done: {ev.index + 1} tokens "
+                  f"({ev.finish_reason})")
     dt = time.time() - t0
-    tps = args.batch * args.steps / dt
-    print(f"[serve] generated {res.tokens.shape} tokens in {dt:.2f}s "
-          f"({tps:.1f} tok/s on CPU)")
-    print(f"[serve] KV cache bytes @ batch={args.batch}: "
-          f"{eng.cache_bytes(args.batch):,}")
+    st = eng.stats
+    print(f"[serve] {finished}/{len(reqs)} requests, "
+          f"{st.tokens_emitted} tokens in {dt:.2f}s "
+          f"({st.tokens_emitted / dt:.1f} tok/s), "
+          f"{st.decode_steps} decode steps, "
+          f"mean lane occupancy {st.mean_occupancy:.2f}/{args.lanes}")
+    print(f"[serve] KV cache bytes @ {args.lanes} lanes: "
+          f"{eng.cache_bytes():,}")
+
+
+def _drive_rectangular(cfg, params, proj, args):
+    """Old fixed-batch drive: every request prefills together and decodes
+    in lockstep — no overlap, occupancy == 1 request-batch at a time."""
+    eng = ServeEngine(cfg, params, proj, max_seq=args.max_seq,
+                      backend=args.backend)
+    batch_size = min(args.requests, args.lanes)
+    prompt_len = int(args.prompt_lens.split(",")[0])
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=prompt_len,
+                      global_batch=batch_size)
+    batch = add_frontend_inputs(
+        {"tokens": make_batch(dcfg, 0)["tokens"]}, cfg)
+    t0 = time.time()
+    res = eng.generate(batch, steps=args.steps,
+                       temperature=args.temperature)
+    dt = time.time() - t0
+    tps = batch_size * args.steps / dt
+    print(f"[serve] rectangular: generated {res.tokens.shape} tokens in "
+          f"{dt:.2f}s ({tps:.1f} tok/s)")
+    print(f"[serve] KV cache bytes @ batch={batch_size}: "
+          f"{eng.cache_bytes(batch_size):,}")
     print("[serve] sample:", np.asarray(res.tokens[0])[:16].tolist())
 
 

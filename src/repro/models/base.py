@@ -51,10 +51,75 @@ class LM:
         raise NotImplementedError
 
     def decode_step(self, params, state: DecodeState, tokens: jax.Array,
-                    aqua_proj: Optional[jax.Array] = None
+                    aqua_proj: Optional[jax.Array] = None,
+                    write_mask: Optional[jax.Array] = None
                     ) -> Tuple[jax.Array, DecodeState]:
-        """tokens: (B,) int32 -> (logits (B, V), new state)."""
+        """tokens: (B,) int32 -> (logits (B, V), new state).
+
+        ``write_mask`` (B,) bool, when supported by the family, freezes
+        masked-off rows' cache state (inactive scheduler lanes ride the
+        batched step without mutating their lane).
+        """
         raise NotImplementedError
+
+    # -- lane surgery (continuous-batching serving) -------------------
+    #
+    # A *lane* is one batch row of a DecodeState. Every stacked-layer
+    # leaf in this framework carries layers at axis 0 and batch at axis 1
+    # ((L, B, ...)); model-level extras carry batch at axis 1 as well
+    # (e.g. whisper's cross K/V (L, B, S, KV, D)), so lane surgery is
+    # uniform pytree indexing. Families that break this invariant must
+    # override these methods.
+
+    def insert_lane(self, state: DecodeState, req_state: DecodeState,
+                    lane: jax.Array) -> DecodeState:
+        """Graft a single-request (B=1) decode state into batch row
+        ``lane`` of a multi-lane state. Overwrites the lane completely —
+        K/V slots, positions, count, and H2O ``acc_score`` (and AQUA
+        dim-sliced K lanes ride along: the leaves are already projected/
+        sliced identically on both sides since shapes derive from the same
+        config + max_seq). jit-safe with a traced ``lane``."""
+        lane_set = lambda dst, src: dst.at[:, lane].set(src[:, 0])
+        return DecodeState(
+            layers=jax.tree.map(lane_set, state.layers, req_state.layers),
+            extra=jax.tree.map(lane_set, state.extra, req_state.extra),
+        )
+
+    def reset_lane(self, state: DecodeState, lane: jax.Array,
+                   max_seq: int) -> DecodeState:
+        """Return ``state`` with batch row ``lane`` restored to the
+        freshly-initialized (empty-cache) condition."""
+        return self.insert_lane(state, self.init_decode_state(1, max_seq),
+                                lane)
+
+    def prefill_into(self, params, batch, max_seq: int, state: DecodeState,
+                     lane: jax.Array,
+                     aqua_proj: Optional[jax.Array] = None
+                     ) -> Tuple[jax.Array, DecodeState]:
+        """Prefill one request (batch size 1, optionally ragged via
+        ``batch["lengths"]``) and graft its cache into ``lane`` of an
+        occupied multi-lane state. Returns (next-token logits (1, V),
+        updated lanes state)."""
+        logits, req_state = self.prefill(params, batch, max_seq, aqua_proj)
+        return logits, self.insert_lane(state, req_state, lane)
+
+    @staticmethod
+    def freeze_rows(new_state: DecodeState, old_state: DecodeState,
+                    write_mask: jax.Array, batch_axis: int = 1
+                    ) -> DecodeState:
+        """Keep ``old_state`` for rows where ``write_mask`` is False.
+
+        State-level fallback for families whose decode step rewrites the
+        whole (small) recurrent state anyway; attention caches use the
+        targeted per-slot masking in ``kvcache.insert`` instead (a full
+        cache-sized ``where`` would double decode HBM traffic)."""
+        def merge(new, old):
+            shape = [1] * new.ndim
+            shape[batch_axis] = write_mask.shape[0]
+            return jnp.where(write_mask.reshape(shape), new, old)
+        return DecodeState(
+            layers=jax.tree.map(merge, new_state.layers, old_state.layers),
+            extra=jax.tree.map(merge, new_state.extra, old_state.extra))
 
     # -- provided -----------------------------------------------------
     def loss(self, params, batch: Dict[str, jax.Array]):

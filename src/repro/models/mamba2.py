@@ -257,7 +257,8 @@ class Mamba2LM(LM):
                                       cfg.norm_eps))[:, 0]
         return logits, DecodeState(layers=caches, extra={})
 
-    def decode_step(self, params, state: DecodeState, tokens, aqua_proj=None):
+    def decode_step(self, params, state: DecodeState, tokens, aqua_proj=None,
+                    write_mask=None):
         cfg = self.cfg
         x = L.embed(params["embed"], tokens, self.dtype)
 
@@ -268,4 +269,7 @@ class Mamba2LM(LM):
         x, caches = _scan(body, x, (params["layers"], state.layers))
         logits = L.unembed(params["embed"],
                            L.rms_norm(x, params["ln_f"], cfg.norm_eps))
-        return logits, DecodeState(layers=caches, extra=state.extra)
+        new_state = DecodeState(layers=caches, extra=state.extra)
+        if write_mask is not None:
+            new_state = self.freeze_rows(new_state, state, write_mask)
+        return logits, new_state

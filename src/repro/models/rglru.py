@@ -237,7 +237,8 @@ class HybridLM(LM):
                                       cfg.norm_eps))[:, 0]
         return logits, DecodeState(layers=tuple(caches), extra={})
 
-    def decode_step(self, params, state: DecodeState, tokens, aqua_proj=None):
+    def decode_step(self, params, state: DecodeState, tokens, aqua_proj=None,
+                    write_mask=None):
         cfg = self.cfg
         x = L.embed(params["embed"], tokens, self.dtype)
         caches = []
@@ -247,11 +248,28 @@ class HybridLM(LM):
             cache_i = state.layers[i]
             if kind == "recurrent":
                 x, cache_i = recurrent_block_step(cfg, p_i, x, cache_i)
+                if write_mask is not None:
+                    cache_i = jax.tree.map(
+                        lambda new, old: jnp.where(
+                            write_mask.reshape((-1,) + (1,) * (new.ndim - 1)),
+                            new, old),
+                        cache_i, state.layers[i])
             else:
                 proj = None if aqua_proj is None else aqua_proj[attn_idx]
-                x, cache_i = block_step(cfg, p_i, x, cache_i, proj)
+                x, cache_i = block_step(cfg, p_i, x, cache_i, proj,
+                                        write_mask=write_mask)
                 attn_idx += 1
             caches.append(cache_i)
         logits = L.unembed(params["embed"],
                            L.rms_norm(x, params["ln_f"], cfg.norm_eps))
         return logits, DecodeState(layers=tuple(caches), extra=state.extra)
+
+    # HybridLM stores per-layer caches unstacked (tuple of (B, ...) pytrees,
+    # batch at axis 0), so the base class's axis-1 lane surgery does not
+    # apply — override with axis-0 indexing.
+    def insert_lane(self, state: DecodeState, req_state: DecodeState,
+                    lane):
+        lane_set = lambda dst, src: dst.at[lane].set(src[0])
+        return DecodeState(
+            layers=jax.tree.map(lane_set, state.layers, req_state.layers),
+            extra=jax.tree.map(lane_set, state.extra, req_state.extra))

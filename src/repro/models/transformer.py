@@ -80,10 +80,11 @@ def block_forward(cfg: ModelConfig, p: dict, x: jax.Array,
 
 
 def block_step(cfg: ModelConfig, p: dict, x_t: jax.Array, cache: kv.AttnCache,
-               proj: Optional[jax.Array]):
+               proj: Optional[jax.Array],
+               write_mask: Optional[jax.Array] = None):
     h, cache = attn.decode_attention(
         p["attn"], L.rms_norm(x_t, p["ln1"], cfg.norm_eps), cache,
-        cfg.attention, cfg.aqua, proj)
+        cfg.attention, cfg.aqua, proj, write_mask=write_mask)
     x = x_t + h
     f, _ = ffn_apply(cfg, p["ffn"],
                      L.rms_norm(x, p["ln2"], cfg.norm_eps)[:, None, :])
@@ -227,13 +228,15 @@ class DenseLM(LM):
         return logits, DecodeState(layers=caches, extra={})
 
     def decode_step(self, params, state: DecodeState, tokens: jax.Array,
-                    aqua_proj: Optional[jax.Array] = None):
+                    aqua_proj: Optional[jax.Array] = None,
+                    write_mask: Optional[jax.Array] = None):
         cfg = self.cfg
         x = L.embed(params["embed"], tokens, self.dtype)  # (B, d)
 
         def body(xc, layer_in):
             p_i, cache_i, proj_i = layer_in
-            y, cache_i = block_step(cfg, p_i, xc, cache_i, proj_i)
+            y, cache_i = block_step(cfg, p_i, xc, cache_i, proj_i,
+                                    write_mask=write_mask)
             return y, cache_i
         if aqua_proj is None:
             x, caches = _scan(
@@ -427,7 +430,8 @@ class EncDecLM(LM):
         return logits, DecodeState(layers=caches, extra={"cross": cross})
 
     def decode_step(self, params, state: DecodeState, tokens: jax.Array,
-                    aqua_proj: Optional[jax.Array] = None):
+                    aqua_proj: Optional[jax.Array] = None,
+                    write_mask: Optional[jax.Array] = None):
         cfg = self.cfg
         pos = state.layers.count[0]  # (B,) shared across layers
         x = L.embed(params["embed"], tokens, self.dtype)
@@ -439,7 +443,8 @@ class EncDecLM(LM):
             p_i, cache_i, ck, cv, proj_i = layer_in
             h, cache_i = attn.decode_attention(
                 p_i["attn"], L.rms_norm(xc, p_i["ln1"], cfg.norm_eps),
-                cache_i, cfg.attention, cfg.aqua, proj_i)
+                cache_i, cfg.attention, cfg.aqua, proj_i,
+                write_mask=write_mask)
             y = xc + h
             cx, _ = attn.decode_attention(
                 p_i["xattn"], L.rms_norm(y, p_i["ln_x"], cfg.norm_eps),

@@ -1,1 +1,5 @@
-from repro.serving.engine import ServeEngine  # noqa: F401
+from repro.serving.engine import (ContinuousBatchingEngine,  # noqa: F401
+                                  GenerationResult, ServeEngine)
+from repro.serving.scheduler import (LaneScheduler, Request,  # noqa: F401
+                                     RequestOutput, ScheduleStats,
+                                     StreamEvent, poisson_trace)

@@ -1,35 +1,90 @@
-"""Batched serving engine: prefill + decode with AQUA / H2O cache policies.
+"""Serving engines: rectangular batch (``ServeEngine``) and continuous
+batching (``ContinuousBatchingEngine``).
 
-A deliberately framework-shaped engine: jit-compiled prefill and decode
-step functions (optionally pjit over a mesh), greedy/temperature sampling,
-continuous token accounting, and per-request length tracking. The paper's
-deployment story — calibrate once, serve with a chosen (k_ratio, s_ratio,
-h2o_ratio) operating point — is a constructor argument.
+``ServeEngine`` keeps the original calibrate-once/serve API: one
+rectangular prompt batch prefills together and decodes in lockstep for a
+fixed number of steps. Sampling (greedy/temperature) and the RNG fold
+now live *inside* the jitted decode step — the host loop never splits
+keys or touches logits, so each step is a single device dispatch.
 
-Attention backend: both prefill and decode flow through the backend
-registry in ``repro.core.attention`` (selected by
-``cfg.attention.backend``, overridable per-engine via the ``backend``
-constructor argument). On TPU the AQUA block-sparse chunked-prefill and
-decode kernels stream only the selected key dim-blocks; off-TPU the
-engine automatically serves from the masked-dense jnp reference. Prompt
-batches may carry a ``"lengths"`` (B,) entry for ragged prefill: attention
-masks each row's padding and decode resumes from the row's true prefix
-length. Supported for dense-transformer families (dense/vlm/moe) with the
-contiguous full-cache policy only — other combinations raise rather than
-silently attending padding.
+``ContinuousBatchingEngine`` is the production-shaped stack: requests
+are admitted into fixed decode *lanes* (batch rows of one shared decode
+state), each lane prefills independently (ragged, bucketed prompt
+shapes) and its cache — including H2O ``acc_score`` and AQUA dim-sliced
+key lanes — is grafted into the occupied batch via the model's lane
+surgery API (``LM.prefill_into`` / ``insert_lane``). The decode step is
+fully jitted at the static ``(max_lanes,)`` shape and folds in
+per-request sampling (greedy / temperature / top-k, RNG derived by
+``fold_in`` on the request uid and token counter so results are
+independent of lane placement and co-tenants) plus EOS/length stop
+detection; inactive lanes ride along under a ``write_mask`` that freezes
+their cache. The host loop only drains finished lanes and streams
+per-request tokens.
+
+Attention backend: both engines flow through the backend registry in
+``repro.core.attention`` (selected by ``cfg.attention.backend``,
+overridable per-engine via the ``backend`` constructor argument).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import math
+from dataclasses import dataclass
+from typing import Dict, Iterable, Iterator, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, ServingConfig
 from repro.core.calibration import AquaProjections
+from repro.core.h2o import h2o_budget
 from repro.models import build_model
+from repro.serving.scheduler import (LaneScheduler, Request, RequestOutput,
+                                     ScheduleStats, StreamEvent)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Shared sampling (jit-side)
+# ---------------------------------------------------------------------------
+
+
+def sample_tokens(logits: jax.Array, keys: jax.Array,
+                  temperature: jax.Array, top_k: jax.Array,
+                  use_top_k: bool = True) -> jax.Array:
+    """Per-row sampling. logits (N, V); keys (N, ...) PRNG keys;
+    temperature (N,) f32; top_k (N,) int32 (0 disables the filter; ties
+    at the k-th logit are all kept). temperature <= 0 is greedy.
+
+    ``use_top_k`` is a *static* gate: when the caller knows no row uses
+    top-k it compiles the step without the full-vocab sort that the
+    dynamic per-row threshold otherwise needs."""
+    v = logits.shape[-1]
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lg = logits.astype(jnp.float32)
+    if use_top_k:
+        sorted_desc = jnp.sort(lg, axis=-1)[:, ::-1]
+        idx = jnp.clip(top_k - 1, 0, v - 1)
+        thr = jnp.take_along_axis(sorted_desc, idx[:, None], axis=-1)
+        lg = jnp.where((top_k[:, None] <= 0) | (lg >= thr), lg, NEG_INF)
+    scaled = lg / jnp.maximum(temperature, 1e-6)[:, None]
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+    return jnp.where(temperature > 0.0, sampled, greedy)
+
+
+def _request_keys(rng: jax.Array, uid: jax.Array,
+                  token_index: jax.Array) -> jax.Array:
+    """(N,) per-request keys: fold the request uid then the token counter
+    into the serve-level base key. Placement/co-tenant independent."""
+    return jax.vmap(lambda u, i: jax.random.fold_in(
+        jax.random.fold_in(rng, u), i))(uid, token_index)
+
+
+# ---------------------------------------------------------------------------
+# Rectangular-batch engine (kept for scoring, tests, and simple drives)
+# ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass
@@ -59,39 +114,43 @@ class ServeEngine:
                 "AQUA enabled: calibrated projections required"
             self.proj = projections.p
         self.max_seq = max_seq
-        self._rng = jax.random.PRNGKey(rng_seed)
+        self._base_rng = jax.random.PRNGKey(rng_seed)
+        self._calls = 0
 
         self._prefill = jax.jit(
             lambda p, batch, proj: self.model.prefill(p, batch, max_seq,
                                                       aqua_proj=proj))
-        self._step = jax.jit(
-            lambda p, state, toks, proj: self.model.decode_step(
-                p, state, toks, aqua_proj=proj))
 
-    # ------------------------------------------------------------------
-    def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
-        if temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self._rng, k = jax.random.split(self._rng)
-        return jax.random.categorical(k, logits / temperature).astype(
-            jnp.int32)
+        def step(p, state, tok, proj, rng, i, temp):
+            logits, state = self.model.decode_step(p, state, tok,
+                                                   aqua_proj=proj)
+            return logits, state, _sample_batch(logits, rng, i, temp)
+        self._step = jax.jit(step)
+        self._sample0 = jax.jit(_sample_batch)
 
     def generate(self, batch: Dict[str, jax.Array], steps: int,
                  temperature: float = 0.0) -> GenerationResult:
-        """batch: prompt inputs ({"tokens": (B, S_prompt), ...})."""
+        """batch: prompt inputs ({"tokens": (B, S_prompt), ...}).
+
+        Sampling runs inside the jitted step: the per-token key is
+        ``fold_in(call_key, token_index)`` — no host-side key splitting,
+        no host sync beyond draining each step's sampled tokens.
+        """
         if "lengths" in batch and self.cfg.family not in ("dense", "vlm",
                                                           "moe"):
             raise ValueError(
                 "ragged `lengths` prefill is only supported by the "
                 "dense-transformer families (dense/vlm/moe); "
                 f"{self.cfg.family!r} prefill is rectangular")
+        rng = jax.random.fold_in(self._base_rng, self._calls)
+        self._calls += 1
+        temp = jnp.float32(temperature)
         logits, state = self._prefill(self.params, batch, self.proj)
-        out: List[np.ndarray] = []
-        tok = self._sample(logits, temperature)
-        out.append(np.asarray(tok))
-        for _ in range(steps - 1):
-            logits, state = self._step(self.params, state, tok, self.proj)
-            tok = self._sample(logits, temperature)
+        tok = self._sample0(logits, rng, 0, temp)
+        out: List[np.ndarray] = [np.asarray(tok)]
+        for i in range(1, steps):
+            logits, state, tok = self._step(self.params, state, tok,
+                                            self.proj, rng, i, temp)
             out.append(np.asarray(tok))
         return GenerationResult(tokens=np.stack(out, axis=1),
                                 logits_last=np.asarray(logits))
@@ -108,7 +167,300 @@ class ServeEngine:
 
     def cache_bytes(self, batch_size: int) -> int:
         """Actual KV-cache footprint at this operating point (AQUA-Memory
-        savings show up here)."""
-        state = self.model.init_decode_state(batch_size, self.max_seq)
-        return sum(a.size * a.dtype.itemsize
+        savings show up here). Shape-only: ``jax.eval_shape`` traces
+        ``init_decode_state`` abstractly, so no device memory is touched
+        by this bookkeeping query."""
+        state = jax.eval_shape(
+            lambda: self.model.init_decode_state(batch_size, self.max_seq))
+        return sum(math.prod(a.shape) * a.dtype.itemsize
+                   for a in jax.tree.leaves(state.layers))
+
+
+def _sample_batch(logits: jax.Array, rng: jax.Array, i,
+                  temp: jax.Array) -> jax.Array:
+    """Rectangular-engine sampling: per-row keys derived from the step
+    key (``fold_in`` on the token counter then the row), shared
+    implementation with the lane engine (no top-k on this path)."""
+    key = jax.random.fold_in(rng, i)
+    b = logits.shape[0]
+    keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+        key, jnp.arange(b, dtype=jnp.int32))
+    return sample_tokens(logits, keys, jnp.full((b,), temp, jnp.float32),
+                         jnp.zeros((b,), jnp.int32), use_top_k=False)
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching engine
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class LaneState:
+    """Per-lane device bookkeeping folded into the jitted step."""
+
+    last_token: jax.Array   # (L,) int32 — token fed to the next decode step
+    active: jax.Array       # (L,) bool
+    generated: jax.Array    # (L,) int32 — tokens emitted (incl. prefill's)
+    max_new: jax.Array      # (L,) int32
+    temperature: jax.Array  # (L,) f32
+    top_k: jax.Array        # (L,) int32 — 0 disables
+    eos_id: jax.Array       # (L,) int32 — -1 disables
+    uid: jax.Array          # (L,) int32 — request uid (RNG fold key)
+
+
+def _init_lane_state(num_lanes: int) -> LaneState:
+    z = jnp.zeros((num_lanes,), jnp.int32)
+    return LaneState(last_token=z, active=jnp.zeros((num_lanes,), bool),
+                     generated=z, max_new=z,
+                     temperature=jnp.zeros((num_lanes,), jnp.float32),
+                     top_k=z, eos_id=z - 1, uid=z - 1)
+
+
+class ContinuousBatchingEngine:
+    """Continuous-batching serve stack (see the module docstring).
+
+    Typical drive::
+
+        eng = ContinuousBatchingEngine(cfg, params, proj,
+                                       serving=ServingConfig(max_lanes=4))
+        for ev in eng.serve(requests):        # StreamEvent per token
+            print(ev.uid, ev.token, ev.finished)
+        print(eng.stats.mean_occupancy)
+
+    or collect terminal outputs with ``run(requests)``.
+
+    Compilation: the decode step compiles once (static lane shape); the
+    admission path compiles once per prompt *bucket* (prompts are padded
+    to ``ServingConfig.prompt_bucket`` multiples and prefilled ragged via
+    ``lengths`` wherever the cache policy permits — sliding-window and
+    H2O policies prefill at exact prompt length instead, which costs one
+    compile per distinct length).
+    """
+
+    def __init__(self, cfg: ModelConfig, params,
+                 projections: Optional[AquaProjections] = None,
+                 serving: ServingConfig = ServingConfig(),
+                 rng_seed: int = 0, backend: Optional[str] = None):
+        if backend is not None and cfg.attention is not None:
+            from repro.core.attention import resolve_backend
+            resolve_backend(backend, aqua=cfg.aqua)
+            cfg = dataclasses.replace(
+                cfg, attention=dataclasses.replace(cfg.attention,
+                                                   backend=backend))
+        serving.validate()
+        self.cfg = cfg
+        self.scfg = serving
+        self.model = build_model(cfg)
+        self.params = params
+        self.proj = None
+        if cfg.aqua is not None and cfg.aqua.enabled:
+            assert projections is not None, \
+                "AQUA enabled: calibrated projections required"
+            self.proj = projections.p
+        self._base_rng = jax.random.PRNGKey(rng_seed)
+        self._serves = 0
+        self.stats = ScheduleStats()
+
+        # ragged bucketed prefill needs the contiguous full-cache policy
+        # (window rings and H2O eviction place slots rectangularly)
+        self._supports_ragged = (
+            cfg.family in ("dense", "vlm", "moe")
+            and (cfg.attention is None or cfg.attention.window is None)
+            and h2o_budget(cfg.aqua, serving.max_seq) is None)
+
+        # `use_top_k` is static: traffic without top-k compiles the decode
+        # step without the per-row dynamic-threshold full-vocab sort
+        self._admit = jax.jit(self._admit_impl,
+                              static_argnames=("use_top_k",))
+        self._step = jax.jit(self._step_impl, static_argnames=("use_top_k",))
+
+    # -- jitted bodies -------------------------------------------------
+    def _admit_impl(self, params, batch, state, lanes: LaneState, lane,
+                    proj, rng, max_new, temperature, top_k, eos_id, uid,
+                    use_top_k=True):
+        """Prefill one request into ``lane`` and sample its first token.
+        Returns (token (1,), done (1,), state, lanes)."""
+        logits, state = self.model.prefill_into(params, batch,
+                                                self.scfg.max_seq, state,
+                                                lane, aqua_proj=proj)
+        keys = _request_keys(rng, jnp.full((1,), uid, jnp.int32),
+                             jnp.zeros((1,), jnp.int32))
+        tok = sample_tokens(logits, keys,
+                            jnp.full((1,), temperature, jnp.float32),
+                            jnp.full((1,), top_k, jnp.int32),
+                            use_top_k=use_top_k)
+        done = ((tok == eos_id) & (eos_id >= 0)) | (max_new <= 1)
+        lanes = LaneState(
+            last_token=lanes.last_token.at[lane].set(tok[0]),
+            active=lanes.active.at[lane].set(~done[0]),
+            generated=lanes.generated.at[lane].set(1),
+            max_new=lanes.max_new.at[lane].set(max_new),
+            temperature=lanes.temperature.at[lane].set(temperature),
+            top_k=lanes.top_k.at[lane].set(top_k),
+            eos_id=lanes.eos_id.at[lane].set(eos_id),
+            uid=lanes.uid.at[lane].set(uid))
+        return tok, done, state, lanes
+
+    def _step_impl(self, params, state, lanes: LaneState, proj, rng,
+                   use_top_k=True):
+        """One decode step over all lanes: model step + per-lane sampling
+        + stop detection, all compiled. Inactive lanes are frozen via
+        ``write_mask`` and report ``pad_id``."""
+        logits, state = self.model.decode_step(params, state,
+                                               lanes.last_token,
+                                               aqua_proj=proj,
+                                               write_mask=lanes.active)
+        keys = _request_keys(rng, lanes.uid, lanes.generated)
+        tok = sample_tokens(logits, keys, lanes.temperature, lanes.top_k,
+                            use_top_k=use_top_k)
+        tok = jnp.where(lanes.active, tok, self.scfg.pad_id)
+        emitted = lanes.active
+        generated = lanes.generated + emitted.astype(jnp.int32)
+        done = emitted & (((tok == lanes.eos_id) & (lanes.eos_id >= 0))
+                          | (generated >= lanes.max_new))
+        lanes = dataclasses.replace(
+            lanes, last_token=jnp.where(emitted, tok, lanes.last_token),
+            active=lanes.active & ~done, generated=generated)
+        return state, lanes, tok, emitted, done
+
+    # -- host-side drive ----------------------------------------------
+    def _normalize(self, req: Request) -> Request:
+        s = self.scfg
+        out = dataclasses.replace(
+            req,
+            max_new_tokens=(s.max_new_tokens if req.max_new_tokens is None
+                            else req.max_new_tokens),
+            temperature=(s.temperature if req.temperature is None
+                         else req.temperature),
+            top_k=s.top_k if req.top_k is None else req.top_k,
+            eos_id=s.eos_id if req.eos_id is None else req.eos_id)
+        if out.prompt_len < 1:
+            raise ValueError(f"request {req.uid}: empty prompt")
+        if out.prompt_len + out.max_new_tokens > s.max_seq:
+            raise ValueError(
+                f"request {req.uid}: prompt_len={out.prompt_len} + "
+                f"max_new_tokens={out.max_new_tokens} exceeds "
+                f"max_seq={s.max_seq}")
+        return out
+
+    def _prefill_batch(self, req: Request) -> Dict[str, jax.Array]:
+        toks = np.asarray(req.tokens, np.int32).reshape(1, -1)
+        s = toks.shape[1]
+        if self._supports_ragged:
+            bucket = self.scfg.prompt_bucket
+            padded_len = max(bucket, ((s + bucket - 1) // bucket) * bucket)
+            # never pad past the cache: a padded prefill longer than
+            # max_seq would roll the prompt prefix out of the slot cache
+            padded_len = min(padded_len, self.scfg.max_seq)
+            padded = np.zeros((1, padded_len), np.int32)
+            padded[0, :s] = toks[0]
+            batch = {"tokens": jnp.asarray(padded),
+                     "lengths": jnp.asarray([s], jnp.int32)}
+        else:
+            batch = {"tokens": jnp.asarray(toks)}
+        if req.extra_inputs:
+            batch.update(req.extra_inputs)
+        return batch
+
+    def serve(self, requests: Iterable[Request]) -> Iterator[StreamEvent]:
+        """Drive a trace of requests to completion, yielding one
+        ``StreamEvent`` per generated token (in emission order). Aggregate
+        trace statistics land in ``self.stats``."""
+        sched = LaneScheduler(self.scfg.max_lanes)
+        use_top_k = False
+        for r in requests:
+            r = self._normalize(r)
+            use_top_k |= r.top_k > 0
+            sched.submit(r)
+
+        rng = jax.random.fold_in(self._base_rng, self._serves)
+        self._serves += 1
+        state = self.model.init_decode_state(self.scfg.max_lanes,
+                                             self.scfg.max_seq)
+        lanes = _init_lane_state(self.scfg.max_lanes)
+        # exposed for inspection/tests (terminal lane state after a drive)
+        self.last_state, self.last_lanes = state, lanes
+        stats = ScheduleStats()
+        self.stats = stats
+        emitted_count: Dict[int, int] = {}
+        now = 0.0
+
+        def finish_reason(tok: int, req: Request) -> str:
+            return "eos" if (req.eos_id is not None and req.eos_id >= 0
+                             and tok == req.eos_id) else "length"
+
+        while sched.has_work:
+            # admissions: fill free lanes with every arrived request
+            while True:
+                req = sched.pop_admissible(now)
+                if req is None:
+                    break
+                lane = sched.assign(req)
+                tok, done, state, lanes = self._admit(
+                    self.params, self._prefill_batch(req), state, lanes,
+                    jnp.int32(lane), self.proj, rng, req.max_new_tokens,
+                    req.temperature, req.top_k, req.eos_id, req.uid,
+                    use_top_k=use_top_k)
+                self.last_state, self.last_lanes = state, lanes
+                t, d = int(tok[0]), bool(done[0])
+                stats.tokens_emitted += 1
+                emitted_count[req.uid] = 1
+                if d:
+                    sched.retire(lane)
+                    stats.requests_finished += 1
+                yield StreamEvent(req.uid, t, 0, d,
+                                  finish_reason(t, req) if d else "")
+            if sched.num_active == 0:
+                if sched.has_pending:
+                    now = max(now, sched.next_arrival)   # idle-jump
+                    continue
+                break
+
+            state, lanes, tok, emitted, done = self._step(
+                self.params, state, lanes, self.proj, rng,
+                use_top_k=use_top_k)
+            self.last_state, self.last_lanes = state, lanes
+            tok_h = np.asarray(tok)
+            em_h = np.asarray(emitted)
+            done_h = np.asarray(done)
+            stats.decode_steps += 1
+            stats.occupancy_sum += int(em_h.sum())
+            now += 1.0
+            for lane in sched.active_lanes():
+                if not em_h[lane]:
+                    continue
+                req = sched.request_in(lane)
+                t, d = int(tok_h[lane]), bool(done_h[lane])
+                idx = emitted_count[req.uid]
+                emitted_count[req.uid] = idx + 1
+                stats.tokens_emitted += 1
+                if d:
+                    sched.retire(lane)
+                    stats.requests_finished += 1
+                yield StreamEvent(req.uid, t, idx, d,
+                                  finish_reason(t, req) if d else "")
+
+    def run(self, requests: Iterable[Request]
+            ) -> Dict[int, RequestOutput]:
+        """Serve to completion and collect per-request terminal outputs."""
+        reqs = {r.uid: r for r in requests}
+        outs = {uid: RequestOutput(uid=uid, prompt_len=r.prompt_len)
+                for uid, r in reqs.items()}
+        for ev in self.serve(reqs.values()):
+            o = outs[ev.uid]
+            if ev.index == 0:
+                o.admitted_at = self.stats.decode_steps
+            o.tokens.append(ev.token)
+            if ev.finished:
+                o.finish_reason = ev.finish_reason
+                o.finished_at = self.stats.decode_steps
+        return outs
+
+    def cache_bytes(self) -> int:
+        """Lane-state KV footprint (shape-only, no device allocation)."""
+        state = jax.eval_shape(
+            lambda: self.model.init_decode_state(self.scfg.max_lanes,
+                                                 self.scfg.max_seq))
+        return sum(math.prod(a.shape) * a.dtype.itemsize
                    for a in jax.tree.leaves(state.layers))

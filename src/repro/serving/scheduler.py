@@ -1,0 +1,183 @@
+"""Request scheduler for the continuous-batching engine.
+
+Host-side bookkeeping only — all device work (prefill, lane surgery,
+the jitted decode step) lives in ``repro.serving.engine``. The split
+keeps the scheduler trivially testable and lets later PRs swap policies
+(priority queues, prefill batching, preemption) without touching the
+compiled step.
+
+Request lifecycle::
+
+    submit --> pending (arrival-ordered) --> admitted into a free *lane*
+           --> decoding (one token per engine step) --> retired
+               (EOS, length limit) --> lane freed for the next request
+
+A *lane* is one batch row of the engine's shared decode state; the
+number of lanes is fixed (``ServingConfig.max_lanes``) so the decode
+step always runs at a static, jit-friendly shape regardless of how many
+requests are in flight.
+"""
+from __future__ import annotations
+
+import bisect
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    """One generation request. ``None`` sampling fields inherit the
+    engine's ``ServingConfig`` defaults at submission time.
+
+    ``arrival`` is measured in decode-step time units — the engine admits
+    a request once its arrival time is <= the current step counter, which
+    makes traces (e.g. Poisson arrivals) exactly reproducible.
+    """
+
+    uid: int
+    tokens: np.ndarray                      # (S,) int32 prompt
+    max_new_tokens: Optional[int] = None    # includes the prefill-sampled token
+    temperature: Optional[float] = None
+    top_k: Optional[int] = None
+    eos_id: Optional[int] = None
+    arrival: float = 0.0
+    # modality frontend inputs spliced into the prefill batch
+    # (e.g. {"frames": ...} for whisper, {"patches": ...} for VLMs)
+    extra_inputs: Optional[dict] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(np.asarray(self.tokens).shape[-1])
+
+
+@dataclass
+class StreamEvent:
+    """One streamed output token. ``index`` counts tokens within the
+    request (0 = the token sampled from the prefill logits)."""
+
+    uid: int
+    token: int
+    index: int
+    finished: bool = False
+    finish_reason: str = ""                 # "eos" | "length" when finished
+
+
+@dataclass
+class RequestOutput:
+    """Collected terminal result for one request (``engine.run``)."""
+
+    uid: int
+    prompt_len: int
+    tokens: List[int] = field(default_factory=list)
+    finish_reason: str = ""
+    admitted_at: int = -1                   # engine step counter at admission
+    finished_at: int = -1
+
+
+@dataclass
+class ScheduleStats:
+    """Aggregate trace statistics for one ``serve``/``run`` drive."""
+
+    decode_steps: int = 0
+    tokens_emitted: int = 0
+    requests_finished: int = 0
+    occupancy_sum: int = 0                  # sum over steps of active lanes
+
+    @property
+    def mean_occupancy(self) -> float:
+        return self.occupancy_sum / max(self.decode_steps, 1)
+
+
+class LaneScheduler:
+    """Admit/retire requests into a fixed set of decode lanes.
+
+    Pending requests are kept arrival-ordered (FIFO among simultaneous
+    arrivals by submission order); lanes are recycled LIFO so repeated
+    light traffic stays in a warm lane prefix.
+    """
+
+    def __init__(self, max_lanes: int):
+        assert max_lanes >= 1
+        self.max_lanes = max_lanes
+        self._pending: List[Request] = []
+        self._keys: List[tuple] = []        # (arrival, seq) sort keys
+        self._seq = 0
+        self._lane_req: List[Optional[Request]] = [None] * max_lanes
+        self._free: List[int] = list(range(max_lanes - 1, -1, -1))
+
+    # -- submission ----------------------------------------------------
+    def submit(self, req: Request) -> None:
+        key = (float(req.arrival), self._seq)
+        i = bisect.bisect(self._keys, key)
+        self._keys.insert(i, key)
+        self._pending.insert(i, req)
+        self._seq += 1
+
+    # -- queries -------------------------------------------------------
+    @property
+    def has_pending(self) -> bool:
+        return bool(self._pending)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._pending) or self.num_active > 0
+
+    @property
+    def num_active(self) -> int:
+        return self.max_lanes - len(self._free)
+
+    @property
+    def next_arrival(self) -> Optional[float]:
+        return self._keys[0][0] if self._keys else None
+
+    def request_in(self, lane: int) -> Request:
+        req = self._lane_req[lane]
+        assert req is not None, f"lane {lane} is free"
+        return req
+
+    def active_lanes(self) -> List[int]:
+        return [i for i, r in enumerate(self._lane_req) if r is not None]
+
+    # -- admission / retirement ---------------------------------------
+    def pop_admissible(self, now: float) -> Optional[Request]:
+        """Next pending request that has arrived, if a lane is free."""
+        if not self._free or not self._pending:
+            return None
+        if self._keys[0][0] > now:
+            return None
+        self._keys.pop(0)
+        return self._pending.pop(0)
+
+    def assign(self, req: Request) -> int:
+        lane = self._free.pop()
+        self._lane_req[lane] = req
+        return lane
+
+    def retire(self, lane: int) -> Request:
+        req = self._lane_req[lane]
+        assert req is not None, f"retiring free lane {lane}"
+        self._lane_req[lane] = None
+        self._free.append(lane)
+        return req
+
+
+def poisson_trace(num_requests: int, *, mean_interarrival: float,
+                  prompt_lens: tuple, max_new_tokens: int,
+                  vocab_size: int, seed: int = 0,
+                  temperature: float = 0.0) -> List[Request]:
+    """Synthetic mixed-traffic trace: Poisson arrivals (exponential
+    inter-arrival times in decode-step units), prompt lengths cycled from
+    ``prompt_lens``, random token prompts. Used by ``launch/serve.py``
+    and the ``serving_throughput`` benchmark."""
+    rng = np.random.default_rng(seed)
+    reqs, t = [], 0.0
+    for i in range(num_requests):
+        t += float(rng.exponential(mean_interarrival))
+        s = int(prompt_lens[i % len(prompt_lens)])
+        toks = rng.integers(0, vocab_size, size=(s,), dtype=np.int32)
+        reqs.append(Request(uid=i, tokens=toks,
+                            max_new_tokens=max_new_tokens,
+                            temperature=temperature, arrival=t))
+    return reqs

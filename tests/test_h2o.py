@@ -84,6 +84,65 @@ def test_reference_keep_set_keeps_recents_and_heavy():
     assert 7 in kept          # most recent
 
 
+def test_combined_window_h2o_evicts_stale_first():
+    """Combined policy: a slot whose position slid out of the window is
+    dead (the valid mask never readmits it) — it must be evicted before
+    any scored in-window victim, regardless of accumulated mass."""
+    c = _cache(slots=4)
+    for i in range(4):
+        slot = kv.select_slot(c, window=3, h2o=True, recent_len=2)
+        c = kv.insert(c, slot, jnp.ones((1, 1, 4)), jnp.ones((1, 1, 4)))
+    # incoming pos=4, window=3: position 0 (slot 0) is out-of-window and
+    # position 1 (slot 1) is the in-window argmin — stale slot 0 must win
+    # even though its accumulated score is the global maximum.
+    c = dataclasses.replace(
+        c, acc_score=jnp.array([[[9.0, 0.1, 5.0, 5.0]]]))
+    slot = kv.select_slot(c, window=3, h2o=True, recent_len=2)
+    assert int(slot[0]) == 0
+
+
+def test_combined_window_h2o_scores_when_no_stale():
+    """With every held position in-window, the combined policy reduces to
+    scored H2O eviction (recent still protected)."""
+    c = _cache(slots=4)
+    for i in range(4):
+        slot = kv.select_slot(c, window=16, h2o=True, recent_len=2)
+        c = kv.insert(c, slot, jnp.ones((1, 1, 4)), jnp.ones((1, 1, 4)))
+    c = dataclasses.replace(
+        c, acc_score=jnp.array([[[5.0, 1.0, 0.1, 0.2]]]))
+    slot = kv.select_slot(c, window=16, h2o=True, recent_len=2)
+    assert int(slot[0]) == 2
+
+
+def test_decode_combined_window_h2o_end_to_end():
+    """SWA + H2O decode: cache bounded by min(window, budget), out-of-
+    window keys masked, decoding stays finite and positions coherent."""
+    acfg = AttentionConfig(num_heads=2, num_kv_heads=1, head_dim=8, window=6)
+    aqua = AquaConfig(k_ratio=1.0, h2o_ratio=0.5, block_dims=1)
+    d_model = 16
+    params = attn.init_attention_params(jax.random.PRNGKey(0), d_model, acfg)
+    from repro.core.calibration import identity_projections
+    from repro.core.kvcache import cache_slots
+    proj = identity_projections(1, 1, 8).p[0]
+    max_seq = 16
+    slots = cache_slots(max_seq, acfg.window, h2o_budget(aqua, max_seq))
+    assert slots == 6            # min(window=6, budget=8)
+    cache = kv.init_attn_cache(1, 1, slots, 8, 8, jnp.float32)
+    for i in range(14):
+        x = jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(2), i),
+                              (1, d_model))
+        out, cache = attn.decode_attention(params, x, cache, acfg, aqua, proj)
+        assert np.isfinite(np.asarray(out)).all()
+    pos = np.asarray(cache.positions[0])
+    assert int(cache.count[0]) == 14
+    assert len(set(pos.tolist())) == slots           # all slots distinct
+    # stale-first eviction keeps the live window resident: every position
+    # still attendable (> 14-1-window) is in cache
+    m = np.asarray(kv.valid_mask(cache, window=acfg.window)[0])
+    assert m.sum() > 0
+    assert pos.max() == 13
+
+
 def test_decode_h2o_cache_stays_within_budget():
     acfg = AttentionConfig(num_heads=2, num_kv_heads=1, head_dim=8)
     aqua = AquaConfig(k_ratio=1.0, h2o_ratio=0.5, block_dims=1)

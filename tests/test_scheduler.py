@@ -1,0 +1,338 @@
+"""Continuous-batching serve-stack tests: staggered-arrival scheduling
+must be token-identical to solo serving (dense + AQUA backends, H2O on),
+lane surgery must be leak-free, and the H2O keep-set must track the
+``h2o.reference_keep_set`` oracle through the lane-reset path.
+
+The ``slow`` variants run the same checks at full size (more lanes,
+requests, and tokens); CI runs ``pytest -m "not slow"``.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced
+from repro.configs.base import AquaConfig, ServingConfig
+from repro.core.calibration import identity_projections
+from repro.core.h2o import reference_keep_set
+from repro.models import build_model
+from repro.serving import (ContinuousBatchingEngine, LaneScheduler, Request,
+                           ServeEngine, poisson_trace)
+
+POLICIES = {
+    "dense-jnp": dict(aqua=None, backend="dense-jnp"),
+    "aqua-masked-dense": dict(aqua=AquaConfig(k_ratio=0.75, block_dims=1),
+                              backend="aqua-masked-dense"),
+    "aqua-h2o": dict(aqua=AquaConfig(k_ratio=0.75, h2o_ratio=0.5,
+                                     block_dims=1),
+                     backend="aqua-masked-dense"),
+}
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = dataclasses.replace(reduced("qwen3-0.6b"), remat=False,
+                              dtype="float32")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engines(dense_model, policy, scfg):
+    cfg, params = dense_model
+    spec = POLICIES[policy]
+    cfg = dataclasses.replace(cfg, aqua=spec["aqua"])
+    proj = None
+    if spec["aqua"] is not None:
+        proj = identity_projections(cfg.num_layers,
+                                    cfg.attention.num_kv_heads,
+                                    cfg.attention.head_dim)
+    cont = ContinuousBatchingEngine(cfg, params, proj, serving=scfg,
+                                    backend=spec["backend"])
+    solo = ServeEngine(cfg, params, proj, max_seq=scfg.max_seq,
+                       backend=spec["backend"])
+    return cont, solo
+
+
+def _check_equivalence(dense_model, policy, *, num_requests, max_lanes,
+                       max_new, seed):
+    """Staggered-arrival scheduling == solo rectangular serving at T=0."""
+    cfg, _ = dense_model
+    scfg = ServingConfig(max_lanes=max_lanes, max_seq=64,
+                         max_new_tokens=max_new, prompt_bucket=8)
+    cont, solo = _engines(dense_model, policy, scfg)
+    rng = np.random.default_rng(seed)
+    reqs = [Request(uid=i,
+                    tokens=rng.integers(0, cfg.vocab_size,
+                                        size=(int(rng.integers(4, 22)),),
+                                        dtype=np.int32),
+                    max_new_tokens=max_new, arrival=float(i) * 1.5)
+            for i in range(num_requests)]
+    outs = cont.run(reqs)
+    assert len(outs) == num_requests
+    for r in reqs:
+        ref = solo.generate(
+            {"tokens": jnp.asarray(np.asarray(r.tokens)[None])},
+            steps=max_new)
+        np.testing.assert_array_equal(
+            np.asarray(outs[r.uid].tokens), ref.tokens[0],
+            err_msg=f"policy={policy} uid={r.uid}")
+    # staggered arrivals with enough lanes must actually overlap
+    assert cont.stats.mean_occupancy > 1.0, cont.stats
+
+
+@pytest.mark.parametrize("policy", sorted(POLICIES))
+def test_scheduler_equivalence(dense_model, policy):
+    _check_equivalence(dense_model, policy, num_requests=4, max_lanes=3,
+                       max_new=6, seed=0)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", sorted(POLICIES))
+def test_scheduler_equivalence_full(dense_model, policy):
+    _check_equivalence(dense_model, policy, num_requests=10, max_lanes=4,
+                       max_new=16, seed=1)
+
+
+def test_lane_insert_and_reset_are_isolated(dense_model):
+    """insert_lane grafts a B=1 prefill cache into exactly one batch row;
+    reset_lane restores the empty-cache condition; other lanes untouched."""
+    cfg, params = dense_model
+    model = build_model(cfg)
+    max_seq = 32
+    state = model.init_decode_state(3, max_seq)
+    toks = jnp.arange(1, 9, dtype=jnp.int32)[None]
+    _, req = jax.jit(lambda p, b: model.prefill(p, b, max_seq))(
+        params, {"tokens": toks})
+    before = jax.tree.map(np.asarray, state)
+    after = model.insert_lane(state, req, jnp.int32(1))
+    for dst, src, orig in zip(jax.tree.leaves(after.layers),
+                              jax.tree.leaves(req.layers),
+                              jax.tree.leaves(before.layers)):
+        np.testing.assert_array_equal(np.asarray(dst)[:, 1], src[:, 0])
+        np.testing.assert_array_equal(np.asarray(dst)[:, 0], orig[:, 0])
+        np.testing.assert_array_equal(np.asarray(dst)[:, 2], orig[:, 2])
+    reset = model.reset_lane(after, jnp.int32(1), max_seq)
+    for dst, orig in zip(jax.tree.leaves(reset.layers),
+                         jax.tree.leaves(before.layers)):
+        np.testing.assert_array_equal(np.asarray(dst), orig)
+
+
+def test_write_mask_freezes_inactive_lanes(dense_model):
+    """decode_step with write_mask must leave masked-off rows' cache
+    bit-identical (count, K/V, positions, acc_score)."""
+    cfg, params = dense_model
+    model = build_model(cfg)
+    _, state = model.prefill(params, {"tokens": jnp.ones((2, 6), jnp.int32)},
+                             32)
+    toks = jnp.array([3, 4], jnp.int32)
+    _, st2 = model.decode_step(params, state, toks,
+                               write_mask=jnp.array([True, False]))
+    for new, old in zip(jax.tree.leaves(st2.layers),
+                        jax.tree.leaves(state.layers)):
+        np.testing.assert_array_equal(np.asarray(new)[:, 1],
+                                      np.asarray(old)[:, 1])
+    # the unmasked row did advance
+    assert int(st2.layers.count[0, 0]) == int(state.layers.count[0, 0]) + 1
+
+
+def test_h2o_keep_set_tracks_oracle_through_lane_reset(dense_model):
+    """Serve request A then request B through the SAME lane (max_lanes=1
+    forces the reset/overwrite path). B's terminal H2O cache must (a) be
+    bit-identical to serving B on a fresh engine — no leakage of A's
+    acc_score/positions through the lane handoff — and (b) agree with the
+    ``reference_keep_set`` oracle computed from B's full-attention weight
+    history: the recent window exactly, the heavy hitters by majority."""
+    cfg, params = dense_model
+    cfg = dataclasses.replace(
+        cfg, num_layers=1,
+        aqua=AquaConfig(k_ratio=1.0, h2o_ratio=0.25, block_dims=1))
+    # single-layer params: the oracle weight history is unambiguous
+    model = build_model(cfg)
+    params1 = model.init(jax.random.PRNGKey(0))
+    proj = identity_projections(1, cfg.attention.num_kv_heads,
+                                cfg.attention.head_dim)
+    max_seq, max_new = 32, 8
+    budget = max(8, int(0.25 * max_seq))
+    scfg = ServingConfig(max_lanes=1, max_seq=max_seq,
+                         max_new_tokens=max_new)
+    rng = np.random.default_rng(7)
+    prompt_a = rng.integers(0, cfg.vocab_size, size=(14,), dtype=np.int32)
+    prompt_b = rng.integers(0, cfg.vocab_size, size=(12,), dtype=np.int32)
+
+    eng = ContinuousBatchingEngine(cfg, params1, proj, serving=scfg,
+                                   backend="aqua-masked-dense")
+    outs = eng.run([Request(uid=0, tokens=prompt_a, arrival=0.0),
+                    Request(uid=1, tokens=prompt_b, arrival=1.0)])
+    reused = jax.tree.map(np.asarray, eng.last_state)
+
+    fresh_eng = ContinuousBatchingEngine(cfg, params1, proj, serving=scfg,
+                                         backend="aqua-masked-dense")
+    fresh_outs = fresh_eng.run([Request(uid=1, tokens=prompt_b)])
+    fresh = jax.tree.map(np.asarray, fresh_eng.last_state)
+
+    # (a) lane handoff is leak-free: identical tokens AND identical cache
+    np.testing.assert_array_equal(outs[1].tokens, fresh_outs[1].tokens)
+    for a, b in zip(jax.tree.leaves(reused.layers),
+                    jax.tree.leaves(fresh.layers)):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+    # (b) oracle: full-attention weight history of B's realized sequence
+    seq = np.concatenate([prompt_b, np.asarray(outs[1].tokens[:-1])])
+    _, aux = model.forward(params1, {"tokens": jnp.asarray(seq)[None]},
+                           capture=True)
+    q, k = aux["qk"][0]
+    d = q.shape[-1]
+    sc = jnp.einsum("bskgd,btkd->bkgst", q, k) / np.sqrt(d)
+    s = seq.shape[0]
+    causal = jnp.arange(s)[:, None] >= jnp.arange(s)[None, :]
+    w = jax.nn.softmax(jnp.where(causal[None, None, None], sc, -1e30), -1)
+    w_tok = np.asarray(w.sum(axis=(1, 2)))[0]          # (S_q, S_k)
+    kept_oracle = set(np.asarray(
+        reference_keep_set(jnp.asarray(w_tok), budget,
+                           AquaConfig().h2o_recent_frac)).tolist())
+    kept_online = set(int(p) for p in reused.layers.positions[0, 0]
+                      if p >= 0)
+    assert len(kept_online) == budget
+    recent = max(1, int(AquaConfig().h2o_recent_frac * budget))
+    # recent window: exact agreement by construction
+    for p in range(s - recent, s):
+        assert p in kept_online, (p, sorted(kept_online))
+    # heavy hitters: online approximation must agree on the majority
+    assert len(kept_online & kept_oracle) >= budget // 2 + 1, (
+        sorted(kept_online), sorted(kept_oracle))
+
+
+def test_eos_and_length_stop_detection(dense_model):
+    cfg, params = dense_model
+    scfg = ServingConfig(max_lanes=2, max_seq=64, max_new_tokens=5,
+                         prompt_bucket=8)
+    eng = ContinuousBatchingEngine(cfg, params, None, serving=scfg)
+    # find the greedy first token of this prompt, then use it as eos_id
+    solo = ServeEngine(cfg, params, None, max_seq=64)
+    prompt = np.arange(4, dtype=np.int32)
+    first = int(solo.generate({"tokens": jnp.asarray(prompt[None])},
+                              steps=1).tokens[0, 0])
+    outs = eng.run([Request(uid=0, tokens=prompt, eos_id=first),
+                    Request(uid=1, tokens=prompt, eos_id=-1)])
+    assert outs[0].finish_reason == "eos" and len(outs[0].tokens) == 1
+    assert outs[1].finish_reason == "length" and len(outs[1].tokens) == 5
+
+
+def test_top_k_one_is_greedy(dense_model):
+    cfg, params = dense_model
+    scfg = ServingConfig(max_lanes=1, max_seq=64, max_new_tokens=6)
+    eng = ContinuousBatchingEngine(cfg, params, None, serving=scfg)
+    prompt = np.arange(6, dtype=np.int32)
+    hot = eng.run([Request(uid=0, tokens=prompt, temperature=1.0, top_k=1)])
+    greedy = eng.run([Request(uid=0, tokens=prompt, temperature=0.0)])
+    np.testing.assert_array_equal(hot[0].tokens, greedy[0].tokens)
+
+
+def test_poisson_trace_overlaps_lanes(dense_model):
+    """Acceptance: on a Poisson trace the scheduler sustains >1 mean lane
+    occupancy — the rectangular engine structurally cannot overlap."""
+    cfg, params = dense_model
+    scfg = ServingConfig(max_lanes=4, max_seq=64, max_new_tokens=10,
+                         prompt_bucket=8)
+    eng = ContinuousBatchingEngine(cfg, params, None, serving=scfg)
+    reqs = poisson_trace(8, mean_interarrival=2.0, prompt_lens=(6, 10, 14),
+                         max_new_tokens=10, vocab_size=cfg.vocab_size,
+                         seed=3)
+    outs = eng.run(reqs)
+    assert all(len(o.tokens) == 10 for o in outs.values())
+    assert eng.stats.mean_occupancy > 1.0, eng.stats
+    assert eng.stats.requests_finished == 8
+
+
+def test_streaming_event_order(dense_model):
+    """Per-request token indices stream in order 0,1,2,... and exactly one
+    finished event per request."""
+    cfg, params = dense_model
+    scfg = ServingConfig(max_lanes=2, max_seq=64, max_new_tokens=4,
+                         prompt_bucket=8)
+    eng = ContinuousBatchingEngine(cfg, params, None, serving=scfg)
+    reqs = [Request(uid=i, tokens=np.arange(4 + i, dtype=np.int32),
+                    arrival=float(i)) for i in range(3)]
+    seen, finished = {}, set()
+    for ev in eng.serve(reqs):
+        assert ev.index == seen.get(ev.uid, 0)
+        seen[ev.uid] = ev.index + 1
+        if ev.finished:
+            assert ev.uid not in finished
+            finished.add(ev.uid)
+    assert finished == {0, 1, 2} and all(v == 4 for v in seen.values())
+
+
+def test_prompt_bucket_never_pads_past_max_seq(dense_model):
+    """Regression: a prompt landing in the last partial bucket must not be
+    padded past max_seq — that would roll the prompt prefix out of the
+    slot cache during admission and silently corrupt generations."""
+    cfg, params = dense_model
+    scfg = ServingConfig(max_lanes=1, max_seq=20, max_new_tokens=2,
+                         prompt_bucket=16)
+    eng = ContinuousBatchingEngine(cfg, params, None, serving=scfg)
+    prompt = np.arange(18, dtype=np.int32) % cfg.vocab_size
+    outs = eng.run([Request(uid=0, tokens=prompt)])
+    pos = np.asarray(eng.last_state.layers.positions)[0, 0]
+    assert 0 in pos and pos.max() < 20          # prefix kept, no phantoms
+    solo = ServeEngine(cfg, params, None, max_seq=20)
+    ref = solo.generate({"tokens": jnp.asarray(prompt[None])}, steps=2)
+    np.testing.assert_array_equal(np.asarray(outs[0].tokens), ref.tokens[0])
+
+
+def test_request_validation(dense_model):
+    cfg, params = dense_model
+    scfg = ServingConfig(max_lanes=1, max_seq=16, max_new_tokens=8)
+    eng = ContinuousBatchingEngine(cfg, params, None, serving=scfg)
+    with pytest.raises(ValueError, match="exceeds"):
+        eng.run([Request(uid=0, tokens=np.arange(12, dtype=np.int32))])
+    with pytest.raises(ValueError, match="empty"):
+        eng.run([Request(uid=0, tokens=np.zeros((0,), np.int32))])
+
+
+@pytest.mark.parametrize("arch", ["mamba2-370m", "recurrentgemma-9b"])
+def test_nonattention_families_serve_through_lanes(arch):
+    """SSM and hybrid families ride the same lane machinery (the hybrid's
+    unstacked per-layer caches exercise the axis-0 insert_lane override)
+    and stay solo-equivalent at temperature 0."""
+    cfg = dataclasses.replace(reduced(arch), remat=False, dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    scfg = ServingConfig(max_lanes=2, max_seq=32, max_new_tokens=4)
+    eng = ContinuousBatchingEngine(cfg, params, None, serving=scfg)
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i,
+                    tokens=rng.integers(0, cfg.vocab_size, size=(4 + 2 * i,),
+                                        dtype=np.int32),
+                    arrival=float(i)) for i in range(3)]
+    outs = eng.run(reqs)
+    solo = ServeEngine(cfg, params, None, max_seq=32)
+    for r in reqs:
+        ref = solo.generate(
+            {"tokens": jnp.asarray(np.asarray(r.tokens)[None])}, steps=4)
+        np.testing.assert_array_equal(np.asarray(outs[r.uid].tokens),
+                                      ref.tokens[0])
+    assert eng.stats.mean_occupancy > 1.0
+
+
+def test_lane_scheduler_bookkeeping():
+    sched = LaneScheduler(2)
+    for i, t in enumerate((0.0, 0.5, 3.0)):
+        sched.submit(Request(uid=i, tokens=np.zeros((4,), np.int32),
+                             arrival=t))
+    r0 = sched.pop_admissible(0.0)
+    assert r0.uid == 0
+    lane0 = sched.assign(r0)
+    assert sched.pop_admissible(0.0) is None          # uid=1 not arrived yet
+    r1 = sched.pop_admissible(1.0)
+    assert r1.uid == 1
+    lane1 = sched.assign(r1)
+    assert {lane0, lane1} == {0, 1}
+    assert sched.pop_admissible(10.0) is None         # lanes full
+    assert sched.num_active == 2 and sched.has_pending
+    sched.retire(lane1)
+    assert sched.pop_admissible(2.0) is None          # uid=2 not arrived
+    assert sched.pop_admissible(3.0).uid == 2
+    assert sched.request_in(lane0).uid == 0
