@@ -1,0 +1,108 @@
+"""Bench-regression gate: compare a fresh benchmarks/run.py --json dump
+against the committed baseline (BENCH_serving.json at the repo root).
+
+CPU wall-clock is not comparable across CI machines, so throughput gates
+on the *normalized* tokens/s of each serving row — its ratio to the same
+file's `serving/rectangular_serialized` row, which cancels machine speed
+and leaves the scheduling/overlap win the row is meant to protect.
+Deterministic metrics (lane occupancy, kernel HBM-byte ratios, kernel
+max-abs error) gate directly. A baseline row that is missing or skipped
+in the fresh run fails the gate: the canonical row set is part of the
+contract (run the gate under
+XLA_FLAGS=--xla_force_host_platform_device_count=8 so the mesh row
+exists).
+
+Usage (CI):
+    python benchmarks/run.py --fast --json bench-fresh.json
+    python benchmarks/compare.py BENCH_serving.json bench-fresh.json \
+        --threshold 0.20
+
+Wall-clock metrics are best-of-5 over O(100ms+) drives, which bounds the
+observed run-to-run spread of the normalized ratios well inside the 20%
+threshold; a *marginal* failure on a tok_s_rel row is still more likely
+scheduler jitter than a real regression — re-run the job once before
+hunting a culprit, and refresh the baseline (run.py --baseline) when an
+intentional change moves the trajectory.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+_NUM = re.compile(r"([A-Za-z_][A-Za-z0-9_]*)=(-?[0-9.]+(?:e-?[0-9]+)?)\b")
+
+RECTANGULAR = "serving/rectangular_serialized"
+
+
+def load(path):
+    """{row name: (derived string, {metric: float})} from a --json dump."""
+    with open(path) as f:
+        rows = json.load(f)
+    out = {}
+    for row in rows:
+        derived = row["derived"]
+        metrics = {k: float(v) for k, v in _NUM.findall(derived)}
+        out[row["name"]] = (derived, metrics)
+    return out
+
+
+def norm_tok_s(table, name):
+    """tokens/s of `name` relative to the rectangular-serialized row of the
+    same file (machine-speed cancels); absolute when the anchor is absent."""
+    tok_s = table[name][1].get("tok_s")
+    anchor = table.get(RECTANGULAR, ("", {}))[1].get("tok_s")
+    if tok_s is None:
+        return None
+    return tok_s / anchor if anchor else tok_s
+
+
+def compare(base, fresh, threshold):
+    """Yield (row, metric, baseline value, fresh value, ok) judgements."""
+    for name, (derived, metrics) in sorted(base.items()):
+        if name not in fresh:
+            yield name, "present", 1.0, 0.0, False
+            continue
+        f_derived, f_metrics = fresh[name]
+        if "skipped=" in f_derived and "skipped=" not in derived:
+            yield name, "present", 1.0, 0.0, False
+            continue
+        if name.startswith("serving/") and name != RECTANGULAR:
+            b, f = norm_tok_s(base, name), norm_tok_s(fresh, name)
+            if b is not None and f is not None:
+                yield name, "tok_s_rel", b, f, f >= b * (1 - threshold)
+            b, f = metrics.get("occupancy"), f_metrics.get("occupancy")
+            if b is not None and f is not None:
+                yield name, "occupancy", b, f, f >= b * (1 - threshold)
+        b, f = metrics.get("hbm_bytes_ratio"), f_metrics.get("hbm_bytes_ratio")
+        if b is not None and f is not None:
+            yield name, "hbm_bytes_ratio", b, f, f <= b * 1.01
+        b, f = metrics.get("max_abs_err"), f_metrics.get("max_abs_err")
+        if b is not None and f is not None:
+            yield name, "max_abs_err", b, f, f <= max(b * 10.0, 1e-5)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed baseline (BENCH_serving.json)")
+    ap.add_argument("fresh", help="fresh --json dump to judge")
+    ap.add_argument("--threshold", type=float, default=0.20)
+    args = ap.parse_args(argv)
+
+    base, fresh = load(args.baseline), load(args.fresh)
+    checks = failures = 0
+    for name, metric, b, f, ok in compare(base, fresh, args.threshold):
+        mark = "ok        " if ok else "REGRESSION"
+        print(f"{mark}  {name:40s} {metric:16s} base={b:.4g} fresh={f:.4g}")
+        checks += 1
+        failures += 0 if ok else 1
+    if failures:
+        print(f"{failures}/{checks} checks beyond threshold {args.threshold}")
+        sys.exit(1)
+    print(f"bench gate green: {checks} checks over {len(base)} baseline rows")
+
+
+if __name__ == "__main__":
+    main()

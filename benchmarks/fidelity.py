@@ -336,12 +336,29 @@ def serving_throughput() -> List[Row]:
     params = build_model(cfg).init(jax.random.PRNGKey(0))
     ident = identity_projections(cfg.num_layers, cfg.attention.num_kv_heads,
                                  cfg.attention.head_dim)
-    max_new = 12
-    reqs = poisson_trace(8, mean_interarrival=2.0, prompt_lens=(8, 14, 20),
+    # long enough that one drive is an O(100ms+) measurement — the
+    # regression gate keys off these numbers, and best-of-N over a
+    # too-short drive still inherits CI-machine scheduling jitter
+    max_new = 24
+    reqs = poisson_trace(16, mean_interarrival=2.0, prompt_lens=(8, 14, 20),
                          max_new_tokens=max_new, vocab_size=cfg.vocab_size,
                          seed=0)
     scfg = ServingConfig(max_lanes=4, max_seq=64, max_new_tokens=max_new,
                          prompt_bucket=8)
+
+    def timed_drive(eng, repeats: int = 5):
+        """Warm up (compile admit+step), then best-of-N timed drives —
+        the bench-regression gate compares these numbers across CI runs,
+        so a single noisy wall-clock sample is not acceptable."""
+        for o in eng.run(reqs).values():
+            assert o.tokens, o
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.time()
+            outs = eng.run(reqs)
+            best = min(best, time.time() - t0)
+            assert all(len(o.tokens) == max_new for o in outs.values())
+        return best, eng.stats
 
     rows: List[Row] = []
     for backend in ("dense-jnp", "aqua-masked-dense"):
@@ -350,28 +367,46 @@ def serving_throughput() -> List[Row]:
         c = dataclasses.replace(cfg, aqua=aqua)
         eng = ContinuousBatchingEngine(c, params, ident if aqua else None,
                                        serving=scfg, backend=backend)
-        for o in eng.run(reqs).values():       # warm-up: compile admit+step
-            assert o.tokens, o
-        t0 = time.time()
-        outs = eng.run(reqs)
-        dt = time.time() - t0
-        st = eng.stats
-        assert all(len(o.tokens) == max_new for o in outs.values())
+        dt, st = timed_drive(eng)
         rows.append((f"serving/{backend}", dt / max(st.decode_steps, 1) * 1e6,
                      f"tok_s={st.tokens_emitted / dt:.1f} "
                      f"occupancy={st.mean_occupancy:.2f}"))
 
+    # mesh-native serving (2×2 data×model) — the sharded row of the bench
+    # trajectory. Skipped (not silently: a sentinel row records why) when
+    # the platform has fewer than 4 devices; CI's bench-regression gate
+    # runs under XLA_FLAGS=--xla_force_host_platform_device_count=8.
+    if jax.device_count() >= 4:
+        from repro.launch.mesh import make_serving_mesh
+        eng = ContinuousBatchingEngine(cfg, params, None, serving=scfg,
+                                       backend="dense-jnp",
+                                       mesh=make_serving_mesh((2, 2)))
+        dt, st = timed_drive(eng)
+        rows.append(("serving/dense-jnp@mesh2x2",
+                     dt / max(st.decode_steps, 1) * 1e6,
+                     f"tok_s={st.tokens_emitted / dt:.1f} "
+                     f"occupancy={st.mean_occupancy:.2f}"))
+    else:
+        rows.append(("serving/dense-jnp@mesh2x2", 0.0,
+                     f"skipped=devices<4 ({jax.device_count()})"))
+
     # rectangular contrast: one fixed batch per arrival "wave" — requests
-    # cannot overlap across waves, so per-wave occupancy is 1 wave at a time
+    # cannot overlap across waves, so per-wave occupancy is 1 wave at a
+    # time. Also the machine-speed anchor the regression gate normalizes
+    # serving tok/s against, so it gets the same warm-up + best-of-N.
     eng = ServeEngine(cfg, params, None, max_seq=64)
-    t0 = time.time()
-    toks = 0
-    for r in reqs:                       # serialized: no cross-request overlap
-        res = eng.generate(
-            {"tokens": jnp.asarray(np.asarray(r.tokens)[None])},
-            steps=max_new)
-        toks += res.tokens.shape[1]
-    dt = time.time() - t0
+
+    def rect_drive():
+        t0 = time.time()
+        toks = 0
+        for r in reqs:                   # serialized: no cross-request overlap
+            res = eng.generate(
+                {"tokens": jnp.asarray(np.asarray(r.tokens)[None])},
+                steps=max_new)
+            toks += res.tokens.shape[1]
+        return time.time() - t0, toks
+    rect_drive()                         # warm-up: compile per prompt length
+    dt, toks = min(rect_drive() for _ in range(5))
     rows.append(("serving/rectangular_serialized", 0.0,
                  f"tok_s={toks / dt:.1f} occupancy=1.00"))
     return rows

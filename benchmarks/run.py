@@ -9,6 +9,12 @@ via benchmarks.roofline, not from CPU timing.
 CI smoke); ``--json PATH`` additionally writes the rows as a JSON list of
 ``{"name", "us_per_call", "derived"}`` objects (uploaded as a CI
 artifact).
+
+``--baseline`` refreshes the committed bench-trajectory baseline: it
+implies ``--fast`` and writes the canonical ``BENCH_serving.json`` at the
+repo root (run under XLA_FLAGS=--xla_force_host_platform_device_count=8
+so the mesh-serving row is measured, then commit the diff; CI's
+``benchmarks/compare.py`` gate judges every PR against it).
 """
 from __future__ import annotations
 
@@ -31,7 +37,13 @@ def main(argv=None) -> None:
                     help="trained-model-free subset (CI smoke)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as JSON to PATH")
+    ap.add_argument("--baseline", action="store_true",
+                    help="refresh the committed BENCH_serving.json "
+                         "(implies --fast)")
     args = ap.parse_args(argv)
+    if args.baseline:
+        args.fast = True
+        args.json = os.path.join(_ROOT, "BENCH_serving.json")
 
     from benchmarks import fidelity
     fast_benches = [

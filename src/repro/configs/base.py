@@ -234,11 +234,24 @@ class ServingConfig:
     # per prompt length. Policies that reject ragged prefill (sliding
     # window, H2O eviction) fall back to exact-length prefill.
     prompt_bucket: int = 16
+    # Device mesh for mesh-native serving: ``mesh_shape`` (e.g. (4, 2))
+    # over ``mesh_axes`` (data × model). None serves single-device. Decode
+    # lanes are data-parallel over the data axes; params and the KV cache
+    # (including AQUA dim-sliced key lanes and H2O acc_score) shard over
+    # the model axis per distributed.sharding's name+shape rules.
+    mesh_shape: Optional[Tuple[int, ...]] = None
+    mesh_axes: Tuple[str, ...] = ("data", "model")
 
     def validate(self) -> None:
         assert self.max_lanes >= 1
         assert self.max_new_tokens >= 1
         assert self.prompt_bucket >= 1
+        if self.mesh_shape is not None:
+            assert len(self.mesh_shape) == len(self.mesh_axes), \
+                (self.mesh_shape, self.mesh_axes)
+            assert all(s >= 1 for s in self.mesh_shape), self.mesh_shape
+            assert all(a in ("pod", "data", "model")
+                       for a in self.mesh_axes), self.mesh_axes
 
 
 @dataclass(frozen=True)

@@ -37,13 +37,18 @@ Conventions:
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import functools
+import logging
 import math
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from repro import runtime_flags as _rtf
+
+logger = logging.getLogger(__name__)
 
 
 def _scan(*args, **kw):
@@ -171,6 +176,99 @@ def _aqua_project(q, k, aqua: Optional[AquaConfig], proj, head_dim: int):
 def _aqua_mask(qh, aqua: AquaConfig, head_dim: int):
     return aqua_lib.magnitude_mask(qh, aqua.topk_dims(head_dim),
                                    block_dims=aqua.block_dims)
+
+
+# ---------------------------------------------------------------------------
+# Mesh-native decode: a shard_map-wrapped masked-dense core for the
+# ``dense-jnp`` and ``aqua-masked-dense`` backends.
+#
+# Per-(batch, kv-head) decode attention is embarrassingly parallel — the
+# softmax runs over the slot axis, which every shard holds in full — so
+# under a (data × model) serving mesh the core partitions lanes over the
+# data axes and KV heads over the model axis with *zero* collectives
+# inside the wrapped region. Wrapping it in shard_map (instead of leaving
+# GSPMD to infer through the mask/where/softmax chain) pins that layout:
+# the KV cache never gathers, and the only model-axis communication in a
+# decode step is the reduce for the output projection, outside the core.
+#
+# The mesh is installed around *trace time* by the serving engine
+# (``use_decode_mesh``); compiled executables bake it in, so concurrent
+# single-device engines in the same process are unaffected.
+# ---------------------------------------------------------------------------
+
+_DECODE_MESH = None
+
+
+def decode_mesh():
+    return _DECODE_MESH
+
+
+@contextlib.contextmanager
+def use_decode_mesh(mesh):
+    """Install ``mesh`` as the decode-sharding mesh for calls traced inside
+    this context (no-op when ``mesh`` is None)."""
+    global _DECODE_MESH
+    prev = _DECODE_MESH
+    _DECODE_MESH = mesh
+    try:
+        yield
+    finally:
+        _DECODE_MESH = prev
+
+
+@functools.lru_cache(maxsize=None)
+def _log_mesh_kernel_fallback(backend_name: str, mode: str) -> None:
+    logger.warning(
+        "attention backend %r: the Pallas %s kernel is not integrated with "
+        "the serving mesh's SPMD partitioner; falling back to the "
+        "shard_map/jnp reference path for mesh-native serving",
+        backend_name, mode)
+
+
+def _masked_dense_decode_core(qq: jax.Array, k: jax.Array, v: jax.Array,
+                              positions: jax.Array, count: jax.Array,
+                              *, head_dim: int, window: Optional[int]
+                              ) -> Tuple[jax.Array, jax.Array]:
+    """Reference decode core on cache leaves. qq (B, KV, G, Dk) —
+    magnitude-masked when AQUA is on; k (B, KV, S, Dk); v (B, KV, S, Dv);
+    positions (B, S); count (B,). Returns (out (B, KV, G, Dv),
+    weights (B, KV, G, S) for H2O accumulation)."""
+    scores = jnp.einsum("bkgd,bksd->bkgs", qq, k.astype(qq.dtype))
+    scores = scores.astype(jnp.float32) / jnp.sqrt(float(head_dim))
+    vm = kv.valid_mask_from(positions, count, window=window)
+    scores = jnp.where(vm[:, None, None, :], scores, NEG_INF)
+    weights = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", weights.astype(v.dtype), v)
+    return out, weights
+
+
+def _shard_mapped_decode_core(mesh, qq, k, v, positions, count, *,
+                              head_dim: int, window: Optional[int]):
+    """Run the masked-dense decode core under shard_map on ``mesh``:
+    lanes (batch) over the data axes, KV heads over ``model``, softmax
+    axis intact per shard. Falls back to the plain core when neither axis
+    divides its mesh extent (the specs sanitize to fully-replicated)."""
+    from jax.experimental.shard_map import shard_map
+
+    from repro.distributed import sharding as dsh
+
+    b, kvh = qq.shape[0], qq.shape[1]
+    dp = dsh.data_axes(mesh) or None
+    row = dsh.sanitize(jax.sharding.PartitionSpec(dp, "model"),
+                       (b, kvh), mesh)
+    batch_ax, kv_ax = row[0], row[1]
+    core = functools.partial(_masked_dense_decode_core, head_dim=head_dim,
+                             window=window)
+    if batch_ax is None and kv_ax is None:
+        return core(qq, k, v, positions, count)
+    P = jax.sharding.PartitionSpec
+    head4 = P(batch_ax, kv_ax, None, None)
+    return shard_map(
+        core, mesh=mesh,
+        in_specs=(head4, head4, head4, P(batch_ax, None), P(batch_ax)),
+        out_specs=(head4, head4),
+        check_rep=False,
+    )(qq, k, v, positions, count)
 
 
 # ---------------------------------------------------------------------------
@@ -517,6 +615,13 @@ def prefill_attention(params: dict, x: jax.Array, cfg: AttentionConfig,
                 or kh.shape[-1] % aqua.block_dims != 0):
             backend = get_backend("flash" if _rtf.kernels_preferred()
                                   else "aqua-masked-dense")
+    if backend.requires_pallas and decode_mesh() is not None:
+        # mesh-native serving: Pallas calls are opaque to the SPMD
+        # partitioner (a sharded operand would silently all-gather at the
+        # kernel boundary) — route to the GSPMD-shardable jnp reference
+        _log_mesh_kernel_fallback(backend.name, "prefill")
+        backend = get_backend("aqua-masked-dense" if aqua_on
+                              else "dense-jnp")
     if backend.name == "aqua-block-sparse":
         qq, kk = qh, kh          # unmasked: kernel selects dim-blocks
     elif aqua_on:
@@ -693,23 +798,33 @@ def decode_attention(params: dict, x_t: jax.Array, cache: kv.AttnCache,
     # Registry dispatch: the block-sparse decode kernel serves the
     # contiguous full-cache policy (no ring buffer, no eviction — those
     # need the masked-dense path's per-slot position masking / weights).
+    # Under a serving mesh the kernel falls back to the shard_map-wrapped
+    # reference: the Pallas call is opaque to the SPMD partitioner.
     backend = resolve_backend(cfg.backend, aqua=aqua)
-    if (backend.decode is not None and aqua_on and not h2o
-            and cfg.window is None and aqua.block_dims > 1
-            and q.shape[-1] % aqua.block_dims == 0):
+    kernel_ok = (backend.decode is not None and aqua_on and not h2o
+                 and cfg.window is None and aqua.block_dims > 1
+                 and q.shape[-1] % aqua.block_dims == 0)
+    if kernel_ok and decode_mesh() is not None:
+        _log_mesh_kernel_fallback(backend.name, "decode")
+        kernel_ok = False
+    if kernel_ok:
         out = backend.decode(q, cache, cfg=cfg, aqua=aqua)
         out = jnp.einsum("bkgd,kgdm->bm", out, params["wo"].astype(x_t.dtype))
         return out, cache
 
-    # masked-dense reference: materialize the per-query magnitude mask
+    # masked-dense reference: materialize the per-query magnitude mask;
+    # shard_map-wrapped (lanes × KV heads) when a serving mesh is installed
     qq = q * _aqua_mask(q, aqua, head_dim) if aqua_on else q
-    scores = jnp.einsum("bkgd,bksd->bkgs", qq, cache.k.astype(qq.dtype))
-    scores = scores.astype(jnp.float32) / jnp.sqrt(float(head_dim))
-    vm = kv.valid_mask(cache, window=cfg.window)  # (B, S_slots)
-    scores = jnp.where(vm[:, None, None, :], scores, NEG_INF)
-    weights = jax.nn.softmax(scores, axis=-1)
+    mesh = decode_mesh()
+    if mesh is not None:
+        out, weights = _shard_mapped_decode_core(
+            mesh, qq, cache.k, cache.v, cache.positions, cache.count,
+            head_dim=head_dim, window=cfg.window)
+    else:
+        out, weights = _masked_dense_decode_core(
+            qq, cache.k, cache.v, cache.positions, cache.count,
+            head_dim=head_dim, window=cfg.window)
     if h2o:
         cache = kv.accumulate_h2o(cache, weights, write_mask=write_mask)
-    out = jnp.einsum("bkgs,bksd->bkgd", weights.astype(cache.v.dtype), cache.v)
     out = jnp.einsum("bkgd,kgdm->bm", out, params["wo"].astype(x_t.dtype))
     return out, cache

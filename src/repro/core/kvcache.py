@@ -135,10 +135,17 @@ def insert(cache: AttnCache, slot: jax.Array, k_new: jax.Array,
 
 def valid_mask(cache: AttnCache, *, window: Optional[int]) -> jax.Array:
     """(B, S_slots) bool — slots attendable by the current token."""
-    cur = cache.count[:, None] - 1  # position of the token now attending
-    m = (cache.positions >= 0) & (cache.positions <= cur)
+    return valid_mask_from(cache.positions, cache.count, window=window)
+
+
+def valid_mask_from(positions: jax.Array, count: jax.Array, *,
+                    window: Optional[int]) -> jax.Array:
+    """``valid_mask`` on bare arrays — the shard_map decode path calls
+    this on per-shard cache leaves rather than a full AttnCache."""
+    cur = count[:, None] - 1  # position of the token now attending
+    m = (positions >= 0) & (positions <= cur)
     if window is not None:
-        m &= cache.positions > (cur - window)
+        m &= positions > (cur - window)
     return m
 
 

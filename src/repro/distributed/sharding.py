@@ -39,12 +39,18 @@ def _axis_size(mesh: Mesh, axes) -> int:
 
 
 def sanitize(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
-    """Drop spec entries whose mesh-axis size doesn't divide the dim."""
+    """Drop spec entries whose mesh-axis size doesn't divide the dim, or
+    that name an axis the mesh doesn't carry (data-only serving meshes
+    have no ``model`` axis)."""
     out = []
     for i in range(len(shape)):
         s = spec[i] if i < len(spec) else None
-        if s is not None and shape[i] % _axis_size(mesh, s) != 0:
-            s = None
+        if s is not None:
+            axes = (s,) if isinstance(s, str) else tuple(s)
+            if any(a not in mesh.shape for a in axes):
+                s = None
+            elif shape[i] % _axis_size(mesh, s) != 0:
+                s = None
         out.append(s)
     return P(*out)
 
@@ -233,7 +239,8 @@ def decode_state_pspec(path, shape, mesh: Mesh, *,
 
 
 def make_state_shardings(state, mesh: Mesh, *, kv_heads: int, batch: int):
-    kv_ok = kv_heads > 0 and kv_heads % mesh.shape["model"] == 0
+    model = mesh.shape.get("model", 1)   # data-only meshes: no TP axis
+    kv_ok = kv_heads > 0 and kv_heads % model == 0
     b_ok = batch % _axis_size(mesh, data_axes(mesh)) == 0
 
     def one(path, leaf):
@@ -244,6 +251,36 @@ def make_state_shardings(state, mesh: Mesh, *, kv_heads: int, batch: int):
 
 def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Serving lane rules (continuous-batching engine).
+#
+# A decode *lane* is one batch row of the shared decode state; the engine's
+# per-lane vectors (LaneState fields, sampled tokens, stop flags) are (L,)
+# arrays whose axis is the same batch axis the decode caches carry — so both
+# shard over the data axes together, keeping the jitted sample-in-step
+# decode data-parallel end to end (no gather between the model step and the
+# per-lane sampler).
+# ---------------------------------------------------------------------------
+
+
+def lane_pspec(mesh: Mesh, num_lanes: int) -> P:
+    """(L,) per-lane vectors: shard over pod×data when divisible."""
+    dp = data_axes(mesh)
+    if not dp:
+        return P(None)
+    return sanitize(P(dp), (num_lanes,), mesh)
+
+
+def make_lane_shardings(tree, mesh: Mesh):
+    """NamedShardings for a pytree of (L,) / (L, ...) per-lane leaves
+    (leading axis = lane). Non-lane trailing dims stay replicated."""
+    def one(leaf):
+        spec = lane_pspec(mesh, leaf.shape[0])
+        return NamedSharding(mesh, P(spec[0], *([None] * (len(leaf.shape)
+                                                          - 1))))
+    return jax.tree.map(one, tree)
 
 
 # ---------------------------------------------------------------------------

@@ -5,6 +5,8 @@ module never touches jax device state.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 
 
@@ -20,6 +22,47 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_local_mesh():
     """1-device mesh with the production axis names (CPU tests)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_serving_mesh(shape, axes=("data", "model")):
+    """Mesh over the first prod(shape) available devices (serving engine).
+
+    Unlike the fixed production meshes above, serving meshes come from the
+    ``ServingConfig`` / ``--mesh`` flag and must work on whatever devices
+    exist — 8 forced host-platform CPU devices in CI, a TPU slice in
+    production. Raises with the CPU fake-device recipe when the platform
+    has too few devices.
+    """
+    import numpy as np
+
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < n:
+        raise ValueError(
+            f"mesh {tuple(shape)} needs {n} devices, found {len(devs)}; "
+            "on CPU, launch with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n}")
+    return jax.sharding.Mesh(
+        np.asarray(devs[:n]).reshape(tuple(shape)), tuple(axes))
+
+
+def parse_mesh_spec(spec: str):
+    """Parse a ``--mesh`` CLI value: "4x2" -> ((4, 2), (data, model));
+    "2x2x2" -> ((2, 2, 2), (pod, data, model)); "4" -> ((4, 1),
+    (data, model)) — pure data parallelism keeps a singleton model axis,
+    since the sharding rules address ``model`` by name; "1x1"/"" -> None
+    (single-device serving, no mesh)."""
+    if not spec:
+        return None
+    shape = tuple(int(x) for x in spec.lower().split("x"))
+    if math.prod(shape) == 1:
+        return None
+    if len(shape) == 1:
+        shape = (shape[0], 1)
+    axes = {2: ("data", "model"), 3: ("pod", "data", "model")}.get(len(shape))
+    if axes is None:
+        raise ValueError(f"--mesh {spec!r}: expected 1-3 'x'-separated dims")
+    return shape, axes
 
 
 # TPU v5e hardware constants used by the roofline analysis (per chip).

@@ -5,9 +5,19 @@ Drives the continuous-batching engine over a Poisson arrival trace
 lengths) and reports throughput + lane occupancy. ``--rectangular``
 falls back to the old fixed-batch ``ServeEngine`` drive for comparison.
 
+``--mesh DxM`` serves mesh-native on a data×model device mesh (decode
+lanes data-parallel, params/KV cache tensor-parallel); ``--verify``
+re-serves the same trace single-device and asserts token-identical
+outputs (the multi-device CI acceptance check).
+
 CLI (CPU-scale):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --k-ratio 0.75 --h2o-ratio 0.5 --requests 8 --lanes 4
+
+  # 4x2 data×model mesh on 8 forced host devices, verified vs 1-device
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python -m repro.launch.serve --arch qwen3-0.6b --reduced \
+      --requests 8 --lanes 8 --mesh 4x2 --verify
 """
 from __future__ import annotations
 
@@ -54,6 +64,12 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--rectangular", action="store_true",
                     help="old fixed-batch ServeEngine drive (comparison)")
+    ap.add_argument("--mesh", default="",
+                    help="serving mesh 'DATAxMODEL' (e.g. 4x2) or "
+                         "'PODxDATAxMODEL'; empty/1x1 = single device")
+    ap.add_argument("--verify", action="store_true",
+                    help="re-serve the trace single-device and require "
+                         "token-identical outputs (exits 1 on mismatch)")
     args = ap.parse_args()
 
     cfg = reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -88,11 +104,18 @@ def main():
         _drive_rectangular(cfg, params, proj, args)
         return
 
+    from repro.launch.mesh import make_serving_mesh, parse_mesh_spec
+    mesh_spec = parse_mesh_spec(args.mesh)
+    mesh = None
+    if mesh_spec is not None:
+        mesh = make_serving_mesh(*mesh_spec)
+        print(f"[serve] mesh {dict(mesh.shape)} over {mesh.size} "
+              f"{mesh.devices.flat[0].platform} devices")
     scfg = ServingConfig(max_lanes=args.lanes, max_seq=args.max_seq,
                          max_new_tokens=args.steps,
                          temperature=args.temperature)
     eng = ContinuousBatchingEngine(cfg, params, proj, serving=scfg,
-                                   backend=args.backend)
+                                   backend=args.backend, mesh=mesh)
     prompt_lens = tuple(int(x) for x in args.prompt_lens.split(","))
     reqs = poisson_trace(args.requests,
                          mean_interarrival=args.mean_interarrival,
@@ -111,7 +134,9 @@ def main():
 
     t0 = time.time()
     finished = 0
+    streamed: dict = {}
     for ev in eng.serve(reqs):
+        streamed.setdefault(ev.uid, []).append(ev.token)
         if ev.finished:
             finished += 1
             print(f"[serve] request {ev.uid} done: {ev.index + 1} tokens "
@@ -125,6 +150,40 @@ def main():
           f"mean lane occupancy {st.mean_occupancy:.2f}/{args.lanes}")
     print(f"[serve] KV cache bytes @ {args.lanes} lanes: "
           f"{eng.cache_bytes():,}")
+
+    if args.verify:
+        # Token-identity reference. At greedy (temperature 0) the trace
+        # re-serves on a fresh SINGLE-DEVICE engine — cross-partitioning
+        # equality only holds there, since resharding the model axis
+        # reorders float reductions and Gumbel sampling amplifies ulp
+        # differences. At temperature > 0 each request instead re-serves
+        # SOLO on a fresh same-mesh engine (empty lanes, arrival 0): that
+        # checks the placement/co-tenant independence the (uid, counter)
+        # RNG fold guarantees, and would catch e.g. a key folded on the
+        # lane index — a batched same-trace rerun would not.
+        if args.temperature > 0:
+            where = "solo same-mesh"
+            ref = {}
+            for r in reqs:
+                solo_eng = ContinuousBatchingEngine(
+                    cfg, params, proj, serving=scfg, backend=args.backend,
+                    mesh=mesh)
+                ref.update(solo_eng.run(
+                    [dataclasses.replace(r, arrival=0.0)]))
+        else:
+            where = "single-device"
+            ref_eng = ContinuousBatchingEngine(cfg, params, proj,
+                                               serving=scfg,
+                                               backend=args.backend)
+            ref = ref_eng.run(reqs)
+        bad = [uid for uid, toks in streamed.items()
+               if list(ref[uid].tokens) != toks]
+        if bad:
+            print(f"[serve] VERIFY FAILED: outputs diverge from the "
+                  f"{where} reference for uids {bad}")
+            raise SystemExit(1)
+        print(f"[serve] verify: all {len(streamed)} requests "
+              f"token-identical to the {where} reference engine")
 
 
 def _drive_rectangular(cfg, params, proj, args):

@@ -32,6 +32,28 @@ class LM:
         self.cfg = cfg
         self.dtype = jnp.dtype(cfg.dtype)
         self.param_dtype = jnp.dtype(cfg.param_dtype)
+        # mesh-native serving: DecodeState-shaped pytree of NamedShardings
+        # (None = single-device; see set_state_shardings)
+        self._state_shardings = None
+
+    # -- mesh-native serving ------------------------------------------
+    def set_state_shardings(self, shardings) -> None:
+        """Install decode-state shardings (a DecodeState-shaped pytree of
+        ``NamedSharding`` leaves, or None to clear). While installed, the
+        lane-surgery APIs re-constrain their results, so a B=1 prefill
+        graft into a sharded multi-lane state stays on the mesh — GSPMD
+        sees an explicit anchor instead of inferring (and possibly
+        resharding) through the scatter, and nothing round-trips the host.
+        Constraints apply under jit; the serving engine only grafts inside
+        its jitted admission step."""
+        self._state_shardings = shardings
+
+    def constrain_state(self, state: DecodeState) -> DecodeState:
+        if self._state_shardings is None:
+            return state
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s),
+            state, self._state_shardings)
 
     # -- required API -------------------------------------------------
     def init(self, rng: jax.Array):
@@ -78,12 +100,14 @@ class LM:
         K/V slots, positions, count, and H2O ``acc_score`` (and AQUA
         dim-sliced K lanes ride along: the leaves are already projected/
         sliced identically on both sides since shapes derive from the same
-        config + max_seq). jit-safe with a traced ``lane``."""
+        config + max_seq). jit-safe with a traced ``lane``; when state
+        shardings are installed the grafted state is re-constrained to
+        them (sharding-preserving lane surgery)."""
         lane_set = lambda dst, src: dst.at[:, lane].set(src[:, 0])
-        return DecodeState(
+        return self.constrain_state(DecodeState(
             layers=jax.tree.map(lane_set, state.layers, req_state.layers),
             extra=jax.tree.map(lane_set, state.extra, req_state.extra),
-        )
+        ))
 
     def reset_lane(self, state: DecodeState, lane: jax.Array,
                    max_seq: int) -> DecodeState:

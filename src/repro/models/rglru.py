@@ -270,6 +270,6 @@ class HybridLM(LM):
     def insert_lane(self, state: DecodeState, req_state: DecodeState,
                     lane):
         lane_set = lambda dst, src: dst.at[lane].set(src[0])
-        return DecodeState(
+        return self.constrain_state(DecodeState(
             layers=jax.tree.map(lane_set, state.layers, req_state.layers),
-            extra=jax.tree.map(lane_set, state.extra, req_state.extra))
+            extra=jax.tree.map(lane_set, state.extra, req_state.extra)))

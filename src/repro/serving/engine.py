@@ -24,6 +24,16 @@ per-request tokens.
 Attention backend: both engines flow through the backend registry in
 ``repro.core.attention`` (selected by ``cfg.attention.backend``,
 overridable per-engine via the ``backend`` constructor argument).
+
+Mesh-native serving: pass ``mesh=`` (or set ``ServingConfig.mesh_shape``)
+and the continuous-batching engine runs the whole serve loop under an
+explicit data×model mesh — params and the KV cache (AQUA dim-sliced key
+lanes, H2O ``acc_score``) shard over ``model`` per
+``distributed.sharding``'s rules, decode lanes shard over the data axes,
+the decode attention core runs under ``shard_map``, and the lane-surgery
+admission path preserves shardings end to end (every jitted entry point
+is pinned with ``out_shardings``). Single-device behavior is untouched
+when no mesh is configured.
 """
 from __future__ import annotations
 
@@ -241,7 +251,8 @@ class ContinuousBatchingEngine:
     def __init__(self, cfg: ModelConfig, params,
                  projections: Optional[AquaProjections] = None,
                  serving: ServingConfig = ServingConfig(),
-                 rng_seed: int = 0, backend: Optional[str] = None):
+                 rng_seed: int = 0, backend: Optional[str] = None,
+                 mesh=None):
         if backend is not None and cfg.attention is not None:
             from repro.core.attention import resolve_backend
             resolve_backend(backend, aqua=cfg.aqua)
@@ -269,11 +280,76 @@ class ContinuousBatchingEngine:
             and (cfg.attention is None or cfg.attention.window is None)
             and h2o_budget(cfg.aqua, serving.max_seq) is None)
 
+        # mesh-native serving: an explicit mesh (or ServingConfig.mesh_shape)
+        # shards params + decode caches over `model` and decode lanes over
+        # the data axes; every jitted entry point is pinned to those
+        # shardings so the serve loop never reshards or bounces device state
+        # through the host
+        self.mesh = mesh
+        if self.mesh is None and serving.mesh_shape is not None:
+            from repro.launch.mesh import make_serving_mesh
+            self.mesh = make_serving_mesh(serving.mesh_shape,
+                                          serving.mesh_axes)
+        self._lane_order = None
+        admit_sh = step_sh = None
+        if self.mesh is not None:
+            admit_sh, step_sh = self._install_mesh()
+
         # `use_top_k` is static: traffic without top-k compiles the decode
         # step without the per-row dynamic-threshold full-vocab sort
         self._admit = jax.jit(self._admit_impl,
-                              static_argnames=("use_top_k",))
-        self._step = jax.jit(self._step_impl, static_argnames=("use_top_k",))
+                              static_argnames=("use_top_k",),
+                              out_shardings=admit_sh)
+        self._step = jax.jit(self._step_impl, static_argnames=("use_top_k",),
+                             out_shardings=step_sh)
+
+    def _install_mesh(self):
+        """Shard params/projections, derive decode-state + lane-state
+        shardings, and install them on the model (sharding-preserving lane
+        surgery) and the attention decode path (shard_map core). Returns
+        (admit, step) ``out_shardings`` pinning the jitted entry points."""
+        from repro.distributed import sharding as dsh
+
+        mesh, s = self.mesh, self.scfg
+        self.params = jax.device_put(
+            self.params, dsh.make_param_shardings(self.params, mesh))
+        if self.proj is not None:
+            self.proj = jax.device_put(self.proj, dsh.replicated(mesh))
+        kvh = (self.cfg.attention.num_kv_heads
+               if self.cfg.attention is not None else 0)
+        state_struct = jax.eval_shape(
+            lambda: self.model.init_decode_state(s.max_lanes, s.max_seq))
+        self._state_sh = dsh.make_state_shardings(
+            state_struct, mesh, kv_heads=kvh, batch=s.max_lanes)
+        self.model.set_state_shardings(self._state_sh)
+        self._lane_sh = dsh.make_lane_shardings(
+            jax.eval_shape(lambda: _init_lane_state(s.max_lanes)), mesh)
+        self._init_state = jax.jit(
+            lambda: self.model.init_decode_state(s.max_lanes, s.max_seq),
+            out_shardings=self._state_sh)
+        self._init_lanes = jax.jit(lambda: _init_lane_state(s.max_lanes),
+                                   out_shardings=self._lane_sh)
+        # admissions interleave lanes across data shards so concurrent
+        # prefill grafts and active-lane occupancy spread over the
+        # data-parallel groups instead of piling onto shard 0's lane block
+        dsize = math.prod(mesh.shape[a] for a in ("pod", "data")
+                          if a in mesh.shape)
+        if dsize > 1 and s.max_lanes % dsize == 0:
+            per = s.max_lanes // dsize
+            self._lane_order = [g * per + i for i in range(per)
+                                for g in range(dsize)]
+        vec = jax.sharding.NamedSharding(mesh,
+                                         dsh.lane_pspec(mesh, s.max_lanes))
+        rep = dsh.replicated(mesh)
+        admit_sh = (rep, rep, self._state_sh, self._lane_sh)
+        step_sh = (self._state_sh, self._lane_sh, vec, vec, vec)
+        return admit_sh, step_sh
+
+    def _use_mesh(self):
+        """Trace-time context: installs (or clears) the decode mesh for the
+        shard_map attention core while this engine's steps trace."""
+        from repro.core.attention import use_decode_mesh
+        return use_decode_mesh(self.mesh)
 
     # -- jitted bodies -------------------------------------------------
     def _admit_impl(self, params, batch, state, lanes: LaneState, lane,
@@ -367,7 +443,8 @@ class ContinuousBatchingEngine:
         """Drive a trace of requests to completion, yielding one
         ``StreamEvent`` per generated token (in emission order). Aggregate
         trace statistics land in ``self.stats``."""
-        sched = LaneScheduler(self.scfg.max_lanes)
+        sched = LaneScheduler(self.scfg.max_lanes,
+                              lane_order=self._lane_order)
         use_top_k = False
         for r in requests:
             r = self._normalize(r)
@@ -376,9 +453,12 @@ class ContinuousBatchingEngine:
 
         rng = jax.random.fold_in(self._base_rng, self._serves)
         self._serves += 1
-        state = self.model.init_decode_state(self.scfg.max_lanes,
-                                             self.scfg.max_seq)
-        lanes = _init_lane_state(self.scfg.max_lanes)
+        if self.mesh is not None:
+            state, lanes = self._init_state(), self._init_lanes()
+        else:
+            state = self.model.init_decode_state(self.scfg.max_lanes,
+                                                 self.scfg.max_seq)
+            lanes = _init_lane_state(self.scfg.max_lanes)
         # exposed for inspection/tests (terminal lane state after a drive)
         self.last_state, self.last_lanes = state, lanes
         stats = ScheduleStats()
@@ -397,11 +477,12 @@ class ContinuousBatchingEngine:
                 if req is None:
                     break
                 lane = sched.assign(req)
-                tok, done, state, lanes = self._admit(
-                    self.params, self._prefill_batch(req), state, lanes,
-                    jnp.int32(lane), self.proj, rng, req.max_new_tokens,
-                    req.temperature, req.top_k, req.eos_id, req.uid,
-                    use_top_k=use_top_k)
+                with self._use_mesh():
+                    tok, done, state, lanes = self._admit(
+                        self.params, self._prefill_batch(req), state, lanes,
+                        jnp.int32(lane), self.proj, rng, req.max_new_tokens,
+                        req.temperature, req.top_k, req.eos_id, req.uid,
+                        use_top_k=use_top_k)
                 self.last_state, self.last_lanes = state, lanes
                 t, d = int(tok[0]), bool(done[0])
                 stats.tokens_emitted += 1
@@ -417,9 +498,10 @@ class ContinuousBatchingEngine:
                     continue
                 break
 
-            state, lanes, tok, emitted, done = self._step(
-                self.params, state, lanes, self.proj, rng,
-                use_top_k=use_top_k)
+            with self._use_mesh():
+                state, lanes, tok, emitted, done = self._step(
+                    self.params, state, lanes, self.proj, rng,
+                    use_top_k=use_top_k)
             self.last_state, self.last_lanes = state, lanes
             tok_h = np.asarray(tok)
             em_h = np.asarray(emitted)

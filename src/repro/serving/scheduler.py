@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import bisect
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -96,16 +96,29 @@ class LaneScheduler:
     Pending requests are kept arrival-ordered (FIFO among simultaneous
     arrivals by submission order); lanes are recycled LIFO so repeated
     light traffic stays in a warm lane prefix.
+
+    ``lane_order`` overrides the default 0..L-1 assignment preference —
+    the mesh-native engine passes an order interleaved across the data
+    shards of its lane sharding, so light traffic spreads over the
+    data-parallel groups instead of concentrating prefill grafts and
+    active-lane occupancy on shard 0's lane block. Host-side only: the
+    device step is oblivious to which lanes are preferred.
     """
 
-    def __init__(self, max_lanes: int):
+    def __init__(self, max_lanes: int,
+                 lane_order: Optional[Sequence[int]] = None):
         assert max_lanes >= 1
         self.max_lanes = max_lanes
         self._pending: List[Request] = []
         self._keys: List[tuple] = []        # (arrival, seq) sort keys
         self._seq = 0
         self._lane_req: List[Optional[Request]] = [None] * max_lanes
-        self._free: List[int] = list(range(max_lanes - 1, -1, -1))
+        order = (list(range(max_lanes)) if lane_order is None
+                 else list(lane_order))
+        assert sorted(order) == list(range(max_lanes)), \
+            f"lane_order must permute 0..{max_lanes - 1}: {lane_order}"
+        # stack: pop() assigns, so the preferred-first order goes reversed
+        self._free: List[int] = order[::-1]
 
     # -- submission ----------------------------------------------------
     def submit(self, req: Request) -> None:

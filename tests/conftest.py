@@ -1,7 +1,16 @@
 import os
 import sys
 
-# tests run single-device on CPU; the dry-run (and only the dry-run)
-# spawns its own subprocess with 512 host devices.
+# Tests run on CPU. The host platform is forced to 8 fake devices so the
+# sharded-serving / TP/DP code paths (tests/test_sharded_serving.py) are
+# exercised by every local run, exactly like the CI `multidevice` job; a
+# caller-provided device-count flag wins. Single-device semantics are
+# unaffected for the rest of the suite — arrays live on device 0 unless a
+# test builds a mesh. (The dry-run spawns its own subprocess with 512
+# host devices; see launch/dryrun.py.)
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

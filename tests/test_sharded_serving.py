@@ -1,0 +1,233 @@
+"""Mesh-native serving tests (8 forced host devices, see conftest.py).
+
+The continuous-batching engine under a data×model mesh must be
+token-identical to the single-device engines at temperature 0 (and at
+temperature > 0 — the per-request RNG folds on (uid, token counter), so
+sampling is placement-independent), keep its decode state sharded across
+admissions (sharding-preserving lane surgery), and route Pallas-kernel
+backends to the shard_map/jnp reference path with a logged reason.
+"""
+import dataclasses
+import logging
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import reduced
+from repro.configs.base import AquaConfig, ServingConfig
+from repro.core import attention as attn_mod
+from repro.core.calibration import identity_projections
+from repro.distributed import sharding as dsh
+from repro.models import build_model
+from repro.serving import (ContinuousBatchingEngine, LaneScheduler, Request,
+                           ServeEngine)
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+def _mesh(shape=(4, 2)):
+    from repro.launch.mesh import make_serving_mesh
+    return make_serving_mesh(shape)
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = dataclasses.replace(reduced("qwen3-0.6b"), remat=False,
+                              dtype="float32")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+POLICIES = {
+    "dense-jnp": dict(aqua=None, backend="dense-jnp"),
+    "aqua-masked-dense": dict(aqua=AquaConfig(k_ratio=0.75, block_dims=1),
+                              backend="aqua-masked-dense"),
+}
+
+
+def _mesh_engine(dense_model, policy, scfg, mesh):
+    cfg, params = dense_model
+    spec = POLICIES[policy]
+    cfg = dataclasses.replace(cfg, aqua=spec["aqua"])
+    proj = None
+    if spec["aqua"] is not None:
+        proj = identity_projections(cfg.num_layers,
+                                    cfg.attention.num_kv_heads,
+                                    cfg.attention.head_dim)
+    eng = ContinuousBatchingEngine(cfg, params, proj, serving=scfg,
+                                   backend=spec["backend"], mesh=mesh)
+    return cfg, proj, eng
+
+
+def _staggered_trace(cfg, num_requests, max_new, seed):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    tokens=rng.integers(0, cfg.vocab_size,
+                                        size=(int(rng.integers(4, 22)),),
+                                        dtype=np.int32),
+                    max_new_tokens=max_new, arrival=float(i) * 1.5)
+            for i in range(num_requests)]
+
+
+@pytest.mark.parametrize("policy", sorted(POLICIES))
+def test_staggered_equivalence_on_8_device_mesh(dense_model, policy):
+    """Staggered arrivals on a 4×2 data×model mesh == solo rectangular
+    serving, token for token at temperature 0."""
+    scfg = ServingConfig(max_lanes=4, max_seq=64, max_new_tokens=6,
+                         prompt_bucket=8)
+    cfg, proj, eng = _mesh_engine(dense_model, policy, scfg, _mesh((4, 2)))
+    reqs = _staggered_trace(cfg, num_requests=4, max_new=6, seed=0)
+    outs = eng.run(reqs)
+    solo = ServeEngine(cfg, dense_model[1], proj, max_seq=scfg.max_seq,
+                       backend=POLICIES[policy]["backend"])
+    for r in reqs:
+        ref = solo.generate(
+            {"tokens": jnp.asarray(np.asarray(r.tokens)[None])}, steps=6)
+        np.testing.assert_array_equal(
+            np.asarray(outs[r.uid].tokens), ref.tokens[0],
+            err_msg=f"policy={policy} uid={r.uid}")
+    assert eng.stats.mean_occupancy > 1.0, eng.stats
+
+
+def test_sampling_is_lane_placement_independent_on_mesh(dense_model):
+    """temperature > 0 on the mesh: the RNG folds on (uid, token counter),
+    so a request samples the same tokens whether it shares the mesh with
+    staggered co-tenants or is served alone. (Cross-*partitioning* token
+    equality is only guaranteed at temperature 0 — resharding the model
+    axis reorders float reductions, and Gumbel sampling amplifies ulp
+    differences — so the solo reference runs on the same mesh.)"""
+    cfg, params = dense_model
+    scfg = ServingConfig(max_lanes=4, max_seq=64, max_new_tokens=5,
+                         prompt_bucket=8)
+    reqs = _staggered_trace(cfg, num_requests=2, max_new=5, seed=2)
+    for r in reqs:
+        r.temperature = 1.0
+    mesh = _mesh((4, 2))
+    batched = ContinuousBatchingEngine(cfg, params, None, serving=scfg,
+                                       backend="dense-jnp", mesh=mesh)
+    b_outs = batched.run(reqs)
+    for r in reqs:
+        # fresh engine per request: serve-key fold counter starts at 0,
+        # matching the batched drive's serve-level key
+        solo = ContinuousBatchingEngine(cfg, params, None, serving=scfg,
+                                        backend="dense-jnp", mesh=mesh)
+        s_out = solo.run([dataclasses.replace(r, arrival=0.0)])
+        np.testing.assert_array_equal(b_outs[r.uid].tokens,
+                                      s_out[r.uid].tokens)
+
+
+def test_h2o_equivalence_on_mesh(dense_model):
+    """H2O eviction state (acc_score) shards over the mesh and stays
+    solo-equivalent through the exact-length admission path."""
+    cfg, params = dense_model
+    cfg = dataclasses.replace(cfg, aqua=AquaConfig(k_ratio=0.75,
+                                                   h2o_ratio=0.5,
+                                                   block_dims=1))
+    proj = identity_projections(cfg.num_layers, cfg.attention.num_kv_heads,
+                                cfg.attention.head_dim)
+    scfg = ServingConfig(max_lanes=4, max_seq=64, max_new_tokens=5,
+                         prompt_bucket=8)
+    eng = ContinuousBatchingEngine(cfg, params, proj, serving=scfg,
+                                   backend="aqua-masked-dense",
+                                   mesh=_mesh((2, 2)))
+    reqs = _staggered_trace(cfg, num_requests=3, max_new=5, seed=1)
+    outs = eng.run(reqs)
+    solo = ServeEngine(cfg, params, proj, max_seq=64,
+                       backend="aqua-masked-dense")
+    for r in reqs:
+        ref = solo.generate(
+            {"tokens": jnp.asarray(np.asarray(r.tokens)[None])}, steps=5)
+        np.testing.assert_array_equal(np.asarray(outs[r.uid].tokens),
+                                      ref.tokens[0])
+
+
+def test_decode_state_stays_sharded_through_admissions(dense_model):
+    """Terminal decode state carries the engine's NamedShardings — lane
+    grafts (B=1 prefill into the sharded batch) must not have decayed the
+    layout to replicated or bounced it through the host."""
+    scfg = ServingConfig(max_lanes=4, max_seq=64, max_new_tokens=4,
+                         prompt_bucket=8)
+    cfg, _, eng = _mesh_engine(dense_model, "dense-jnp", scfg, _mesh((4, 2)))
+    eng.run(_staggered_trace(cfg, num_requests=4, max_new=4, seed=3))
+    mesh = eng.mesh
+    k = eng.last_state.layers.k          # (L, B, KV, S, D)
+    assert k.sharding == NamedSharding(
+        mesh, P(None, ("data",), "model", None, None)), k.sharding
+    acc = eng.last_state.layers.acc_score
+    assert acc.sharding == NamedSharding(
+        mesh, P(None, ("data",), "model", None)), acc.sharding
+    assert eng.last_lanes.last_token.sharding == NamedSharding(
+        mesh, P(("data",))), eng.last_lanes.last_token.sharding
+
+
+def test_shard_map_decode_core_matches_reference():
+    """The shard_map-wrapped masked-dense core is numerically identical to
+    the plain core (same einsum contractions per (lane, kv-head) shard)."""
+    mesh = _mesh((4, 2))
+    b, kvh, g, s, d = 8, 2, 2, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    qq = jax.random.normal(ks[0], (b, kvh, g, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, kvh, s, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, kvh, s, d), jnp.float32)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    count = jnp.full((b,), s, jnp.int32)
+    ref_out, ref_w = attn_mod._masked_dense_decode_core(
+        qq, k, v, positions, count, head_dim=d, window=None)
+    out, w = jax.jit(lambda *a: attn_mod._shard_mapped_decode_core(
+        mesh, *a, head_dim=d, window=None))(qq, k, v, positions, count)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(ref_w),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_block_sparse_backend_falls_back_with_logged_reason(dense_model,
+                                                            caplog):
+    """Under a serving mesh the Pallas block-sparse kernels are routed to
+    the shard_map/jnp reference with a logged reason, and generations
+    match the masked-dense engine exactly."""
+    cfg, params = dense_model
+    cfg = dataclasses.replace(cfg, aqua=AquaConfig(k_ratio=0.75,
+                                                   block_dims=8))
+    proj = identity_projections(cfg.num_layers, cfg.attention.num_kv_heads,
+                                cfg.attention.head_dim)
+    scfg = ServingConfig(max_lanes=2, max_seq=32, max_new_tokens=3,
+                         prompt_bucket=8)
+    reqs = [Request(uid=i, tokens=np.arange(4 + i, dtype=np.int32),
+                    arrival=float(i)) for i in range(2)]
+    attn_mod._log_mesh_kernel_fallback.cache_clear()
+    with caplog.at_level(logging.WARNING, logger="repro.core.attention"):
+        eng = ContinuousBatchingEngine(cfg, params, proj, serving=scfg,
+                                       backend="aqua-block-sparse",
+                                       mesh=_mesh((2, 2)))
+        outs = eng.run(reqs)
+    assert any("falling back" in r.message and "aqua-block-sparse"
+               in r.message for r in caplog.records), caplog.records
+    ref_eng = ContinuousBatchingEngine(cfg, params, proj, serving=scfg,
+                                       backend="aqua-masked-dense",
+                                       mesh=_mesh((2, 2)))
+    ref = ref_eng.run(reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(outs[r.uid].tokens, ref[r.uid].tokens)
+
+
+def test_lane_assignment_interleaves_across_data_shards(dense_model):
+    """8 lanes on a data=4 mesh: assignment preference is round-robin
+    across the 4 lane shards (0,2,4,6 then 1,3,5,7), so light traffic
+    spreads over the data-parallel groups."""
+    cfg, params = dense_model
+    scfg = ServingConfig(max_lanes=8, max_seq=32, max_new_tokens=2)
+    eng = ContinuousBatchingEngine(cfg, params, None, serving=scfg,
+                                   mesh=_mesh((4, 2)))
+    assert eng._lane_order == [0, 2, 4, 6, 1, 3, 5, 7]
+    sched = LaneScheduler(8, lane_order=eng._lane_order)
+    lanes = [sched.assign(Request(uid=i, tokens=np.zeros((2,), np.int32)))
+             for i in range(4)]
+    assert lanes == [0, 2, 4, 6]
+    with pytest.raises(AssertionError):
+        LaneScheduler(4, lane_order=[0, 1, 1, 2])

@@ -86,6 +86,38 @@ def test_sanitize_drops_nondivisible():
         P(None, None)
 
 
+def test_sanitize_batch1_single_kv_serving_cache():
+    """Serving cache shapes at the degenerate corners: a single decode
+    lane (B=1) and MQA (KV=1) must drop every non-dividing axis
+    independently — never crash, never leave a stale axis behind."""
+    serving = _abstract_mesh(("data", 4), ("model", 2))
+    # k (L, B, KV, S, D) with B=1 and KV=1: batch/kv axes drop, slots=64
+    # absorb data×model (8 | 64)
+    spec = sh.decode_state_pspec(_key("k"), (2, 1, 1, 64, 8), serving,
+                                 kv_shardable=False, batch_shardable=False)
+    assert spec == P(None, None, None, ("data", "model"), None)
+    # tiny slot count (4 < 8): nothing divides -> fully replicated
+    spec = sh.decode_state_pspec(_key("k"), (2, 1, 1, 4, 8), serving,
+                                 kv_shardable=False, batch_shardable=False)
+    assert spec == P(None, None, None, None, None)
+    # H2O acc_score (L, B, KV, S) at B=1/KV=1 follows the same fallback
+    spec = sh.decode_state_pspec(_key("acc_score"), (2, 1, 1, 64), serving,
+                                 kv_shardable=False, batch_shardable=False)
+    assert spec == P(None, None, None, ("data", "model"))
+    # sanitize itself: every entry of a (1, 1) shape drops
+    assert sh.sanitize(P(("data", "model"), "model"), (1, 1), serving) == \
+        P(None, None)
+
+
+def test_lane_pspec_divisibility():
+    serving = _abstract_mesh(("data", 4), ("model", 2))
+    assert sh.lane_pspec(serving, 8) == P(("data",))
+    assert sh.lane_pspec(serving, 1) == P(None)    # single lane: replicate
+    assert sh.lane_pspec(serving, 6) == P(None)    # 4 does not divide 6
+    modelonly = _abstract_mesh(("model", 2))
+    assert sh.lane_pspec(modelonly, 8) == P(None)  # no data axes at all
+
+
 def test_batch_pspec_multi_pod():
     assert sh.batch_pspec(POD, (256, 4096)) == P(("pod", "data"), None)
     # B=16: can't use pod*data=32 -> falls back to data only
