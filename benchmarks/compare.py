@@ -37,26 +37,28 @@ _NUM = re.compile(r"([A-Za-z_][A-Za-z0-9_]*)=(-?[0-9.]+(?:e-?[0-9]+)?)\b")
 RECTANGULAR = "serving/rectangular_serialized"
 
 
+def _metrics(derived):
+    """{metric: float} parsed from a row's derived string."""
+    return {k: float(v) for k, v in _NUM.findall(derived)}
+
+
 def load(path):
     """{row name: (derived string, {metric: float})} from a --json dump."""
     with open(path) as f:
         rows = json.load(f)
-    out = {}
-    for row in rows:
-        derived = row["derived"]
-        metrics = {k: float(v) for k, v in _NUM.findall(derived)}
-        out[row["name"]] = (derived, metrics)
-    return out
+    return {row["name"]: (row["derived"], _metrics(row["derived"])) for row in rows}
 
 
 def norm_tok_s(table, name):
     """tokens/s of `name` relative to the rectangular-serialized row of the
-    same file (machine-speed cancels); absolute when the anchor is absent."""
+    same file (machine-speed cancels). Returns None when the row's tok_s
+    *or the anchor* is absent — an absolute tok/s would silently compare
+    across machine speeds, so callers must skip the normalized gate."""
     tok_s = table[name][1].get("tok_s")
     anchor = table.get(RECTANGULAR, ("", {}))[1].get("tok_s")
-    if tok_s is None:
+    if tok_s is None or not anchor:
         return None
-    return tok_s / anchor if anchor else tok_s
+    return tok_s / anchor
 
 
 def compare(base, fresh, threshold):
@@ -73,6 +75,23 @@ def compare(base, fresh, threshold):
             b, f = norm_tok_s(base, name), norm_tok_s(fresh, name)
             if b is not None and f is not None:
                 yield name, "tok_s_rel", b, f, f >= b * (1 - threshold)
+            elif (
+                metrics.get("tok_s") is not None
+                and f_metrics.get("tok_s") is not None
+            ):
+                # the row has throughput on both sides but the rectangular
+                # anchor is missing from at least one file: skip the
+                # normalized gate loudly instead of comparing absolute
+                # tok/s across machine speeds
+                side = "baseline" if b is None else "fresh run"
+                if b is None and f is None:
+                    side = "both files"
+                print(
+                    f"note: {name}: rectangular anchor row "
+                    f"({RECTANGULAR!r}) absent from {side}; skipping the "
+                    "normalized tok/s gate",
+                    file=sys.stderr,
+                )
             b, f = metrics.get("occupancy"), f_metrics.get("occupancy")
             if b is not None and f is not None:
                 yield name, "occupancy", b, f, f >= b * (1 - threshold)

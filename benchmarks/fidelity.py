@@ -248,8 +248,8 @@ def block_granularity() -> List[Row]:
 
 
 def prefill_backends() -> List[Row]:
-    from repro.kernels.ops import (aqua_prefill, flash_attention,
-                                  round_k_dims)
+    from repro.kernels.ops import (aqua_prefill, block_counts,
+                                  flash_attention, round_k_dims)
     from repro.kernels.ref import aqua_prefill_ref, flash_attention_ref
     from repro.core.aqua import chunk_topk_block_indices
     b, h, kvh, s, d = 1, 4, 2, 128, 32
@@ -267,7 +267,6 @@ def prefill_backends() -> List[Row]:
         - flash_attention_ref(q, k, v, causal=True))))
     rows.append(("prefill/flash_vs_dense", us, f"max_abs_err={err:.2e}"))
 
-    nb = d // 8
     for kr in (0.5, 0.75, 1.0):
         fn = lambda: aqua_prefill(q, k, v, lengths, k_ratio=kr,  # noqa: E731
                                   block_dims=8, q_blk=32, k_blk=32,
@@ -278,9 +277,47 @@ def prefill_backends() -> List[Row]:
         ref = aqua_prefill_ref(q, k, v, bi, lengths, 8, 32)
         err = float(jnp.max(jnp.abs(fn() - ref)))
         # score-read HBM traffic of the kernel relative to dense flash
-        ratio = (k_dims // 8) / nb
+        nb, nb_sel = block_counts(d, kr, 8)
+        ratio = nb_sel / nb
         rows.append((f"prefill/aqua_block_sparse_k{kr}", us,
                      f"max_abs_err={err:.2e} score_bytes_ratio={ratio:.3f}"))
+
+    # kernel under a 2x2 serving mesh: the same Pallas prefill wrapped in
+    # shard_map (batch over `data`, KV heads + their query groups over
+    # `model`, per-shard block-index tables). Per-(row, head) work is
+    # independent, so the wrap must be bit-identical to the single-device
+    # kernel; max_abs_err gates that. Skipped (loudly) below 4 devices —
+    # CI runs under XLA_FLAGS=--xla_force_host_platform_device_count=8.
+    if jax.device_count() >= 4:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh((2, 2))
+        qb = jnp.concatenate([q, q * 0.5], axis=0)      # batch of 2
+        kb = jnp.concatenate([k, k * 0.5], axis=0)
+        vb = jnp.concatenate([v, v], axis=0)
+        lb = jnp.full((2,), s, jnp.int32)
+
+        def core(qs, ks_, vs, ls):
+            return aqua_prefill(qs, ks_, vs, ls, k_ratio=0.5, block_dims=8,
+                                q_blk=32, k_blk=32, interpret=True)
+
+        meshed = jax.jit(shard_map(
+            core, mesh=mesh,
+            in_specs=(P("data", "model", None, None),
+                      P("data", "model", None, None),
+                      P("data", "model", None, None), P("data")),
+            out_specs=P("data", "model", None, None), check_rep=False))
+        us = timeit(lambda: meshed(qb, kb, vb, lb), iters=3)
+        err = float(jnp.max(jnp.abs(meshed(qb, kb, vb, lb)
+                                    - core(qb, kb, vb, lb))))
+        nb, nb_sel = block_counts(d, 0.5, 8)
+        rows.append(("prefill/aqua_block_sparse@mesh2x2", us,
+                     f"max_abs_err={err:.2e} "
+                     f"score_bytes_ratio={nb_sel / nb:.3f}"))
+    else:
+        rows.append(("prefill/aqua_block_sparse@mesh2x2", 0.0,
+                     f"skipped=devices<4 ({jax.device_count()})"))
     return rows
 
 
@@ -290,7 +327,7 @@ def prefill_backends() -> List[Row]:
 
 
 def kernel_bandwidth() -> List[Row]:
-    from repro.kernels.ops import aqua_decode
+    from repro.kernels.ops import aqua_decode, block_counts
     from repro.kernels.ref import aqua_decode_ref
     from repro.core.aqua import topk_block_indices
     b, h, kvh, s, d = 1, 4, 2, 512, 64
@@ -304,8 +341,8 @@ def kernel_bandwidth() -> List[Row]:
     for kr in (0.5, 0.75, 1.0):
         us = timeit(lambda: aqua_decode(q, khat, v, lengths, k_ratio=kr),
                     iters=3)
-        nb_sel = max(1, int(round(kr * d)) // 8)
-        kernel_bytes = (khat.size * 2) * (nb_sel / (d // 8)) + v.size * 2
+        nb, nb_sel = block_counts(d, kr, 8)
+        kernel_bytes = (khat.size * 2) * (nb_sel / nb) + v.size * 2
         rows.append((f"kernel/aqua_decode_k{kr}", us,
                      f"hbm_bytes_ratio={kernel_bytes/dense_bytes:.3f}"))
     us_ref = timeit(lambda: aqua_decode_ref(
@@ -386,9 +423,37 @@ def serving_throughput() -> List[Row]:
                      dt / max(st.decode_steps, 1) * 1e6,
                      f"tok_s={st.tokens_emitted / dt:.1f} "
                      f"occupancy={st.mean_occupancy:.2f}"))
+
+        # mesh kernel rows: the shard_mapped AQUA block-sparse Pallas
+        # path vs the masked-dense reference under the *same* 2x2 mesh —
+        # the trajectory the mesh-native kernel dispatch is meant to
+        # protect. block_dims=8 so the kernels actually engage; same
+        # best-of-5 as every other gated serving row (the 20% threshold's
+        # noise analysis in benchmarks/compare.py assumes it).
+        aqua8 = AquaConfig(k_ratio=0.5, block_dims=8)
+        c8 = dataclasses.replace(cfg, aqua=aqua8)
+        for backend in ("aqua-block-sparse", "aqua-masked-dense"):
+            eng = ContinuousBatchingEngine(c8, params, ident, serving=scfg,
+                                           backend=backend,
+                                           mesh=make_serving_mesh((2, 2)))
+            if backend == "aqua-block-sparse":
+                # keep the row's label honest: fail the bench loudly if a
+                # dispatch regression would silently measure the fallback
+                # under the kernel's name
+                assert eng.kernel_native, \
+                    "block-sparse engine did not take the shard_mapped " \
+                    "kernel path for the mesh2x2 bench row"
+            dt, st = timed_drive(eng)
+            rows.append((f"serving/{backend}@mesh2x2",
+                         dt / max(st.decode_steps, 1) * 1e6,
+                         f"tok_s={st.tokens_emitted / dt:.1f} "
+                         f"occupancy={st.mean_occupancy:.2f}"))
     else:
         rows.append(("serving/dense-jnp@mesh2x2", 0.0,
                      f"skipped=devices<4 ({jax.device_count()})"))
+        for backend in ("aqua-block-sparse", "aqua-masked-dense"):
+            rows.append((f"serving/{backend}@mesh2x2", 0.0,
+                         f"skipped=devices<4 ({jax.device_count()})"))
 
     # rectangular contrast: one fixed batch per arrival "wave" — requests
     # cannot overlap across waves, so per-wave occupancy is 1 wave at a

@@ -13,8 +13,11 @@ artifact).
 ``--baseline`` refreshes the committed bench-trajectory baseline: it
 implies ``--fast`` and writes the canonical ``BENCH_serving.json`` at the
 repo root (run under XLA_FLAGS=--xla_force_host_platform_device_count=8
-so the mesh-serving row is measured, then commit the diff; CI's
-``benchmarks/compare.py`` gate judges every PR against it).
+so the mesh-serving rows — including the shard_mapped AQUA block-sparse
+kernel rows ``serving/aqua-*@mesh2x2`` and
+``prefill/aqua_block_sparse@mesh2x2`` — are measured rather than emitted
+as skipped sentinels, then commit the diff; CI's ``benchmarks/compare.py``
+gate judges every PR against it).
 """
 from __future__ import annotations
 

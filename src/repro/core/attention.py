@@ -38,6 +38,7 @@ Conventions:
 from __future__ import annotations
 
 import contextlib
+import contextvars
 import dataclasses
 import functools
 import logging
@@ -179,50 +180,99 @@ def _aqua_mask(qh, aqua: AquaConfig, head_dim: int):
 
 
 # ---------------------------------------------------------------------------
-# Mesh-native decode: a shard_map-wrapped masked-dense core for the
-# ``dense-jnp`` and ``aqua-masked-dense`` backends.
+# Mesh-native attention: shard_map-wrapped cores for every backend.
 #
-# Per-(batch, kv-head) decode attention is embarrassingly parallel — the
-# softmax runs over the slot axis, which every shard holds in full — so
-# under a (data × model) serving mesh the core partitions lanes over the
-# data axes and KV heads over the model axis with *zero* collectives
-# inside the wrapped region. Wrapping it in shard_map (instead of leaving
-# GSPMD to infer through the mask/where/softmax chain) pins that layout:
-# the KV cache never gathers, and the only model-axis communication in a
-# decode step is the reduce for the output projection, outside the core.
+# Per-(batch, kv-head) attention is embarrassingly parallel — the softmax
+# runs over the slot/sequence axis, which every shard holds in full — so
+# under a (data × model) serving mesh both the masked-dense jnp cores and
+# the Pallas block-sparse kernels partition lanes over the data axes and
+# KV heads over the model axis with *zero* collectives inside the wrapped
+# region. Wrapping in shard_map (instead of leaving GSPMD to infer — or,
+# for Pallas, silently all-gather at the opaque kernel boundary) pins
+# that layout: the KV cache never gathers, the scalar-prefetched
+# block-index tables are computed per shard, and the only model-axis
+# communication in a step is the reduce for the output projection,
+# outside the core.
 #
 # The mesh is installed around *trace time* by the serving engine
 # (``use_decode_mesh``); compiled executables bake it in, so concurrent
 # single-device engines in the same process are unaffected.
 # ---------------------------------------------------------------------------
 
-_DECODE_MESH = None
+_DECODE_MESH: contextvars.ContextVar = contextvars.ContextVar(
+    "aqua_decode_mesh", default=None)
+_FALLBACK_SINK: contextvars.ContextVar = contextvars.ContextVar(
+    "aqua_mesh_fallback_sink", default=None)
 
 
 def decode_mesh():
-    return _DECODE_MESH
+    return _DECODE_MESH.get()
 
 
 @contextlib.contextmanager
-def use_decode_mesh(mesh):
+def use_decode_mesh(mesh, fallback_sink=None):
     """Install ``mesh`` as the decode-sharding mesh for calls traced inside
-    this context (no-op when ``mesh`` is None)."""
-    global _DECODE_MESH
-    prev = _DECODE_MESH
-    _DECODE_MESH = mesh
+    this context (no-op when ``mesh`` is None).
+
+    Backed by ``contextvars.ContextVar`` rather than module globals:
+    nested contexts in one process (engine-in-engine tests, ``--verify``
+    solo replays) restore their *own* predecessor value on exit instead of
+    whatever a sibling left behind, and concurrent engines on other
+    threads / pytest workers never observe each other's mesh.
+
+    ``fallback_sink``: a caller-owned set that receives the
+    (backend, mode, reason) key of every mesh-kernel fallback traced in
+    this context, and keys the once-per-sink warning dedup — the serving
+    engine passes its own set so each engine surfaces and owns its
+    fallbacks regardless of what other engines in the process did."""
+    t_mesh = _DECODE_MESH.set(mesh)
+    t_sink = _FALLBACK_SINK.set(fallback_sink)
     try:
         yield
     finally:
-        _DECODE_MESH = prev
+        _FALLBACK_SINK.reset(t_sink)
+        _DECODE_MESH.reset(t_mesh)
 
 
-@functools.lru_cache(maxsize=None)
-def _log_mesh_kernel_fallback(backend_name: str, mode: str) -> None:
+# Process-wide aggregate of mesh-fallback events (in addition to any
+# per-engine sink), explicitly resettable by test fixtures so warning
+# assertions don't depend on suite execution order (the previous
+# ``functools.lru_cache`` dedup made them order-dependent). Warning
+# *emission* dedups per sink — i.e. per engine — when one is installed.
+_MESH_FALLBACK_WARNED: set = set()
+
+
+def reset_mesh_fallback_warnings() -> None:
+    """Clear the process-wide fallback aggregate (test fixtures)."""
+    _MESH_FALLBACK_WARNED.clear()
+
+
+def mesh_fallback_events() -> Tuple[Tuple[str, str, str], ...]:
+    """(backend, mode, reason) keys warned process-wide since the last
+    reset. Engines expose their own per-engine view
+    (``ContinuousBatchingEngine.mesh_fallback_events``) — prefer that for
+    asserting a specific engine really served the kernel path."""
+    return tuple(sorted(_MESH_FALLBACK_WARNED))
+
+
+def _log_mesh_kernel_fallback(backend_name: str, mode: str,
+                              reason: str = "") -> None:
+    key = (backend_name, mode, reason)
+    sink = _FALLBACK_SINK.get()
+    dedup = _MESH_FALLBACK_WARNED if sink is None else sink
+    already = key in dedup
+    # the process aggregate records every traced fallback unconditionally —
+    # a reset must never be masked by an engine sink that already holds
+    # the key (the dedup below only gates warning *emission*)
+    _MESH_FALLBACK_WARNED.add(key)
+    if already:
+        return
+    if sink is not None:
+        sink.add(key)
     logger.warning(
-        "attention backend %r: the Pallas %s kernel is not integrated with "
-        "the serving mesh's SPMD partitioner; falling back to the "
-        "shard_map/jnp reference path for mesh-native serving",
-        backend_name, mode)
+        "attention backend %r: %s is falling back to the shard_map/jnp "
+        "reference path for mesh-native serving%s",
+        backend_name, mode, f" ({reason})" if reason else "")
 
 
 def _masked_dense_decode_core(qq: jax.Array, k: jax.Array, v: jax.Array,
@@ -269,6 +319,99 @@ def _shard_mapped_decode_core(mesh, qq, k, v, positions, count, *,
         out_specs=(head4, head4),
         check_rep=False,
     )(qq, k, v, positions, count)
+
+
+# ---------------------------------------------------------------------------
+# Mesh-native Pallas kernels: shard_map-wrapped block-sparse prefill and
+# decode. A raw ``pl.pallas_call`` is opaque to the SPMD partitioner — a
+# sharded operand would silently all-gather at the kernel boundary — so
+# the kernel wrappers run *inside* shard_map on shard-local shapes: lanes
+# (batch) partition over the data axes and KV heads over ``model`` (the
+# query groups and the whole dim-blocks of the dim-major K̂ layout ride
+# with their KV head, so every model shard streams whole dim-blocks). The
+# magnitude top-k block-index tables are computed per shard, mirroring
+# ``_shard_mapped_decode_core``: no collectives inside the mapped region.
+# An axis whose extent doesn't divide its dimension sanitizes to
+# replicated (B=1 admission prefills, MQA's single KV head); batches that
+# would leave the cache slot-sharded keep the jnp reference path — see
+# ``distributed.sharding.kernel_shardable``.
+# ---------------------------------------------------------------------------
+
+
+def _kernel_row_axes(mesh, batch: int, kv_heads: int):
+    """(batch_axis, kv_axis) for the kernel shard_map: lanes over the data
+    axes, KV heads over ``model``; an axis whose mesh extent doesn't divide
+    its dimension sanitizes to None (replicated)."""
+    from repro.distributed import sharding as dsh
+
+    dp = dsh.data_axes(mesh) or None
+    row = dsh.sanitize(jax.sharding.PartitionSpec(dp, "model"),
+                       (batch, kv_heads), mesh)
+    return row[0], row[1]
+
+
+def shard_mapped_prefill_kernel(mesh, backend, qq, kk, v, *, cfg, aqua,
+                                positions, lengths, causal):
+    """Run a Pallas prefill backend under shard_map on ``mesh``.
+
+    qq (B, S, KV, G, Dk) / kk (B, S, KV, Dk) / v (B, S, KV, Dv) in model
+    layout; ``positions`` must be 1-D (2-D tables route to the dense
+    reference before dispatch). Returns (out (B, S, KV, G, Dv), None) —
+    kernel backends produce no dense weights."""
+    from jax.experimental.shard_map import shard_map
+
+    b, s, kvh = qq.shape[0], qq.shape[1], qq.shape[2]
+    batch_ax, kv_ax = _kernel_row_axes(mesh, b, kvh)
+    if lengths is None:
+        # materialize full lengths so the shard_map signature is static
+        lengths = jnp.full((b,), s, jnp.int32)
+
+    def core(qs, ks, vs, pos, ls):
+        out, _ = backend.prefill(qs, ks, vs, cfg=cfg, aqua=aqua,
+                                 positions=pos, lengths=ls, causal=causal)
+        return out
+
+    # Even fully-replicated rows (B=1 MQA) stay inside shard_map: a raw
+    # pallas_call in the jitted step would face the SPMD partitioner —
+    # the exact hazard this wrapper exists to remove.
+    P = jax.sharding.PartitionSpec
+    out = shard_map(
+        core, mesh=mesh,
+        in_specs=(P(batch_ax, None, kv_ax, None, None),
+                  P(batch_ax, None, kv_ax, None),
+                  P(batch_ax, None, kv_ax, None),
+                  P(None), P(batch_ax)),
+        out_specs=P(batch_ax, None, kv_ax, None, None),
+        check_rep=False,
+    )(qq, kk, v, positions, lengths)
+    return out, None
+
+
+def shard_mapped_decode_kernel(mesh, backend, q, cache, *, cfg, aqua):
+    """Decode twin of :func:`shard_mapped_prefill_kernel`: the block-sparse
+    decode kernel on shard-local cache leaves. q (B, KV, G, Dk); the slot
+    axis stays whole per shard (the kernel streams full dim-major sequence
+    stripes), so per-shard ``NB_sel``/``NB_total`` accounting equals the
+    global one. Returns (B, KV, G, Dv)."""
+    from jax.experimental.shard_map import shard_map
+
+    b, kvh = q.shape[0], q.shape[1]
+    batch_ax, kv_ax = _kernel_row_axes(mesh, b, kvh)
+
+    def core(qs, ks, vs, pos, cnt, acc):
+        local = kv.AttnCache(k=ks, v=vs, positions=pos, count=cnt,
+                             acc_score=acc)
+        return backend.decode(qs, local, cfg=cfg, aqua=aqua)
+
+    P = jax.sharding.PartitionSpec
+    head4 = P(batch_ax, kv_ax, None, None)
+    return shard_map(
+        core, mesh=mesh,
+        in_specs=(head4, head4, head4, P(batch_ax, None), P(batch_ax),
+                  P(batch_ax, kv_ax, None)),
+        out_specs=head4,
+        check_rep=False,
+    )(q, cache.k, cache.v, cache.positions, cache.count, cache.acc_score)
 
 
 # ---------------------------------------------------------------------------
@@ -615,13 +758,23 @@ def prefill_attention(params: dict, x: jax.Array, cfg: AttentionConfig,
                 or kh.shape[-1] % aqua.block_dims != 0):
             backend = get_backend("flash" if _rtf.kernels_preferred()
                                   else "aqua-masked-dense")
+    kernel_mesh = None
     if backend.requires_pallas and decode_mesh() is not None:
-        # mesh-native serving: Pallas calls are opaque to the SPMD
-        # partitioner (a sharded operand would silently all-gather at the
-        # kernel boundary) — route to the GSPMD-shardable jnp reference
-        _log_mesh_kernel_fallback(backend.name, "prefill")
-        backend = get_backend("aqua-masked-dense" if aqua_on
-                              else "dense-jnp")
+        # mesh-native serving: run the Pallas kernel under shard_map
+        # (lanes × KV heads, per-shard block-index tables); only axis
+        # extents that would leave the cache slot-sharded keep the
+        # GSPMD-shardable jnp reference path
+        from repro.distributed import sharding as dsh
+        if dsh.kernel_shardable(decode_mesh(), cfg,
+                                aqua if backend.aqua_native else None,
+                                batch=b):
+            kernel_mesh = decode_mesh()
+        else:
+            _log_mesh_kernel_fallback(
+                backend.name, "prefill",
+                "axis extents don't divide the serving mesh")
+            backend = get_backend("aqua-masked-dense" if aqua_on
+                                  else "dense-jnp")
     if backend.name == "aqua-block-sparse":
         qq, kk = qh, kh          # unmasked: kernel selects dim-blocks
     elif aqua_on:
@@ -631,9 +784,14 @@ def prefill_attention(params: dict, x: jax.Array, cfg: AttentionConfig,
     else:
         qq, kk = q, k
 
-    out, weights = backend.prefill(qq, kk, v, cfg=cfg, aqua=aqua,
-                                   positions=positions, lengths=lengths,
-                                   causal=causal)
+    if kernel_mesh is not None:
+        out, weights = shard_mapped_prefill_kernel(
+            kernel_mesh, backend, qq, kk, v, cfg=cfg, aqua=aqua,
+            positions=positions, lengths=lengths, causal=causal)
+    else:
+        out, weights = backend.prefill(qq, kk, v, cfg=cfg, aqua=aqua,
+                                       positions=positions, lengths=lengths,
+                                       causal=causal)
     out = out.astype(v.dtype)
     out = jnp.einsum("bskgd,kgdm->bsm", out, params["wo"].astype(x.dtype))
     if return_aux:
@@ -798,17 +956,29 @@ def decode_attention(params: dict, x_t: jax.Array, cache: kv.AttnCache,
     # Registry dispatch: the block-sparse decode kernel serves the
     # contiguous full-cache policy (no ring buffer, no eviction — those
     # need the masked-dense path's per-slot position masking / weights).
-    # Under a serving mesh the kernel falls back to the shard_map-wrapped
-    # reference: the Pallas call is opaque to the SPMD partitioner.
+    # Under a serving mesh the kernel runs shard_mapped (lanes over the
+    # data axes, KV heads over `model`, per-shard block-index tables);
+    # only non-divisible axis extents keep the shard_map/jnp reference.
     backend = resolve_backend(cfg.backend, aqua=aqua)
     kernel_ok = (backend.decode is not None and aqua_on and not h2o
                  and cfg.window is None and aqua.block_dims > 1
                  and q.shape[-1] % aqua.block_dims == 0)
+    kernel_mesh = None
     if kernel_ok and decode_mesh() is not None:
-        _log_mesh_kernel_fallback(backend.name, "decode")
-        kernel_ok = False
+        from repro.distributed import sharding as dsh
+        if dsh.kernel_shardable(decode_mesh(), cfg, aqua, batch=b):
+            kernel_mesh = decode_mesh()
+        else:
+            _log_mesh_kernel_fallback(
+                backend.name, "decode",
+                "axis extents don't divide the serving mesh")
+            kernel_ok = False
     if kernel_ok:
-        out = backend.decode(q, cache, cfg=cfg, aqua=aqua)
+        if kernel_mesh is not None:
+            out = shard_mapped_decode_kernel(kernel_mesh, backend, q, cache,
+                                             cfg=cfg, aqua=aqua)
+        else:
+            out = backend.decode(q, cache, cfg=cfg, aqua=aqua)
         out = jnp.einsum("bkgd,kgdm->bm", out, params["wo"].astype(x_t.dtype))
         return out, cache
 

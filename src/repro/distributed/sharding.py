@@ -19,7 +19,7 @@ without per-arch hand-tuning.
 from __future__ import annotations
 
 import math
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -183,6 +183,7 @@ def batch_shardings(batch, mesh: Mesh):
 def decode_state_pspec(path, shape, mesh: Mesh, *,
                        kv_shardable: bool = True,
                        batch_shardable: bool = True,
+                       slot_absorb: bool = True,
                        model_axis: str = "model") -> P:
     """Sharding for DecodeState leaves (stacked or per-layer caches).
 
@@ -191,6 +192,14 @@ def decode_state_pspec(path, shape, mesh: Mesh, *,
     the model axis instead (flash-decode style context parallelism); when
     the batch doesn't divide pod×data (long_500k B=1) the slot axis absorbs
     the data axes too.
+
+    ``slot_absorb=False`` disables that absorption: the slot axis (and the
+    trailing dim axis) stay whole per shard, replicating the unshardable
+    axis instead. The serving engine uses this when the AQUA block-sparse
+    kernels serve the state shard_mapped — the kernels stream full
+    dim-major K̂ sequence stripes per (lane, head) shard, so a slot-sharded
+    (or dim-block-splitting) layout would force a gather at the shard_map
+    boundary every step.
     """
     name = path_str(path).split("/")[-1]
     nd = len(shape)
@@ -202,8 +211,9 @@ def decode_state_pspec(path, shape, mesh: Mesh, *,
     batch_ax = dp if batch_shardable else None
     kv_ax = model_axis if kv_shardable else None
     slot_axes = tuple(
-        (() if batch_shardable else dp)
-        + (() if kv_shardable else (model_axis,)))
+        ((() if batch_shardable else dp)
+         + (() if kv_shardable else (model_axis,)))
+        if slot_absorb else ())
     # canonicalize: bare axis name for singletons (PartitionSpec equality
     # distinguishes "model" from ("model",))
     slot_ax = (slot_axes[0] if len(slot_axes) == 1 else slot_axes) \
@@ -238,15 +248,54 @@ def decode_state_pspec(path, shape, mesh: Mesh, *,
     return sanitize(spec, shape, mesh)
 
 
-def make_state_shardings(state, mesh: Mesh, *, kv_heads: int, batch: int):
+def make_state_shardings(state, mesh: Mesh, *, kv_heads: int, batch: int,
+                         kernel_native: bool = False):
+    """``kernel_native=True``: the AQUA block-sparse Pallas kernels will
+    serve this state shard_mapped, so the cache layout must keep every
+    slot/sequence stripe — and every dim-block of the dim-major K̂ view —
+    whole per shard (see ``decode_state_pspec``'s ``slot_absorb``)."""
     model = mesh.shape.get("model", 1)   # data-only meshes: no TP axis
     kv_ok = kv_heads > 0 and kv_heads % model == 0
     b_ok = batch % _axis_size(mesh, data_axes(mesh)) == 0
 
     def one(path, leaf):
         return NamedSharding(mesh, decode_state_pspec(
-            path, leaf.shape, mesh, kv_shardable=kv_ok, batch_shardable=b_ok))
+            path, leaf.shape, mesh, kv_shardable=kv_ok, batch_shardable=b_ok,
+            slot_absorb=not kernel_native))
     return jax.tree_util.tree_map_with_path(one, state)
+
+
+def kernel_shardable(mesh: Optional[Mesh], cfg, aqua=None, *,
+                     batch: Optional[int] = None) -> bool:
+    """Can the Pallas attention kernels run shard_mapped under ``mesh``?
+
+    Geometry-only predicate (policy checks — H2O, sliding window,
+    ``block_dims > 1`` — stay with the dispatch sites in
+    ``repro.core.attention``):
+
+    * For AQUA-native kernels (``aqua`` given) the kept dims must tile
+      into whole ``block_dims`` dim-blocks, so every model shard holds
+      whole dim-blocks of the dim-major K̂ cache.
+    * A multi-row batch must divide the data axes. When it doesn't,
+      :func:`decode_state_pspec` has already moved the mesh axes onto the
+      cache's *slot* axis (context parallelism), and the kernels — which
+      stream full sequence stripes per (lane, head) shard — would force a
+      gather at the shard_map boundary; those shapes keep the jnp
+      reference path. ``batch == 1`` (admission prefills) replicates the
+      batch axis instead and stays kernel-runnable, as does MQA's single
+      KV head (the head axis replicates).
+    """
+    if mesh is None:
+        return False
+    if aqua is not None:
+        if not aqua.enabled or aqua.block_dims < 1:
+            return False
+        if aqua.kept_dims(cfg.head_dim) % aqua.block_dims != 0:
+            return False
+    if batch is not None and batch > 1:
+        if batch % _axis_size(mesh, data_axes(mesh)) != 0:
+            return False
+    return True
 
 
 def replicated(mesh: Mesh):

@@ -16,6 +16,13 @@ The value product and online softmax are fused flash-decode style, so the
 Grid: (B, H, num_seq_blocks, NB_sel)  — dim-block index j innermost; the
 V block index_map is constant in j, so Pallas keeps the V tile resident
 across the j loop (single fetch per seq block).
+
+Mesh-native serving runs this kernel *inside* ``shard_map``
+(``repro.core.attention.shard_mapped_decode_kernel``): B and H are then
+shard-local lane/head extents while the slot axis S stays whole per
+shard — the engine's kernel-native cache layout never slot-shards or
+dim-splits the K̂ stripes, so the scalar-prefetched block-index tables
+and the ``NB_sel``/``NB_total`` accounting are purely shard-local.
 """
 from __future__ import annotations
 

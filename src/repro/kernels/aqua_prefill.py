@@ -21,6 +21,13 @@ cost nothing.
 Grid: (B, H, num_q_chunks, num_k_chunks, NB_sel) — dim-block index j
 innermost; the V block index_map is constant in j, so Pallas keeps the V
 tile resident across the j loop (single fetch per key chunk).
+
+Mesh-native serving runs this kernel *inside* ``shard_map``
+(``repro.core.attention.shard_mapped_prefill_kernel``): B and H are then
+shard-local extents (lanes over the data axes, KV heads + their query
+groups over ``model``), while S and the dim-block axis arrive whole per
+shard — each model shard streams whole dim-blocks of its own heads and
+``NB_sel``/``NB_total`` are the same per shard as globally.
 """
 from __future__ import annotations
 

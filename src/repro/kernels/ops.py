@@ -12,6 +12,15 @@ model layer and viewed dim-major ``(B, KV, NB, bd, S)`` by the kernels,
 where ``NB = D // bd`` dim-blocks of ``bd`` sublanes each span the full
 lane-dim sequence stripe. Magnitude selection picks whole dim-blocks, so
 the kernels stream only the selected ``NB_sel`` stripes HBM→VMEM.
+
+Shard-local contract (mesh-native serving): these wrappers are also the
+bodies run inside ``shard_map`` by ``repro.core.attention`` — every
+shape they see is then *shard-local* (lanes partitioned over the data
+axes, KV heads — and their query groups — over ``model``). That works
+without changes because nothing here crosses the batch or head axes: the
+top-k block-index tables are computed per (row, head), the sequence and
+dim axes arrive whole per shard, and the per-shard ``NB_total``/
+``NB_sel`` accounting equals the global one (:func:`block_counts`).
 """
 from __future__ import annotations
 
@@ -51,6 +60,17 @@ def round_k_dims(d: int, k_ratio: float, block_dims: int) -> int:
     k_dims = max(block_dims, int(round(k_ratio * d)))
     k_dims = ((k_dims + block_dims - 1) // block_dims) * block_dims
     return min(k_dims, d)
+
+
+def block_counts(d: int, k_ratio: float, block_dims: int) -> tuple:
+    """(NB_total, NB_sel) dim-block accounting for head dim ``d``.
+
+    Shard-local and global accounting coincide under the serving mesh:
+    ``shard_map`` partitions lanes and KV heads, never the dim axis, so
+    every shard holds all ``NB_total`` dim-blocks of its heads' K̂ stripes
+    and selects the same ``NB_sel`` of them. Used by the benchmarks'
+    HBM-byte ratios so they stay honest for the mesh rows too."""
+    return d // block_dims, round_k_dims(d, k_ratio, block_dims) // block_dims
 
 
 @functools.partial(jax.jit, static_argnames=("k_ratio", "block_dims",

@@ -6,9 +6,12 @@ lengths) and reports throughput + lane occupancy. ``--rectangular``
 falls back to the old fixed-batch ``ServeEngine`` drive for comparison.
 
 ``--mesh DxM`` serves mesh-native on a data×model device mesh (decode
-lanes data-parallel, params/KV cache tensor-parallel); ``--verify``
+lanes data-parallel, params/KV cache tensor-parallel; Pallas backends
+run shard_mapped when the axis extents divide the mesh); ``--verify``
 re-serves the same trace single-device and asserts token-identical
-outputs (the multi-device CI acceptance check).
+outputs (the multi-device CI acceptance check) — and, when a Pallas
+backend should serve shard_mapped, additionally asserts that no mesh
+kernel fallback fired (the kernel path really ran on the mesh).
 
 CLI (CPU-scale):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
@@ -70,6 +73,12 @@ def main():
     ap.add_argument("--verify", action="store_true",
                     help="re-serve the trace single-device and require "
                          "token-identical outputs (exits 1 on mismatch)")
+    ap.add_argument("--expect-kernel-mesh", action="store_true",
+                    help="require the shard_mapped Pallas kernel path: fail "
+                         "unless the engine dispatches the block-sparse "
+                         "kernels natively on the mesh (guards the CI "
+                         "acceptance drive against a dispatch-predicate "
+                         "regression silently serving the jnp reference)")
     args = ap.parse_args()
 
     cfg = reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -116,6 +125,15 @@ def main():
                          temperature=args.temperature)
     eng = ContinuousBatchingEngine(cfg, params, proj, serving=scfg,
                                    backend=args.backend, mesh=mesh)
+    if args.expect_kernel_mesh and not eng.kernel_native:
+        # independent of the engine's own dispatch decision: the caller
+        # (CI) declares the kernel path is REQUIRED for this geometry, so
+        # a predicate regression fails loudly instead of silently serving
+        # the masked-dense reference
+        print("[serve] EXPECT-KERNEL FAILED: engine did not select the "
+              "kernel-native mesh path (mesh/backend/config geometry "
+              "rejected by the dispatch predicate)")
+        raise SystemExit(1)
     prompt_lens = tuple(int(x) for x in args.prompt_lens.split(","))
     reqs = poisson_trace(args.requests,
                          mean_interarrival=args.mean_interarrival,
@@ -150,6 +168,24 @@ def main():
           f"mean lane occupancy {st.mean_occupancy:.2f}/{args.lanes}")
     print(f"[serve] KV cache bytes @ {args.lanes} lanes: "
           f"{eng.cache_bytes():,}")
+
+    if ((args.verify or args.expect_kernel_mesh) and mesh is not None
+            and eng.kernel_native):
+        # kernel-path identity is only meaningful if the kernel actually
+        # served on the mesh. `_kernel_native` is the engine's own dispatch
+        # decision (backend resolves to the block-sparse kernel, AQUA
+        # block geometry + mesh extents admit it, no H2O/window policy in
+        # the way) — --expect-kernel-mesh above already failed if that
+        # decision itself went wrong — so any per-engine fallback event
+        # means the masked-dense reference silently served instead.
+        backend_name = eng.cfg.attention.backend
+        events = eng.mesh_fallback_events()
+        if events:
+            print(f"[serve] VERIFY FAILED: backend {backend_name!r} should "
+                  f"serve shard_mapped on this mesh but fell back: {events}")
+            raise SystemExit(1)
+        print(f"[serve] verify: backend {backend_name!r} served shard_mapped "
+              "on the mesh (no kernel fallback)")
 
     if args.verify:
         # Token-identity reference. At greedy (temperature 0) the trace

@@ -30,7 +30,10 @@ and the continuous-batching engine runs the whole serve loop under an
 explicit data×model mesh — params and the KV cache (AQUA dim-sliced key
 lanes, H2O ``acc_score``) shard over ``model`` per
 ``distributed.sharding``'s rules, decode lanes shard over the data axes,
-the decode attention core runs under ``shard_map``, and the lane-surgery
+the attention cores run under ``shard_map`` — including the AQUA
+block-sparse Pallas prefill/decode kernels, which serve shard_mapped
+with per-shard block-index tables whenever the axis extents divide the
+mesh (``distributed.sharding.kernel_shardable``) — and the lane-surgery
 admission path preserves shardings end to end (every jitted entry point
 is pinned with ``out_shardings``). Single-device behavior is untouched
 when no mesh is configured.
@@ -291,6 +294,12 @@ class ContinuousBatchingEngine:
             self.mesh = make_serving_mesh(serving.mesh_shape,
                                           serving.mesh_axes)
         self._lane_order = None
+        self._kernel_native = False
+        # per-engine mesh-fallback record: filled (and warning-deduped) by
+        # the attention dispatch while this engine's steps trace, so each
+        # engine owns its fallback report regardless of other engines in
+        # the process (see attention.use_decode_mesh's fallback_sink)
+        self._mesh_fallback: set = set()
         admit_sh = step_sh = None
         if self.mesh is not None:
             admit_sh, step_sh = self._install_mesh()
@@ -306,8 +315,10 @@ class ContinuousBatchingEngine:
     def _install_mesh(self):
         """Shard params/projections, derive decode-state + lane-state
         shardings, and install them on the model (sharding-preserving lane
-        surgery) and the attention decode path (shard_map core). Returns
-        (admit, step) ``out_shardings`` pinning the jitted entry points."""
+        surgery) and the attention path (shard_map cores / shard_mapped
+        Pallas kernels). Returns (admit, step) ``out_shardings`` pinning
+        the jitted entry points."""
+        from repro.core import attention as attn
         from repro.distributed import sharding as dsh
 
         mesh, s = self.mesh, self.scfg
@@ -315,12 +326,26 @@ class ContinuousBatchingEngine:
             self.params, dsh.make_param_shardings(self.params, mesh))
         if self.proj is not None:
             self.proj = jax.device_put(self.proj, dsh.replicated(mesh))
-        kvh = (self.cfg.attention.num_kv_heads
-               if self.cfg.attention is not None else 0)
+        att = self.cfg.attention
+        kvh = att.num_kv_heads if att is not None else 0
+        # kernel-native layout: when the block-sparse decode kernel will
+        # serve this engine shard_mapped, the cache keeps its slot axis
+        # (and dim-blocks) whole per shard — unshardable axes replicate
+        # instead of absorbing into the sequence stripe
+        aq = self.cfg.aqua
+        self._kernel_native = False
+        if att is not None and aq is not None and aq.enabled:
+            be = attn.resolve_backend(att.backend, aqua=aq)
+            self._kernel_native = (
+                be.requires_pallas and be.decode is not None
+                and aq.block_dims > 1 and att.window is None
+                and h2o_budget(aq, s.max_seq) is None
+                and dsh.kernel_shardable(mesh, att, aq, batch=s.max_lanes))
         state_struct = jax.eval_shape(
             lambda: self.model.init_decode_state(s.max_lanes, s.max_seq))
         self._state_sh = dsh.make_state_shardings(
-            state_struct, mesh, kv_heads=kvh, batch=s.max_lanes)
+            state_struct, mesh, kv_heads=kvh, batch=s.max_lanes,
+            kernel_native=self._kernel_native)
         self.model.set_state_shardings(self._state_sh)
         self._lane_sh = dsh.make_lane_shardings(
             jax.eval_shape(lambda: _init_lane_state(s.max_lanes)), mesh)
@@ -346,10 +371,24 @@ class ContinuousBatchingEngine:
         return admit_sh, step_sh
 
     def _use_mesh(self):
-        """Trace-time context: installs (or clears) the decode mesh for the
-        shard_map attention core while this engine's steps trace."""
+        """Trace-time context: installs (or clears) the decode mesh — and
+        this engine's fallback sink — for the shard_map attention cores
+        while this engine's steps trace."""
         from repro.core.attention import use_decode_mesh
-        return use_decode_mesh(self.mesh)
+        return use_decode_mesh(self.mesh, fallback_sink=self._mesh_fallback)
+
+    def mesh_fallback_events(self):
+        """(backend, mode, reason) mesh-kernel fallbacks traced by THIS
+        engine — empty means every Pallas-backend step really served
+        shard_mapped (``launch.serve --verify`` asserts this)."""
+        return tuple(sorted(self._mesh_fallback))
+
+    @property
+    def kernel_native(self) -> bool:
+        """True when this engine's dispatch chose the shard_mapped Pallas
+        kernel path (and laid the cache out for it) — the public contract
+        ``launch.serve --expect-kernel-mesh`` / ``--verify`` gate on."""
+        return self._kernel_native
 
     # -- jitted bodies -------------------------------------------------
     def _admit_impl(self, params, batch, state, lanes: LaneState, lane,

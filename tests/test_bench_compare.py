@@ -1,0 +1,90 @@
+"""Unit tests for the bench-regression gate (benchmarks/compare.py).
+
+The normalized tok/s gate divides each serving row by the same file's
+rectangular-serialized anchor so machine speed cancels. When the anchor
+row is absent from either file the gate must be *skipped with a loud
+stderr note* — not silently fall back to absolute tok/s, which compares
+across machine speeds and fails (or passes) spuriously.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import compare as cmp  # noqa: E402
+
+ANCHOR = cmp.RECTANGULAR
+
+
+def _table(rows):
+    return {name: (derived, cmp._metrics(derived)) for name, derived in rows}
+
+
+def _run(base, fresh, threshold=0.2):
+    return list(cmp.compare(base, fresh, threshold))
+
+
+def test_normalized_gate_with_anchor_on_both_sides():
+    base = _table(
+        [
+            ("serving/dense-jnp", "tok_s=100.0 occupancy=2.00"),
+            (ANCHOR, "tok_s=50.0 occupancy=1.00"),
+        ]
+    )
+    fresh = _table(
+        [
+            ("serving/dense-jnp", "tok_s=120.0 occupancy=2.00"),
+            (ANCHOR, "tok_s=100.0 occupancy=1.00"),
+        ]
+    )
+    rows = {(n, m): ok for n, m, _, _, ok in _run(base, fresh)}
+    # normalized: base 2.0x anchor, fresh 1.2x anchor -> 40% drop, fails
+    assert rows[("serving/dense-jnp", "tok_s_rel")] is False
+    assert rows[("serving/dense-jnp", "occupancy")] is True
+
+
+def test_missing_anchor_skips_normalized_gate(capsys):
+    """Anchor absent from the baseline: the row's tok/s must not be
+    judged at all (the baseline value would be absolute, the fresh one
+    normalized), and a stderr note must say so."""
+    base = _table([("serving/dense-jnp", "tok_s=100.0 occupancy=2.00")])
+    fresh = _table(
+        [
+            ("serving/dense-jnp", "tok_s=1.0 occupancy=2.00"),
+            (ANCHOR, "tok_s=50.0 occupancy=1.00"),
+        ]
+    )
+    judged = _run(base, fresh)
+    names = [(n, m) for n, m, _, _, _ in judged]
+    assert names == [("serving/dense-jnp", "occupancy")]
+    err = capsys.readouterr().err
+    assert "anchor" in err and "serving/dense-jnp" in err
+    assert "baseline" in err
+
+
+def test_missing_anchor_in_fresh_run_notes_and_flags_row(capsys):
+    """Anchor present in the baseline but missing from the fresh run: the
+    anchor row itself fails the presence check (the canonical row set is
+    part of the contract), while the serving row's tok/s gate is skipped
+    with a note instead of comparing normalized-vs-absolute."""
+    base = _table(
+        [
+            ("serving/dense-jnp", "tok_s=100.0 occupancy=2.00"),
+            (ANCHOR, "tok_s=50.0 occupancy=1.00"),
+        ]
+    )
+    fresh = _table([("serving/dense-jnp", "tok_s=90.0 occupancy=2.00")])
+    judged = _run(base, fresh)
+    present = [(n, ok) for n, m, _, _, ok in judged if m == "present"]
+    assert present == [(ANCHOR, False)]
+    names = [(n, m) for n, m, _, _, _ in judged]
+    assert ("serving/dense-jnp", "tok_s_rel") not in names
+    err = capsys.readouterr().err
+    assert "anchor" in err and "fresh run" in err
+
+
+def test_anchor_present_rows_still_gate_deterministic_metrics():
+    base = _table([("kernel/aqua_decode_k0.5", "hbm_bytes_ratio=0.600")])
+    fresh = _table([("kernel/aqua_decode_k0.5", "hbm_bytes_ratio=0.900")])
+    rows = {(n, m): ok for n, m, _, _, ok in _run(base, fresh)}
+    assert rows[("kernel/aqua_decode_k0.5", "hbm_bytes_ratio")] is False

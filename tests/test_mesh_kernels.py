@@ -1,0 +1,239 @@
+"""Kernel-under-mesh token identity (8 forced host devices, conftest.py).
+
+The shard_map-wrapped AQUA block-sparse Pallas kernels must serve
+token-identically to the single-device kernel engine at greedy —
+per-(lane, head) work is independent, so the mesh wrap is bit-exact —
+with no ``_log_mesh_kernel_fallback`` emission. Non-divisible axis
+extents (a batch the data axes can't partition) keep the jnp reference
+path: once, with the logged reason. MQA (KV=1) replicates the head axis
+and stays on the kernel path (asserted via placement independence and a
+bitwise wrap-vs-unwrapped check — KV=1 makes the params' TP split the
+query-group axis, so cross-partitioning identity is not a property of
+*any* backend there); ``NB_sel == NB_total`` (k_ratio=1.0) degenerates
+to dense streaming and must agree with the masked-dense reference too.
+"""
+import dataclasses
+import logging
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced
+from repro.configs.base import AquaConfig, ServingConfig
+from repro.core import attention as attn_mod
+from repro.core.calibration import identity_projections
+from repro.distributed import sharding as dsh
+from repro.launch.mesh import make_serving_mesh
+from repro.models import build_model
+from repro.serving import ContinuousBatchingEngine, Request, ServeEngine
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+@pytest.fixture(autouse=True)
+def _fresh_fallback_dedup():
+    # warning assertions must not depend on what earlier tests emitted
+    attn_mod.reset_mesh_fallback_warnings()
+    yield
+    attn_mod.reset_mesh_fallback_warnings()
+
+
+@pytest.fixture(scope="module")
+def base_model():
+    cfg = dataclasses.replace(reduced("qwen3-0.6b"), remat=False,
+                              dtype="float32")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _aqua_model(base_model, k_ratio=0.5, num_kv_heads=None):
+    cfg, params = base_model
+    if num_kv_heads is not None:
+        cfg = dataclasses.replace(
+            cfg, attention=dataclasses.replace(cfg.attention,
+                                               num_kv_heads=num_kv_heads))
+        params = build_model(cfg).init(jax.random.PRNGKey(1))
+    cfg = dataclasses.replace(cfg, aqua=AquaConfig(k_ratio=k_ratio,
+                                                   block_dims=8))
+    proj = identity_projections(cfg.num_layers, cfg.attention.num_kv_heads,
+                                cfg.attention.head_dim)
+    return cfg, params, proj
+
+
+def _trace(cfg, num_requests, max_new, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    tokens=rng.integers(0, cfg.vocab_size,
+                                        size=(int(rng.integers(4, 22)),),
+                                        dtype=np.int32),
+                    max_new_tokens=max_new, arrival=float(i) * 1.5)
+            for i in range(num_requests)]
+
+
+def _assert_identical_to_solo_kernel(cfg, params, proj, outs, reqs, steps):
+    solo = ServeEngine(cfg, params, proj, max_seq=64,
+                       backend="aqua-block-sparse")
+    for r in reqs:
+        ref = solo.generate(
+            {"tokens": jnp.asarray(np.asarray(r.tokens)[None])}, steps=steps)
+        np.testing.assert_array_equal(
+            np.asarray(outs[r.uid].tokens), ref.tokens[0],
+            err_msg=f"uid={r.uid}")
+
+
+def test_kernel_mesh_token_identity(base_model):
+    """2x2 data×model mesh, staggered traffic: the shard_mapped kernel
+    engine is token-identical to the single-device kernel engine at
+    greedy, and never falls back."""
+    cfg, params, proj = _aqua_model(base_model, k_ratio=0.5)
+    scfg = ServingConfig(max_lanes=4, max_seq=64, max_new_tokens=6,
+                         prompt_bucket=8)
+    eng = ContinuousBatchingEngine(cfg, params, proj, serving=scfg,
+                                   backend="aqua-block-sparse",
+                                   mesh=make_serving_mesh((2, 2)))
+    assert eng.kernel_native
+    reqs = _trace(cfg, num_requests=4, max_new=6)
+    outs = eng.run(reqs)
+    assert eng.mesh_fallback_events() == ()
+    assert attn_mod.mesh_fallback_events() == ()   # process aggregate too
+    _assert_identical_to_solo_kernel(cfg, params, proj, outs, reqs, 6)
+    # kernel-native layout: lanes over data, KV heads over model, slot
+    # axis and dim-blocks whole per shard
+    k = eng.last_state.layers.k
+    assert k.sharding.spec == jax.sharding.PartitionSpec(
+        None, ("data",), "model", None, None), k.sharding
+
+
+def test_full_ratio_matches_kernel_and_reference(base_model):
+    """NB_sel == NB_total (k_ratio=1.0): selection degenerates to dense
+    streaming, so mesh kernel == solo kernel == masked-dense reference
+    tokens at greedy."""
+    cfg, params, proj = _aqua_model(base_model, k_ratio=1.0)
+    scfg = ServingConfig(max_lanes=4, max_seq=64, max_new_tokens=5,
+                         prompt_bucket=8)
+    reqs = _trace(cfg, num_requests=3, max_new=5, seed=2)
+    eng = ContinuousBatchingEngine(cfg, params, proj, serving=scfg,
+                                   backend="aqua-block-sparse",
+                                   mesh=make_serving_mesh((2, 2)))
+    outs = eng.run(reqs)
+    assert eng.mesh_fallback_events() == ()
+    _assert_identical_to_solo_kernel(cfg, params, proj, outs, reqs, 5)
+    ref = ServeEngine(cfg, params, proj, max_seq=64,
+                      backend="aqua-masked-dense")
+    for r in reqs:
+        expect = ref.generate(
+            {"tokens": jnp.asarray(np.asarray(r.tokens)[None])}, steps=5)
+        np.testing.assert_array_equal(np.asarray(outs[r.uid].tokens),
+                                      expect.tokens[0])
+
+
+def test_mqa_kernel_under_mesh(base_model):
+    """MQA (KV=1): the single KV head can't split over `model`, so the
+    head axis replicates while lanes still partition over `data` — the
+    kernel path must serve (not fall back) with the kernel-native cache
+    layout, and sampling must be placement-independent on the mesh.
+
+    (Cross-*partitioning* token identity is not asserted for MQA: with
+    KV=1 the params' TP falls back to splitting the query-group axis,
+    which reorders the output-projection float reduction vs a single
+    device — a pre-existing property of every backend under TP, not of
+    the kernel wrap. The wrap itself is pinned bitwise by
+    test_shard_mapped_kernel_wrap_is_bitwise below.)"""
+    cfg, params, proj = _aqua_model(base_model, k_ratio=0.5, num_kv_heads=1)
+    mesh = make_serving_mesh((2, 2))
+    assert dsh.kernel_shardable(mesh, cfg.attention, cfg.aqua, batch=4)
+    scfg = ServingConfig(max_lanes=4, max_seq=64, max_new_tokens=4,
+                         prompt_bucket=8)
+    reqs = _trace(cfg, num_requests=3, max_new=4, seed=3)
+    eng = ContinuousBatchingEngine(cfg, params, proj, serving=scfg,
+                                   backend="aqua-block-sparse", mesh=mesh)
+    assert eng.kernel_native
+    outs = eng.run(reqs)
+    assert eng.mesh_fallback_events() == ()
+    # placement independence at greedy: each request re-served solo on a
+    # fresh engine over the SAME mesh yields the same tokens regardless
+    # of lane placement / co-tenants
+    for r in reqs:
+        solo = ContinuousBatchingEngine(cfg, params, proj, serving=scfg,
+                                        backend="aqua-block-sparse",
+                                        mesh=mesh)
+        ref = solo.run([dataclasses.replace(r, arrival=0.0)])
+        np.testing.assert_array_equal(outs[r.uid].tokens,
+                                      ref[r.uid].tokens,
+                                      err_msg=f"uid={r.uid}")
+    # kernel-native MQA layout: head axis replicated, slot axis NOT
+    # absorbed into `model` (the kernel streams whole sequence stripes)
+    k = eng.last_state.layers.k
+    assert k.sharding.spec == jax.sharding.PartitionSpec(
+        None, ("data",), None, None, None), k.sharding
+
+
+@pytest.mark.parametrize("kvh", [1, 2])
+def test_shard_mapped_kernel_wrap_is_bitwise(kvh):
+    """The shard_map wrap around the block-sparse kernels is bit-exact vs
+    the unwrapped kernel call on identical inputs — per-(lane, head) work
+    is independent and the per-shard block-index tables equal the global
+    ones. Covers GQA (KV heads split over `model`) and MQA (head axis
+    replicated)."""
+    from repro.configs.base import AttentionConfig
+    from repro.core import kvcache as kvc
+
+    mesh = make_serving_mesh((2, 2))
+    b, g, s, d = 4, 2, 32, 16
+    h = kvh * g
+    cfg = AttentionConfig(num_heads=h, num_kv_heads=kvh, head_dim=d)
+    aqua = AquaConfig(k_ratio=0.5, block_dims=8)
+    backend = attn_mod.get_backend("aqua-block-sparse")
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    qp = jax.random.normal(ks[0], (b, s, kvh, g, d), jnp.float32)
+    kp = jax.random.normal(ks[1], (b, s, kvh, d), jnp.float32)
+    vp = jax.random.normal(ks[2], (b, s, kvh, d), jnp.float32)
+    positions = jnp.arange(s, dtype=jnp.int32)
+    lengths = jnp.full((b,), s, jnp.int32)
+
+    ref, _ = backend.prefill(qp, kp, vp, cfg=cfg, aqua=aqua,
+                             positions=positions, lengths=lengths,
+                             causal=True)
+    out, _ = jax.jit(lambda *a: attn_mod.shard_mapped_prefill_kernel(
+        mesh, backend, *a, cfg=cfg, aqua=aqua, positions=positions,
+        lengths=lengths, causal=True))(qp, kp, vp)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    qd = jax.random.normal(ks[3], (b, kvh, g, d), jnp.float32)
+    cache = kvc.AttnCache(
+        k=kp.transpose(0, 2, 1, 3), v=vp.transpose(0, 2, 1, 3),
+        positions=jnp.broadcast_to(positions, (b, s)),
+        count=jnp.full((b,), s, jnp.int32),
+        acc_score=jnp.zeros((b, kvh, s), jnp.float32))
+    ref_d = backend.decode(qd, cache, cfg=cfg, aqua=aqua)
+    out_d = jax.jit(lambda q, c: attn_mod.shard_mapped_decode_kernel(
+        mesh, backend, q, c, cfg=cfg, aqua=aqua))(qd, cache)
+    np.testing.assert_array_equal(np.asarray(out_d), np.asarray(ref_d))
+
+
+def test_nondivisible_batch_routes_to_jnp_once(base_model, caplog):
+    """max_lanes=3 on a data=2 mesh: the decode batch can't partition the
+    data axes (the cache's slot axis absorbed them), so decode routes to
+    the shard_map/jnp reference — once, with the logged reason — while
+    the B=1 admission prefills still run the shard_mapped kernel."""
+    cfg, params, proj = _aqua_model(base_model, k_ratio=0.5)
+    scfg = ServingConfig(max_lanes=3, max_seq=64, max_new_tokens=4,
+                         prompt_bucket=8)
+    reqs = _trace(cfg, num_requests=3, max_new=4, seed=4)
+    with caplog.at_level(logging.WARNING, logger="repro.core.attention"):
+        eng = ContinuousBatchingEngine(cfg, params, proj, serving=scfg,
+                                       backend="aqua-block-sparse",
+                                       mesh=make_serving_mesh((2, 2)))
+        outs = eng.run(reqs)
+    assert not eng.kernel_native
+    warns = [r for r in caplog.records if "falling back" in r.message]
+    assert len(warns) == 1, caplog.records
+    assert "decode" in warns[0].message and "aqua-block-sparse" \
+        in warns[0].message
+    events = eng.mesh_fallback_events()
+    assert [e[1] for e in events] == ["decode"], events
+    assert all(len(o.tokens) == 4 for o in outs.values()), outs

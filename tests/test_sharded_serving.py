@@ -4,8 +4,9 @@ The continuous-batching engine under a data×model mesh must be
 token-identical to the single-device engines at temperature 0 (and at
 temperature > 0 — the per-request RNG folds on (uid, token counter), so
 sampling is placement-independent), keep its decode state sharded across
-admissions (sharding-preserving lane surgery), and route Pallas-kernel
-backends to the shard_map/jnp reference path with a logged reason.
+admissions (sharding-preserving lane surgery), and serve Pallas-kernel
+backends through the shard_mapped kernel path (tests/test_mesh_kernels.py
+covers kernel-path token identity and the non-divisible fallback).
 """
 import dataclasses
 import logging
@@ -186,11 +187,13 @@ def test_shard_map_decode_core_matches_reference():
                                rtol=1e-6, atol=1e-6)
 
 
-def test_block_sparse_backend_falls_back_with_logged_reason(dense_model,
-                                                            caplog):
-    """Under a serving mesh the Pallas block-sparse kernels are routed to
-    the shard_map/jnp reference with a logged reason, and generations
-    match the masked-dense engine exactly."""
+def test_block_sparse_serves_shard_mapped_without_fallback(dense_model,
+                                                           caplog):
+    """The Pallas block-sparse kernels are mesh citizens now: on a mesh
+    whose axis extents divide (lanes over data, KV heads over model) the
+    engine serves through the shard_mapped kernel path with *no* fallback
+    warning — token identity vs the single-device kernel engine is
+    enforced by tests/test_mesh_kernels.py."""
     cfg, params = dense_model
     cfg = dataclasses.replace(cfg, aqua=AquaConfig(k_ratio=0.75,
                                                    block_dims=8))
@@ -200,20 +203,17 @@ def test_block_sparse_backend_falls_back_with_logged_reason(dense_model,
                          prompt_bucket=8)
     reqs = [Request(uid=i, tokens=np.arange(4 + i, dtype=np.int32),
                     arrival=float(i)) for i in range(2)]
-    attn_mod._log_mesh_kernel_fallback.cache_clear()
+    attn_mod.reset_mesh_fallback_warnings()
     with caplog.at_level(logging.WARNING, logger="repro.core.attention"):
         eng = ContinuousBatchingEngine(cfg, params, proj, serving=scfg,
                                        backend="aqua-block-sparse",
                                        mesh=_mesh((2, 2)))
         outs = eng.run(reqs)
-    assert any("falling back" in r.message and "aqua-block-sparse"
-               in r.message for r in caplog.records), caplog.records
-    ref_eng = ContinuousBatchingEngine(cfg, params, proj, serving=scfg,
-                                       backend="aqua-masked-dense",
-                                       mesh=_mesh((2, 2)))
-    ref = ref_eng.run(reqs)
-    for r in reqs:
-        np.testing.assert_array_equal(outs[r.uid].tokens, ref[r.uid].tokens)
+    assert not any("falling back" in r.message for r in caplog.records), \
+        caplog.records
+    assert attn_mod.mesh_fallback_events() == ()
+    assert eng.kernel_native
+    assert all(len(o.tokens) == 3 for o in outs.values()), outs
 
 
 def test_lane_assignment_interleaves_across_data_shards(dense_model):
