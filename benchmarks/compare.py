@@ -95,6 +95,17 @@ def compare(base, fresh, threshold):
             b, f = metrics.get("occupancy"), f_metrics.get("occupancy")
             if b is not None and f is not None:
                 yield name, "occupancy", b, f, f >= b * (1 - threshold)
+            # paged-cache gates: pool_util rising means the allocator
+            # reserves more pages for the same trace (page leak, sharing
+            # regression, over-reservation); prefill_saved falling means
+            # prefix sharing stopped deduplicating prompt pages. The
+            # traces are deterministic, so both are tight.
+            b, f = metrics.get("pool_util"), f_metrics.get("pool_util")
+            if b is not None and f is not None:
+                yield name, "pool_util", b, f, f <= b * (1 + threshold)
+            b, f = metrics.get("prefill_saved"), f_metrics.get("prefill_saved")
+            if b is not None and f is not None:
+                yield name, "prefill_saved", b, f, f >= b * (1 - threshold)
         b, f = metrics.get("hbm_bytes_ratio"), f_metrics.get("hbm_bytes_ratio")
         if b is not None and f is not None:
             yield name, "hbm_bytes_ratio", b, f, f <= b * 1.01

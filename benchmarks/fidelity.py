@@ -348,6 +348,35 @@ def kernel_bandwidth() -> List[Row]:
     us_ref = timeit(lambda: aqua_decode_ref(
         q, khat, v, topk_block_indices(q, 48, 8), lengths, 8), iters=3)
     rows.append(("kernel/dense_ref", us_ref, "hbm_bytes_ratio=1.000"))
+
+    # paged decode: the same cache content scattered into a *permuted*
+    # page pool — the scalar-prefetched page table restores logical order
+    # inside the kernel's index_map, so the output must match the
+    # contiguous kernel and the HBM score-read ratio is unchanged (pages
+    # only redirect addressing; the pool itself is what shrinks, which
+    # the serving rows report as cache bytes / pool_util)
+    from repro.kernels.ops import aqua_paged_decode
+    ps = 128
+    npg = s // ps
+    perm = np.arange(npg, dtype=np.int32)[::-1].copy()   # reversed layout
+    pages_k = khat[0].reshape(kvh, npg, ps, d).transpose(1, 0, 2, 3)
+    pages_v = v[0].reshape(kvh, npg, ps, d).transpose(1, 0, 2, 3)
+    pool_k = jnp.zeros_like(pages_k).at[perm].set(pages_k)
+    pool_v = jnp.zeros_like(pages_v).at[perm].set(pages_v)
+    table = jnp.asarray(perm)[None]                      # (1, npg)
+    for kr in (0.5, 0.75):
+        us = timeit(lambda: aqua_paged_decode(
+            q, pool_k, pool_v, table, lengths, k_ratio=kr, block_dims=8,
+            seq_blk=ps), iters=3)
+        err = float(jnp.max(jnp.abs(
+            aqua_paged_decode(q, pool_k, pool_v, table, lengths,
+                              k_ratio=kr, block_dims=8, seq_blk=ps)
+            - aqua_decode(q, khat, v, lengths, k_ratio=kr))))
+        nb, nb_sel = block_counts(d, kr, 8)
+        kernel_bytes = (khat.size * 2) * (nb_sel / nb) + v.size * 2
+        rows.append((f"kernel/aqua_paged_decode_k{kr}", us,
+                     f"max_abs_err={err:.2e} "
+                     f"hbm_bytes_ratio={kernel_bytes / dense_bytes:.3f}"))
     return rows
 
 
@@ -383,16 +412,17 @@ def serving_throughput() -> List[Row]:
     scfg = ServingConfig(max_lanes=4, max_seq=64, max_new_tokens=max_new,
                          prompt_bucket=8)
 
-    def timed_drive(eng, repeats: int = 5):
+    def timed_drive(eng, repeats: int = 5, trace=None):
         """Warm up (compile admit+step), then best-of-N timed drives —
         the bench-regression gate compares these numbers across CI runs,
         so a single noisy wall-clock sample is not acceptable."""
-        for o in eng.run(reqs).values():
+        trace = reqs if trace is None else trace
+        for o in eng.run(trace).values():
             assert o.tokens, o
         best = float("inf")
         for _ in range(repeats):
             t0 = time.time()
-            outs = eng.run(reqs)
+            outs = eng.run(trace)
             best = min(best, time.time() - t0)
             assert all(len(o.tokens) == max_new for o in outs.values())
         return best, eng.stats
@@ -408,6 +438,50 @@ def serving_throughput() -> List[Row]:
         rows.append((f"serving/{backend}", dt / max(st.decode_steps, 1) * 1e6,
                      f"tok_s={st.tokens_emitted / dt:.1f} "
                      f"occupancy={st.mean_occupancy:.2f}"))
+
+    # block-paged KV cache rows: the pool (12 pages of 16 tokens) is 25%
+    # smaller than lane-stripe parity (4 lanes × 4 pages) — admissions
+    # queue on free pages instead of OOMing, and cache_bytes drops by the
+    # same ratio. pool_util (mean fraction of pool pages in use) and
+    # prefill_saved (prompt tokens never re-prefilled thanks to prefix
+    # sharing) are gated by benchmarks/compare.py: a paging regression
+    # (page leak, sharing broken) moves them and fails the bench job.
+    pscfg = dataclasses.replace(scfg, page_size=16, num_pages=12)
+
+    def paged_row(name, eng, reqs_override=None):
+        dt, st = timed_drive(eng, trace=reqs_override)
+        pool = eng.page_pool
+        rows.append((f"serving/{name}", dt / max(st.decode_steps, 1) * 1e6,
+                     f"tok_s={st.tokens_emitted / dt:.1f} "
+                     f"occupancy={st.mean_occupancy:.2f} "
+                     f"pool_util={pool.mean_utilization:.3f} "
+                     f"prefill_saved={pool.tokens_saved}"))
+
+    paged_row("paged-dense-jnp",
+              ContinuousBatchingEngine(cfg, params, None, serving=pscfg,
+                                       backend="dense-jnp"))
+    aqua8 = AquaConfig(k_ratio=0.5, block_dims=8)
+    paged_row("paged-aqua-block-sparse",
+              ContinuousBatchingEngine(
+                  dataclasses.replace(cfg, aqua=aqua8), params, ident,
+                  serving=pscfg, backend="aqua-block-sparse"))
+    # prefix-shared trace: every prompt opens with the same 16-token
+    # (page-aligned) prefix, so all admissions after the first skip its
+    # prefill and map the sharer's pages read-only
+    pre_rng = np.random.default_rng(7)
+    prefix = pre_rng.integers(0, cfg.vocab_size, size=(16,), dtype=np.int32)
+    shared_reqs = [
+        dataclasses.replace(
+            r, tokens=np.concatenate([prefix, np.asarray(r.tokens)]))
+        for r in poisson_trace(12, mean_interarrival=2.0,
+                               prompt_lens=(8, 14, 20),
+                               max_new_tokens=max_new,
+                               vocab_size=cfg.vocab_size, seed=0)
+    ]
+    paged_row("paged-prefix-shared",
+              ContinuousBatchingEngine(cfg, params, None, serving=pscfg,
+                                       backend="dense-jnp"),
+              reqs_override=shared_reqs)
 
     # mesh-native serving (2×2 data×model) — the sharded row of the bench
     # trajectory. Skipped (not silently: a sentinel row records why) when

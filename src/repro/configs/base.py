@@ -241,11 +241,30 @@ class ServingConfig:
     # the model axis per distributed.sharding's name+shape rules.
     mesh_shape: Optional[Tuple[int, ...]] = None
     mesh_axes: Tuple[str, ...] = ("data", "model")
+    # Block-paged KV cache: ``page_size`` tokens per page turns the
+    # per-lane contiguous slot stripes into a global page pool with
+    # per-lane page tables (repro.core.kvcache.PagedAttnCache). None keeps
+    # the contiguous layout. ``num_pages`` sizes the pool; None defaults
+    # to lane-stripe parity (max_lanes * slots / page_size) — set it lower
+    # to realize the memory win (admissions queue when the pool is full).
+    page_size: Optional[int] = None
+    num_pages: Optional[int] = None
+    # Map identical page-aligned prompt prefixes into multiple lanes
+    # (refcounted, copy-on-write at the divergence point): admissions of a
+    # shared prefix skip its prefill entirely. Paged full-cache policy
+    # only; ignored otherwise.
+    prefix_sharing: bool = True
 
     def validate(self) -> None:
         assert self.max_lanes >= 1
         assert self.max_new_tokens >= 1
         assert self.prompt_bucket >= 1
+        if self.page_size is not None:
+            assert self.page_size >= 1
+            assert self.max_seq % self.page_size == 0, \
+                (self.max_seq, self.page_size)
+            if self.num_pages is not None:
+                assert self.num_pages >= 1
         if self.mesh_shape is not None:
             assert len(self.mesh_shape) == len(self.mesh_axes), \
                 (self.mesh_shape, self.mesh_axes)

@@ -899,6 +899,74 @@ def build_cache_from_prefill(params: dict, x: jax.Array, cfg: AttentionConfig,
 
 
 # ---------------------------------------------------------------------------
+# Prefix-shared tail prefill (paged serving)
+# ---------------------------------------------------------------------------
+
+
+def prefixed_tail_attention(params: dict, x: jax.Array, cfg: AttentionConfig,
+                            aqua: Optional[AquaConfig],
+                            proj: Optional[jax.Array], *,
+                            prefix_k: jax.Array, prefix_v: jax.Array,
+                            prefix_positions: jax.Array,
+                            prefix_len: jax.Array, positions: jax.Array,
+                            lengths: Optional[jax.Array] = None
+                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Causal attention of a prompt *tail* against a read-only cache
+    prefix plus itself — the zero-recompute admission path for
+    prefix-shared paged serving.
+
+    x: (1, T, d_model) tail activations; ``prefix_k`` (1, KV, S, Dk') /
+    ``prefix_v`` (1, KV, S, Dv) are the lane's gathered cache view (keys
+    already projected + sliced when AQUA is on); ``prefix_positions``
+    (1, S) with -1 empties; prefix keys are valid where their position is
+    in ``[0, prefix_len)``. ``positions`` (1, T) absolute tail positions
+    (``prefix_len + arange``); ``lengths`` (1,) masks ragged tail padding.
+
+    Runs the masked-dense reference path (admission-time work, exactly
+    like B=1 graft prefills under a mesh). Returns
+    (out (1, T, d_model), k_cache (1, T, KV, Dk'), v (1, T, KV, Dv)) with
+    ``k_cache`` in the cache's stored form (projected/sliced under AQUA).
+    """
+    q, k, v = qkv(params, x, cfg, positions)
+    aqua_on = aqua is not None and aqua.enabled
+    qh, kh = _aqua_project(q, k, aqua, proj, cfg.head_dim)
+    if aqua_on:
+        qq = qh * _aqua_mask(qh, aqua, cfg.head_dim)
+        kk = kh
+    else:
+        qq, kk = q, k
+
+    scale = 1.0 / jnp.sqrt(float(cfg.head_dim))
+    qpos = positions                                     # (1, T)
+    ppos = prefix_positions                              # (1, S)
+    sp = jnp.einsum("bskgd,bktd->bkgst", qq, prefix_k.astype(qq.dtype))
+    sp = sp.astype(jnp.float32) * scale
+    mp = ((ppos >= 0) & (ppos < prefix_len))[:, None, None, None, :]
+    if cfg.window is not None:
+        mp = mp & (ppos[:, None, None, None, :]
+                   > qpos[:, None, None, :, None] - cfg.window)
+    st = jnp.einsum("bskgd,btkd->bkgst", qq, kk)
+    st = st.astype(jnp.float32) * scale
+    mt = qpos[:, None, None, :, None] >= qpos[:, None, None, None, :]
+    if cfg.window is not None:
+        mt &= qpos[:, None, None, None, :] > \
+            qpos[:, None, None, :, None] - cfg.window
+    if lengths is not None:
+        t = q.shape[1]
+        mt &= (jnp.arange(t)[None, :] < lengths[:, None]
+               )[:, None, None, None, :]
+    scores = jnp.concatenate([jnp.where(mp, sp, NEG_INF),
+                              jnp.where(mt, st, NEG_INF)], axis=-1)
+    weights = jax.nn.softmax(scores, axis=-1)
+    vals = jnp.concatenate([prefix_v.astype(v.dtype),
+                            v.transpose(0, 2, 1, 3)], axis=2)
+    out = jnp.einsum("bkgst,bktd->bskgd", weights.astype(v.dtype), vals)
+    out = jnp.einsum("bskgd,kgdm->bsm", out.astype(v.dtype),
+                     params["wo"].astype(x.dtype))
+    return out, kk, v
+
+
+# ---------------------------------------------------------------------------
 # Decode attention (single step, slot cache)
 # ---------------------------------------------------------------------------
 
@@ -949,6 +1017,13 @@ def decode_attention(params: dict, x_t: jax.Array, cache: kv.AttnCache,
     recent_len = 0
     if h2o:
         recent_len = max(1, int(aqua.h2o_recent_frac * cache.num_slots))
+    if isinstance(cache, kv.PagedAttnCache):
+        slot, evict = kv.paged_select_slot(cache, window=cfg.window, h2o=h2o,
+                                           recent_len=recent_len)
+        cache = kv.paged_insert(cache, slot, k_t, v_t,
+                                write_mask=write_mask, evict_page=evict)
+        return _paged_decode_product(params, x_t, q, cache, cfg, aqua,
+                                     h2o=h2o, write_mask=write_mask)
     slot = kv.select_slot(cache, window=cfg.window, h2o=h2o,
                           recent_len=recent_len)
     cache = kv.insert(cache, slot, k_t, v_t, write_mask=write_mask)
@@ -996,5 +1071,77 @@ def decode_attention(params: dict, x_t: jax.Array, cache: kv.AttnCache,
             head_dim=head_dim, window=cfg.window)
     if h2o:
         cache = kv.accumulate_h2o(cache, weights, write_mask=write_mask)
+    out = jnp.einsum("bkgd,kgdm->bm", out, params["wo"].astype(x_t.dtype))
+    return out, cache
+
+
+def _aqua_block_sparse_paged_decode(q_hat, cache: kv.PagedAttnCache, *,
+                                    cfg, aqua):
+    """Paged AQUA block-sparse decode: the page table rides the same
+    scalar-prefetch ``index_map`` machinery as the dim-block selection
+    (kernels/aqua_decode.aqua_paged_decode_attention) — pool pages stream
+    HBM→VMEM directly, no gathered lane view is ever materialized."""
+    from repro.kernels import ops as kops
+    b, kvh, g, dk = q_hat.shape
+    qf = q_hat.reshape(b, kvh * g, dk)
+    lengths = jnp.minimum(cache.count, cache.num_slots)
+    out = kops.aqua_paged_decode(qf, cache.k_pool, cache.v_pool,
+                                 cache.page_table, lengths,
+                                 k_ratio=aqua.k_ratio,
+                                 block_dims=aqua.block_dims,
+                                 seq_blk=aqua.decode_seq_blk,
+                                 scale=1.0 / float(cfg.head_dim) ** 0.5)
+    return out.reshape(b, kvh, g, -1)
+
+
+def _paged_decode_product(params, x_t: jax.Array, q: jax.Array,
+                          cache: kv.PagedAttnCache, cfg: AttentionConfig,
+                          aqua: Optional[AquaConfig], *, h2o: bool,
+                          write_mask: Optional[jax.Array]
+                          ) -> Tuple[jax.Array, kv.PagedAttnCache]:
+    """Read side of paged decode attention (the insert already ran).
+
+    ``q`` is the projected (unmasked) query when AQUA is on. Dispatch
+    mirrors the contiguous path: the block-sparse Pallas kernel serves
+    the full-cache policy single-device (page table scalar-prefetched);
+    everything else — window rings, page-granular H2O, mesh serving —
+    runs the masked-dense reference on the gathered lane view, which is
+    slot-for-slot identical to the contiguous cache layout.
+    """
+    aqua_on = aqua is not None and aqua.enabled
+    head_dim = cfg.head_dim
+    backend = resolve_backend(cfg.backend, aqua=aqua)
+    kernel_ok = (backend.decode is not None and aqua_on and not h2o
+                 and cfg.window is None and aqua.block_dims > 1
+                 and q.shape[-1] % aqua.block_dims == 0
+                 and cache.page_size % 8 == 0)
+    if kernel_ok and decode_mesh() is not None:
+        # the pool is global across lanes — a shard_mapped paged kernel
+        # needs lane-partitioned page sets; under a mesh the GSPMD jnp
+        # reference serves (pool model-sharded on KV heads, replicated
+        # page tables; see distributed.sharding)
+        _log_mesh_kernel_fallback(backend.name, "decode",
+                                  "paged pool serves the jnp reference "
+                                  "under a mesh")
+        kernel_ok = False
+    if kernel_ok:
+        out = _aqua_block_sparse_paged_decode(q, cache, cfg=cfg, aqua=aqua)
+        out = jnp.einsum("bkgd,kgdm->bm", out, params["wo"].astype(x_t.dtype))
+        return out, cache
+
+    qq = q * _aqua_mask(q, aqua, head_dim) if aqua_on else q
+    view = kv.paged_lane_view(cache)
+    mesh = decode_mesh()
+    if mesh is not None:
+        out, weights = _shard_mapped_decode_core(
+            mesh, qq, view.k, view.v, view.positions, view.count,
+            head_dim=head_dim, window=cfg.window)
+    else:
+        out, weights = _masked_dense_decode_core(
+            qq, view.k, view.v, view.positions, view.count,
+            head_dim=head_dim, window=cfg.window)
+    if h2o:
+        cache = kv.paged_accumulate_h2o(cache, weights,
+                                        write_mask=write_mask)
     out = jnp.einsum("bkgd,kgdm->bm", out, params["wo"].astype(x_t.dtype))
     return out, cache

@@ -44,3 +44,37 @@ def eviction_step(cache: kv.AttnCache, aqua: AquaConfig) -> jax.Array:
     """Expose the victim-selection decision for inspection/benchmarks."""
     recent_len = max(1, int(aqua.h2o_recent_frac * cache.num_slots))
     return kv.select_slot(cache, window=None, h2o=True, recent_len=recent_len)
+
+
+# ---------------------------------------------------------------------------
+# Page-granular H2O (paged KV cache)
+# ---------------------------------------------------------------------------
+
+
+def reference_victim_page(positions, acc_score, count, *, page_size: int,
+                          recent_len: int, window=None):
+    """NumPy oracle for the paged H2O victim-page decision (single lane).
+
+    positions: (S,) logical-slot positions (-1 empty); acc_score: (KV, S);
+    count: scalar position of the incoming token. Returns the logical page
+    index that ``kvcache.paged_select_slot`` must evict, or -1 when an
+    empty slot exists (no eviction). Independent implementation used by
+    the property-based cache-invariant suite.
+    """
+    import numpy as np
+
+    pos = np.asarray(positions)
+    acc = np.asarray(acc_score, np.float32)   # match the device dtype
+    s = pos.shape[0]
+    npl = s // page_size
+    if (pos < 0).any():
+        return -1
+    protected = pos > (count - recent_len)
+    page_prot = protected.reshape(npl, page_size).any(axis=-1)
+    score = acc.sum(axis=0).reshape(npl, page_size).sum(axis=-1)
+    score = np.where(page_prot, np.inf, score)
+    if window is not None:
+        stale = (pos >= 0) & (pos <= count - window)
+        page_stale = stale.reshape(npl, page_size).all(axis=-1)
+        score = np.where(page_stale & ~page_prot, -np.inf, score)
+    return int(np.argmin(score))

@@ -11,12 +11,28 @@ One unified slot-based cache covers every policy in the framework:
 Slots carry an explicit ``positions`` array so masking, RoPE and recency
 protection are uniform across policies. Everything is static-shaped and
 jit/pjit friendly.
+
+Block-paged variant (:class:`PagedAttnCache`): the same *logical* slot
+space per lane, but physical storage lives in a global page pool shared
+by all lanes — per-lane page tables map logical page ``slot // page_size``
+to a physical pool page. HBM footprint scales with the pool size (actual
+occupancy) instead of ``lanes × max_seq``, read-only pages can be mapped
+into several lanes at once (prefix sharing, refcounted host-side by
+``repro.serving.scheduler.PagePool``), and H2O eviction turns
+page-granular: the accumulated-score victim frees a *whole page*. Because
+the logical slot space is unchanged, the full-cache and sliding-window
+policies are slot-for-slot identical to the contiguous cache (paged
+decode is token-identical at greedy); only the H2O policy deliberately
+diverges to whole-page victims. All paged operations are static-shaped
+and jit-safe: the host allocator only ever writes page-table rows between
+steps.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -158,6 +174,336 @@ def accumulate_h2o(cache: AttnCache, attn_weights: jax.Array,
     if write_mask is not None:
         upd = jnp.where(write_mask[:, None, None], upd, 0.0)
     return dataclasses.replace(cache, acc_score=cache.acc_score + upd)
+
+
+# ---------------------------------------------------------------------------
+# Block-paged cache: global page pool + per-lane page tables
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class PagedAttnCache:
+    """Per-layer paged attention cache.
+
+    k_pool: (P, KV, page_size, Dk) — global key page pool (projected and
+       sliced when AQUA is on; the paged Pallas decode kernel consumes the
+       dim-major transpose view per page, see kernels/aqua_decode.py).
+    v_pool: (P, KV, page_size, Dv)
+    pos_pool: (P, page_size) int32 — token position held by each pool
+       slot, -1 empty. Stored per *physical* page: positions of a shared
+       (read-only, refcounted) page are identical in every lane that maps
+       it, so per-lane copies would be redundant.
+    acc_pool: (P, KV, page_size) f32 — H2O accumulated attention mass.
+    page_table: (B, pages_per_lane) int32 — physical page backing each
+       logical page of the lane, -1 unmapped. Logical slot ``s`` of a lane
+       lives at ``(page_table[b, s // page_size], s % page_size)``.
+    count: (B,) int32 — tokens processed so far (= next position).
+
+    The logical slot space (``pages_per_lane * page_size`` slots) matches
+    the contiguous :class:`AttnCache` layout exactly, so every policy's
+    slot arithmetic carries over through the indirection.
+    """
+
+    k_pool: jax.Array
+    v_pool: jax.Array
+    pos_pool: jax.Array
+    acc_pool: jax.Array
+    page_table: jax.Array
+    count: jax.Array
+
+    @property
+    def num_pages(self) -> int:
+        return self.k_pool.shape[0]
+
+    @property
+    def page_size(self) -> int:
+        return self.k_pool.shape[2]
+
+    @property
+    def pages_per_lane(self) -> int:
+        return self.page_table.shape[1]
+
+    @property
+    def num_slots(self) -> int:
+        """Logical slots per lane (= contiguous cache's slot count)."""
+        return self.pages_per_lane * self.page_size
+
+
+def paged_pages(slots: int, page_size: int) -> int:
+    """Pages per lane for a logical capacity of ``slots``. The logical
+    slot space must tile into whole pages so the ring / eviction slot
+    arithmetic is identical to the contiguous cache — callers validate
+    ``slots % page_size == 0`` (ServingConfig does for serving)."""
+    assert slots % page_size == 0, \
+        f"cache slots {slots} must be a multiple of page_size {page_size}"
+    return slots // page_size
+
+
+def init_paged_cache(batch: int, num_kv: int, num_pages: int,
+                     pages_per_lane: int, page_size: int, dk: int, dv: int,
+                     dtype=jnp.bfloat16) -> PagedAttnCache:
+    return PagedAttnCache(
+        k_pool=jnp.zeros((num_pages, num_kv, page_size, dk), dtype),
+        v_pool=jnp.zeros((num_pages, num_kv, page_size, dv), dtype),
+        pos_pool=jnp.full((num_pages, page_size), -1, jnp.int32),
+        acc_pool=jnp.zeros((num_pages, num_kv, page_size), jnp.float32),
+        page_table=jnp.full((batch, pages_per_lane), -1, jnp.int32),
+        count=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def _gather_pool(pool: jax.Array, table: jax.Array) -> jax.Array:
+    """(P, ...) pool × (B, NP) table -> (B, NP, ...) gathered pages.
+    Unmapped entries (-1) gather page 0; callers mask them via positions
+    (which :func:`gather_positions` forces to -1 for unmapped pages)."""
+    return pool[jnp.maximum(table, 0)]
+
+
+def gather_positions(cache: PagedAttnCache) -> jax.Array:
+    """(B, S_log) int32 logical-slot positions (-1 for empty/unmapped)."""
+    b = cache.page_table.shape[0]
+    pos = _gather_pool(cache.pos_pool, cache.page_table)  # (B, NP, ps)
+    pos = jnp.where(cache.page_table[..., None] >= 0, pos, -1)
+    return pos.reshape(b, cache.num_slots)
+
+
+def paged_lane_view(cache: PagedAttnCache) -> AttnCache:
+    """Materialize the per-lane contiguous view of a paged cache.
+
+    The returned :class:`AttnCache` is slot-for-slot identical to what the
+    contiguous cache would hold, so every reference attention core (and
+    the shard_map-wrapped decode core) runs unchanged — this is the
+    masked-dense/jnp fallback contract for paged serving. The Pallas
+    decode kernel instead walks the page table in its ``index_map``
+    (kernels/aqua_decode.aqua_paged_decode_attention) and never pays this
+    gather.
+    """
+    b = cache.page_table.shape[0]
+    s = cache.num_slots
+    k = _gather_pool(cache.k_pool, cache.page_table)      # (B,NP,KV,ps,Dk)
+    v = _gather_pool(cache.v_pool, cache.page_table)
+    acc = _gather_pool(cache.acc_pool, cache.page_table)  # (B,NP,KV,ps)
+    kvh = k.shape[2]
+    k = k.transpose(0, 2, 1, 3, 4).reshape(b, kvh, s, k.shape[-1])
+    v = v.transpose(0, 2, 1, 3, 4).reshape(b, kvh, s, v.shape[-1])
+    acc = acc.transpose(0, 2, 1, 3).reshape(b, kvh, s)
+    return AttnCache(k=k, v=v, positions=gather_positions(cache),
+                     count=cache.count, acc_score=acc)
+
+
+def paged_select_slot(cache: PagedAttnCache, *, window: Optional[int],
+                      h2o: bool, recent_len: int
+                      ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Paged twin of :func:`select_slot`.
+
+    Returns ``(slot (B,), evict_page (B,) | None)``. Full-cache and ring
+    policies are arithmetic-identical to the contiguous cache (the page
+    table only redirects storage). H2O eviction is *page-granular*: while
+    the lane still has empty slots the first one is filled; once full, the
+    whole page with the smallest accumulated score (stale-first under a
+    combined window, recent pages protected) is freed — ``evict_page`` is
+    its logical index (-1 = no eviction this step) and the incoming token
+    lands in its first slot. :func:`paged_insert` clears the victim page.
+    """
+    b, npl = cache.page_table.shape
+    ps = cache.page_size
+    s_log = cache.num_slots
+    count = cache.count
+    if window is not None and not h2o:
+        return count % s_log, None
+    if not h2o:
+        return jnp.minimum(count, s_log - 1), None
+    pos = gather_positions(cache)                       # (B, S_log)
+    cur = count
+    empty = pos < 0
+    has_empty = empty.any(axis=-1)
+    first_empty = jnp.argmax(empty, axis=-1).astype(jnp.int32)
+    protected = pos > (cur[:, None] - recent_len)       # recent tokens
+    page_prot = protected.reshape(b, npl, ps).any(axis=-1)
+    acc = _gather_pool(cache.acc_pool, cache.page_table)  # (B,NP,KV,ps)
+    score = acc.sum(axis=(2, 3))                        # (B, NP)
+    score = jnp.where(page_prot, jnp.inf, score)
+    if window is not None:
+        stale = (pos >= 0) & (pos <= cur[:, None] - window)
+        page_stale = stale.reshape(b, npl, ps).all(axis=-1)
+        score = jnp.where(page_stale & ~page_prot, -jnp.inf, score)
+    victim = jnp.argmin(score, axis=-1).astype(jnp.int32)
+    slot = jnp.where(has_empty, first_empty, victim * ps)
+    evict = jnp.where(has_empty, -1, victim)
+    return slot, evict
+
+
+def paged_insert(cache: PagedAttnCache, slot: jax.Array, k_new: jax.Array,
+                 v_new: jax.Array, write_mask: Optional[jax.Array] = None,
+                 evict_page: Optional[jax.Array] = None) -> PagedAttnCache:
+    """Write one token's (projected/sliced) k, v at logical ``slot``.
+
+    Physical addressing goes through the page table; suppressed writes
+    (``write_mask`` False rows, unmapped pages) are redirected to an
+    out-of-bounds page index and dropped (``mode="drop"``) so frozen
+    lanes cost no extra HBM traffic. ``evict_page`` (page-granular H2O):
+    the victim page's positions/scores are cleared *before* the write, so
+    freed slots read as empty from the next step on.
+    """
+    b, _ = cache.page_table.shape
+    ps = cache.page_size
+    oob = cache.num_pages                      # dropped scatter destination
+    rows = jnp.arange(b)
+    entry = cache.page_table[rows, slot // ps]
+    ok = entry >= 0
+    if write_mask is not None:
+        ok &= write_mask
+    phys = jnp.where(ok, entry, oob)
+    off = slot % ps
+
+    pos_pool, acc_pool = cache.pos_pool, cache.acc_pool
+    if evict_page is not None:
+        ev_entry = cache.page_table[rows, jnp.maximum(evict_page, 0)]
+        ev_ok = (evict_page >= 0) & (ev_entry >= 0)
+        if write_mask is not None:
+            ev_ok &= write_mask
+        ev_phys = jnp.where(ev_ok, ev_entry, oob)
+        pos_pool = pos_pool.at[ev_phys].set(-1, mode="drop")
+        acc_pool = acc_pool.at[ev_phys].set(0.0, mode="drop")
+
+    k_pool = cache.k_pool.at[phys, :, off].set(
+        k_new.astype(cache.k_pool.dtype), mode="drop")
+    v_pool = cache.v_pool.at[phys, :, off].set(
+        v_new.astype(cache.v_pool.dtype), mode="drop")
+    pos_pool = pos_pool.at[phys, off].set(cache.count, mode="drop")
+    acc_pool = acc_pool.at[phys, :, off].set(0.0, mode="drop")
+    adv = jnp.int32(1) if write_mask is None else write_mask.astype(jnp.int32)
+    return dataclasses.replace(cache, k_pool=k_pool, v_pool=v_pool,
+                               pos_pool=pos_pool, acc_pool=acc_pool,
+                               count=cache.count + adv)
+
+
+def paged_accumulate_h2o(cache: PagedAttnCache, attn_weights: jax.Array,
+                         write_mask: Optional[jax.Array] = None
+                         ) -> PagedAttnCache:
+    """Scatter-add the H2O statistic through the page table.
+
+    attn_weights: (B, KV, G, S_log) probabilities over the *logical* slot
+    view (what the reference decode core emits for the gathered lane
+    view); summed over the G query heads per kv group. Invalid/unmapped
+    slots carry zero weight (masked softmax) and unmapped pages are
+    dropped scatters, so no page is polluted. Prefix-shared pages are
+    incompatible with H2O (the engine rejects the combination), so no two
+    lanes scatter into the same physical page.
+    """
+    b, npl = cache.page_table.shape
+    ps = cache.page_size
+    upd = attn_weights.astype(jnp.float32).sum(axis=2)  # (B, KV, S_log)
+    if write_mask is not None:
+        upd = jnp.where(write_mask[:, None, None], upd, 0.0)
+    phys = jnp.where(cache.page_table >= 0, cache.page_table,
+                     cache.num_pages)                   # (B, NP)
+    phys_slot = jnp.repeat(phys, ps, axis=1)            # (B, S_log)
+    off = jnp.tile(jnp.arange(ps, dtype=jnp.int32), npl)
+    acc = cache.acc_pool.at[phys_slot, :, off].add(
+        upd.transpose(0, 2, 1), mode="drop")
+    return dataclasses.replace(cache, acc_pool=acc)
+
+
+def paged_graft(cache: PagedAttnCache, req: AttnCache, lane: jax.Array,
+                num_slots: int) -> PagedAttnCache:
+    """Copy logical slots ``[0, num_slots)`` of a B=1 contiguous cache
+    (an admission prefill) into ``lane``'s pages of the paged cache.
+
+    Every page currently mapped by the lane is cleared first (positions
+    -1, scores 0) — pool pages are recycled across requests, so stale
+    positions from a previous tenant must never read as valid. The page
+    table row itself is written host-side by the allocator *before* the
+    jitted admission step runs (see serving.engine); this function only
+    moves cache content. ``num_slots`` is static (one compile per prompt
+    bucket).
+    """
+    ps = cache.page_size
+    oob = cache.num_pages
+    tbl = cache.page_table[lane]                        # (NP,)
+    all_phys = jnp.where(tbl >= 0, tbl, oob)
+    pos_pool = cache.pos_pool.at[all_phys].set(-1, mode="drop")
+    acc_pool = cache.acc_pool.at[all_phys].set(0.0, mode="drop")
+
+    idx = jnp.arange(num_slots)
+    entry = tbl[idx // ps]
+    phys = jnp.where(entry >= 0, entry, oob)
+    off = idx % ps
+    k_pool = cache.k_pool.at[phys, :, off].set(
+        req.k[0][:, idx].transpose(1, 0, 2).astype(cache.k_pool.dtype),
+        mode="drop")
+    v_pool = cache.v_pool.at[phys, :, off].set(
+        req.v[0][:, idx].transpose(1, 0, 2).astype(cache.v_pool.dtype),
+        mode="drop")
+    pos_pool = pos_pool.at[phys, off].set(req.positions[0, idx], mode="drop")
+    acc_pool = acc_pool.at[phys, :, off].set(
+        req.acc_score[0][:, idx].transpose(1, 0), mode="drop")
+    count = cache.count.at[lane].set(req.count[0])
+    return dataclasses.replace(cache, k_pool=k_pool, v_pool=v_pool,
+                               pos_pool=pos_pool, acc_pool=acc_pool,
+                               count=count)
+
+
+def paged_write_tail(cache: PagedAttnCache, lane: jax.Array,
+                     k_tail: jax.Array, v_tail: jax.Array,
+                     positions: jax.Array, start_page: jax.Array,
+                     new_count: jax.Array) -> PagedAttnCache:
+    """Write a prefix-shared admission's *tail* K/V into ``lane``'s
+    private pages, leaving the shared prefix pages untouched.
+
+    k_tail (T, KV, Dk) / v_tail (T, KV, Dv) / positions (T,) start at the
+    (page-aligned) divergence point; ``start_page`` is its logical page
+    index. Tail/decode pages are cleared first (pool recycling), shared
+    pages (< start_page) are read-only by construction.
+    """
+    ps = cache.page_size
+    oob = cache.num_pages
+    tbl = cache.page_table[lane]                        # (NP,)
+    npl = tbl.shape[0]
+    private = jnp.arange(npl) >= start_page
+    clear_phys = jnp.where(private & (tbl >= 0), tbl, oob)
+    pos_pool = cache.pos_pool.at[clear_phys].set(-1, mode="drop")
+    acc_pool = cache.acc_pool.at[clear_phys].set(0.0, mode="drop")
+
+    t = k_tail.shape[0]
+    idx = start_page * ps + jnp.arange(t)
+    entry = tbl[idx // ps]
+    phys = jnp.where(entry >= 0, entry, oob)
+    off = idx % ps
+    k_pool = cache.k_pool.at[phys, :, off].set(
+        k_tail.astype(cache.k_pool.dtype), mode="drop")
+    v_pool = cache.v_pool.at[phys, :, off].set(
+        v_tail.astype(cache.v_pool.dtype), mode="drop")
+    pos_pool = pos_pool.at[phys, off].set(positions, mode="drop")
+    count = cache.count.at[lane].set(new_count)
+    return dataclasses.replace(cache, k_pool=k_pool, v_pool=v_pool,
+                               pos_pool=pos_pool, acc_pool=acc_pool,
+                               count=count)
+
+
+def paged_reset_lane(cache: PagedAttnCache, lane: jax.Array
+                     ) -> PagedAttnCache:
+    """Restore ``lane`` to the empty condition: clear its mapped pages,
+    unmap the table row, zero its count. (Host-side page *deallocation*
+    is the allocator's job; this clears device state.)"""
+    oob = cache.num_pages
+    tbl = cache.page_table[lane]
+    phys = jnp.where(tbl >= 0, tbl, oob)
+    return dataclasses.replace(
+        cache,
+        pos_pool=cache.pos_pool.at[phys].set(-1, mode="drop"),
+        acc_pool=cache.acc_pool.at[phys].set(0.0, mode="drop"),
+        page_table=cache.page_table.at[lane].set(-1),
+        count=cache.count.at[lane].set(0))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree of (abstract or concrete) arrays — the
+    single source of truth for cache-footprint accounting (both serving
+    engines' ``cache_bytes`` and the benches go through this)."""
+    return sum(math.prod(a.shape) * a.dtype.itemsize
+               for a in jax.tree.leaves(tree))
 
 
 # ---------------------------------------------------------------------------

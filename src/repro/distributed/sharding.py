@@ -210,6 +210,24 @@ def decode_state_pspec(path, shape, mesh: Mesh, *,
     }.get(name)
     batch_ax = dp if batch_shardable else None
     kv_ax = model_axis if kv_shardable else None
+    # paged-cache leaves: the page *pool* is global across lanes (any lane
+    # may map any page), so it never shards over the data axes — KV heads
+    # (and the whole dim-blocks of the dim-major K̂ view riding on the
+    # trailing dim) shard over `model`, page tables ride the lane/batch
+    # axis, positions replicate (tiny).
+    paged = {"k_pool": 4, "v_pool": 4, "acc_pool": 3, "pos_pool": 2,
+             "page_table": 2}.get(name)
+    if paged is not None:
+        pad = [None] * (nd - paged)
+        if name in ("k_pool", "v_pool"):       # ((L,) P, KV, ps, D)
+            spec = P(*pad, None, kv_ax, None, None)
+        elif name == "acc_pool":               # ((L,) P, KV, ps)
+            spec = P(*pad, None, kv_ax, None)
+        elif name == "page_table":             # ((L,) B, NP)
+            spec = P(*pad, batch_ax, None)
+        else:                                  # pos_pool ((L,) P, ps)
+            spec = P(*pad, None, None)
+        return sanitize(spec, shape, mesh)
     slot_axes = tuple(
         ((() if batch_shardable else dp)
          + (() if kv_shardable else (model_axis,)))

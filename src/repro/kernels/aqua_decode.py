@@ -85,6 +85,98 @@ def _kernel(idx_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
                           ).astype(o_ref.dtype)[None]
 
 
+def _paged_kernel(idx_ref, pt_ref, len_ref, *rest, **kw):
+    """Paged twin of :func:`_kernel`: the kernel body is identical (the
+    page table is consumed only by the BlockSpec ``index_map``s), so the
+    extra scalar-prefetch ref is simply dropped here."""
+    del pt_ref
+    _kernel(idx_ref, len_ref, *rest, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("block_dims", "seq_blk",
+                                             "scale", "interpret"))
+def aqua_paged_decode_attention(q_sel: jax.Array, khat_pages: jax.Array,
+                                v_pages: jax.Array, block_idx: jax.Array,
+                                page_table: jax.Array, lengths: jax.Array,
+                                *, block_dims: int = 8, seq_blk: int = 128,
+                                scale=None, interpret=None) -> jax.Array:
+    """Block-sparse AQUA decode attention over a *paged* K/V pool.
+
+    q_sel:       (B, H, NB_sel, bd)  — query, pre-gathered selected blocks
+    khat_pages:  (P, KV, NB_total, bd, ps) — dim-major projected key pool
+                 (page-major: each physical page holds a ``ps``-token
+                 dim-major stripe)
+    v_pages:     (P, KV, ps, Dv)
+    block_idx:   (B, H, NB_sel) int32 — selected dim-block ids (sorted)
+    page_table:  (B, NP_lane) int32 — physical page of each logical page,
+                 -1 unmapped (clamped; masked off via ``lengths``)
+    lengths:     (B,) int32 — valid cache length per row. Full-cache
+                 policy only: logical slot == token position.
+    returns out: (B, H, Dv)
+
+    The page table is the second scalar-prefetch operand: the K and V
+    ``index_map``s dereference it to locate the physical page of each
+    sequence block — the same scalar-prefetch indirection the dim-block
+    selection already uses, composed on the sequence axis. HBM traffic is
+    unchanged vs the contiguous kernel (pages only redirect addressing);
+    the pool itself is what shrinks (repro.core.kvcache.PagedAttnCache).
+    """
+    from repro import runtime_flags as _rtf
+    b, h, nb_sel, bd = q_sel.shape
+    _, kvh, nb_total, bd2, ps = khat_pages.shape
+    assert bd == bd2 == block_dims
+    npl = page_table.shape[1]
+    dv = v_pages.shape[-1]
+    g = h // kvh
+    assert ps % seq_blk == 0, (ps, seq_blk)
+    bpp = ps // seq_blk                       # sequence blocks per page
+    nsb = npl * bpp
+    if scale is None:
+        scale = 1.0 / ((nb_total * bd) ** 0.5)
+    interpret = _rtf.resolve_interpret(interpret)
+
+    grid = (b, h, nsb, nb_sel)
+
+    def q_map(bi, hi, sbi, ji, idx_ref, pt_ref, len_ref):
+        return (bi, hi, ji, 0)
+
+    def k_map(bi, hi, sbi, ji, idx_ref, pt_ref, len_ref):
+        page = jnp.maximum(pt_ref[bi, sbi // bpp], 0)
+        return (page, hi // g, idx_ref[bi, hi, ji], 0, sbi % bpp)
+
+    def v_map(bi, hi, sbi, ji, idx_ref, pt_ref, len_ref):
+        page = jnp.maximum(pt_ref[bi, sbi // bpp], 0)
+        return (page, hi // g, sbi % bpp, 0)
+
+    def o_map(bi, hi, sbi, ji, idx_ref, pt_ref, len_ref):
+        return (bi, hi, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, bd), q_map),
+            pl.BlockSpec((1, 1, 1, bd, seq_blk), k_map),
+            pl.BlockSpec((1, 1, seq_blk, dv), v_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dv), o_map),
+        scratch_shapes=[
+            pltpu.VMEM((1, seq_blk), jnp.float32),   # score accumulator
+            pltpu.VMEM((1, 1), jnp.float32),         # running max
+            pltpu.VMEM((1, 1), jnp.float32),         # running denom
+            pltpu.VMEM((1, dv), jnp.float32),        # output accumulator
+        ],
+    )
+    kernel = functools.partial(_paged_kernel, scale=scale, seq_blk=seq_blk,
+                               nb_sel=nb_sel, nsb=nsb)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, dv), v_pages.dtype),
+        interpret=interpret,
+    )(block_idx, page_table, lengths, q_sel, khat_pages, v_pages)
+
+
 @functools.partial(jax.jit, static_argnames=("block_dims", "seq_blk",
                                              "scale", "interpret"))
 def aqua_decode_attention(q_sel: jax.Array, khat_blocks: jax.Array,

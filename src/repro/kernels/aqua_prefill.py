@@ -28,6 +28,17 @@ shard-local extents (lanes over the data axes, KV heads + their query
 groups over ``model``), while S and the dim-block axis arrive whole per
 shard — each model shard streams whole dim-blocks of its own heads and
 ``NB_sel``/``NB_total`` are the same per shard as globally.
+
+Paged serving contract: prefill attention itself reads only the prompt's
+own q̂/K̂/V (never the pool), so this kernel runs unchanged for paged
+admissions — the *writes* land in pool pages afterwards
+(``kvcache.paged_graft`` scatters the B=1 prefill cache through the
+lane's page table, ``kvcache.paged_write_tail`` the prefix-shared tail).
+Only the decode kernel walks the page table at read time
+(``aqua_decode.aqua_paged_decode_attention``), because only decode reads
+a paged cache inside the hot loop; prefix-shared *tail* prefills read the
+shared pages through the gathered lane view on the reference path
+(admission-time, off the steady-state roofline).
 """
 from __future__ import annotations
 

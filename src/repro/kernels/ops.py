@@ -11,7 +11,11 @@ the projected key cache is stored seq-major ``(B, KV, S, D)`` at the
 model layer and viewed dim-major ``(B, KV, NB, bd, S)`` by the kernels,
 where ``NB = D // bd`` dim-blocks of ``bd`` sublanes each span the full
 lane-dim sequence stripe. Magnitude selection picks whole dim-blocks, so
-the kernels stream only the selected ``NB_sel`` stripes HBM→VMEM.
+the kernels stream only the selected ``NB_sel`` stripes HBM→VMEM. The
+block-paged cache keeps the same layout *per page* — ``(P, KV, NB, bd,
+page_size)`` — and :func:`aqua_paged_decode` threads the per-lane page
+table through the kernel's scalar-prefetch ``index_map`` so the physical
+page of each sequence block resolves inside the kernel.
 
 Shard-local contract (mesh-native serving): these wrappers are also the
 bodies run inside ``shard_map`` by ``repro.core.attention`` — every
@@ -33,7 +37,8 @@ import jax.numpy as jnp
 
 from repro.core import aqua as aqua_lib
 from repro.core.aqua import ceil_to as _ceil_to
-from repro.kernels.aqua_decode import aqua_decode_attention
+from repro.kernels.aqua_decode import (aqua_decode_attention,
+                                       aqua_paged_decode_attention)
 from repro.kernels.aqua_prefill import aqua_prefill_attention
 from repro.kernels.flash_attention import flash_attention  # noqa: F401
 
@@ -104,6 +109,47 @@ def aqua_decode(q_hat: jax.Array, khat: jax.Array, v: jax.Array,
     return aqua_decode_attention(q_sel, khat_blocks, v, block_idx, lengths,
                                  block_dims=block_dims, seq_blk=seq_blk,
                                  scale=scale, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("k_ratio", "block_dims",
+                                             "seq_blk", "scale",
+                                             "interpret"))
+def aqua_paged_decode(q_hat: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                      page_table: jax.Array, lengths: jax.Array, *,
+                      k_ratio: float = 0.75, block_dims: int = 8,
+                      seq_blk: int = 128, scale: Optional[float] = None,
+                      interpret: Optional[bool] = None) -> jax.Array:
+    """End-to-end AQUA decode attention over a *paged* KV pool.
+
+    q_hat: (B, H, D) projected query; k_pool: (P, KV, ps, D) projected key
+    page pool (seq-major per page); v_pool: (P, KV, ps, Dv);
+    page_table: (B, NP_lane) int32 (-1 unmapped); lengths: (B,).
+
+    Same magnitude selection as :func:`aqua_decode`; the physical page of
+    each sequence block is resolved inside the kernel's scalar-prefetch
+    ``index_map`` from the page table — no gathered contiguous view is
+    ever materialized. ``seq_blk`` is clamped to the page size (a sequence
+    block never spans pages); non-divisible remainders fall back to one
+    block per page.
+    """
+    b, h, d = q_hat.shape
+    ps = k_pool.shape[2]
+    nb = d // block_dims
+    k_dims = round_k_dims(d, k_ratio, block_dims)
+
+    block_idx = aqua_lib.topk_block_indices(q_hat, k_dims, block_dims)
+    qb = q_hat.reshape(b, h, nb, block_dims)
+    q_sel = jnp.take_along_axis(qb, block_idx[..., None], axis=2)
+
+    seq_blk = min(seq_blk, ps)
+    if ps % seq_blk != 0:
+        seq_blk = ps
+    khat_pages = to_dim_major_blocks(k_pool, block_dims)  # (P,KV,NB,bd,ps)
+    return aqua_paged_decode_attention(q_sel, khat_pages, v_pool, block_idx,
+                                       page_table, lengths,
+                                       block_dims=block_dims,
+                                       seq_blk=seq_blk, scale=scale,
+                                       interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("k_ratio", "block_dims",

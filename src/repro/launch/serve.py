@@ -67,6 +67,21 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--rectangular", action="store_true",
                     help="old fixed-batch ServeEngine drive (comparison)")
+    # block-paged KV cache
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="tokens per KV-cache page: replaces per-lane "
+                         "contiguous slot stripes with a global page pool "
+                         "+ per-lane page tables (None = contiguous)")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="page-pool size; default = lane-stripe parity "
+                         "(lanes * slots / page_size) — set lower to "
+                         "realize the HBM win (admissions then queue on "
+                         "free pages)")
+    ap.add_argument("--no-prefix-share", action="store_true",
+                    help="disable prompt prefix page sharing")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="prepend a fixed random prefix of this length to "
+                         "every trace prompt (prefix-sharing demo/CI)")
     ap.add_argument("--mesh", default="",
                     help="serving mesh 'DATAxMODEL' (e.g. 4x2) or "
                          "'PODxDATAxMODEL'; empty/1x1 = single device")
@@ -122,7 +137,10 @@ def main():
               f"{mesh.devices.flat[0].platform} devices")
     scfg = ServingConfig(max_lanes=args.lanes, max_seq=args.max_seq,
                          max_new_tokens=args.steps,
-                         temperature=args.temperature)
+                         temperature=args.temperature,
+                         page_size=args.page_size,
+                         num_pages=args.pool_pages,
+                         prefix_sharing=not args.no_prefix_share)
     eng = ContinuousBatchingEngine(cfg, params, proj, serving=scfg,
                                    backend=args.backend, mesh=mesh)
     if args.expect_kernel_mesh and not eng.kernel_native:
@@ -141,6 +159,12 @@ def main():
                          max_new_tokens=args.steps,
                          vocab_size=cfg.vocab_size, seed=args.seed,
                          temperature=args.temperature)
+    if args.shared_prefix_len > 0:
+        pre = np.random.default_rng(args.seed + 1).integers(
+            0, cfg.vocab_size, size=(args.shared_prefix_len,),
+            dtype=np.int32)
+        for r in reqs:
+            r.tokens = np.concatenate([pre, np.asarray(r.tokens, np.int32)])
     if cfg.frontend.kind != "none":
         dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=1,
                           global_batch=1)
@@ -168,6 +192,35 @@ def main():
           f"mean lane occupancy {st.mean_occupancy:.2f}/{args.lanes}")
     print(f"[serve] KV cache bytes @ {args.lanes} lanes: "
           f"{eng.cache_bytes():,}")
+    if eng.paged:
+        from repro.serving.engine import decode_state_bytes
+        pool = eng.page_pool
+        num_pages, per_lane, ps = eng.pool_geometry
+        stripe_bytes = decode_state_bytes(build_model(cfg), args.lanes,
+                                          args.max_seq)
+        ratio = eng.cache_bytes() / stripe_bytes
+        print(f"[serve] page pool: {num_pages} pages x {ps} tokens "
+              f"(lane-stripe parity {per_lane * args.lanes}), "
+              f"peak {pool.peak_in_use} in use, "
+              f"mean utilization {pool.mean_utilization:.2f}")
+        print(f"[serve] prefix sharing: {pool.prefix_hits} admissions "
+              f"reused a shared prefix, {pool.tokens_saved} prefill "
+              f"tokens saved")
+        print(f"[serve] pool bytes vs lane-stripe bytes: "
+              f"{eng.cache_bytes():,} / {stripe_bytes:,} = {ratio:.2f}x")
+        if args.verify and num_pages < per_lane * args.lanes \
+                and eng.cache_bytes() >= stripe_bytes:
+            print("[serve] VERIFY FAILED: paged pool is smaller than "
+                  "lane-stripe parity but does not report fewer cache "
+                  "bytes")
+            raise SystemExit(1)
+        if (args.verify and args.shared_prefix_len > 0
+                and not args.no_prefix_share and args.requests >= 2
+                and pool.prefix_hits < 1):
+            print("[serve] VERIFY FAILED: every prompt carries the same "
+                  f"{args.shared_prefix_len}-token prefix but no "
+                  "admission reused shared prefix pages")
+            raise SystemExit(1)
 
     if ((args.verify or args.expect_kernel_mesh) and mesh is not None
             and eng.kernel_native):
@@ -207,9 +260,19 @@ def main():
                 ref.update(solo_eng.run(
                     [dataclasses.replace(r, arrival=0.0)]))
         else:
-            where = "single-device"
+            # greedy: the reference is single-device AND contiguous, so a
+            # paged drive is checked against the lane-stripe layout it
+            # replaces (token-identity is exact — the gathered lane view
+            # is slot-for-slot the contiguous cache). A prefix-shared
+            # admission reuses the sharer's prefix K/V bitwise, but its
+            # *tail* softmax reduces over a differently-split key axis, so
+            # tail logits can move by ulps; greedy argmax absorbs that
+            # unless two logits are within rounding of each other.
+            where = "single-device contiguous"
+            ref_scfg = dataclasses.replace(scfg, page_size=None,
+                                           num_pages=None)
             ref_eng = ContinuousBatchingEngine(cfg, params, proj,
-                                               serving=scfg,
+                                               serving=ref_scfg,
                                                backend=args.backend)
             ref = ref_eng.run(reqs)
         bad = [uid for uid, toks in streamed.items()

@@ -20,6 +20,17 @@ class DecodeState:
     extra: Dict[str, Any] = field(default_factory=dict)
 
 
+@dataclass(frozen=True)
+class PagingSpec:
+    """Block-paged KV cache geometry installed on a model by the serving
+    engine (``LM.enable_paging``): ``init_decode_state`` then allocates a
+    global page pool + per-lane page tables instead of contiguous per-lane
+    slot stripes (repro.core.kvcache.PagedAttnCache)."""
+
+    page_size: int
+    num_pages: int
+
+
 class LM:
     """Base class: subclasses implement the per-family wiring.
 
@@ -35,6 +46,43 @@ class LM:
         # mesh-native serving: DecodeState-shaped pytree of NamedShardings
         # (None = single-device; see set_state_shardings)
         self._state_shardings = None
+        # block-paged serving: PagingSpec or None (see enable_paging)
+        self._paging: Optional[PagingSpec] = None
+
+    # -- block-paged serving ------------------------------------------
+    #: families that implement the paged decode-state layout
+    supports_paging = False
+
+    def enable_paging(self, spec: Optional[PagingSpec]) -> None:
+        """Install (or clear) the paged cache geometry. While installed,
+        ``init_decode_state`` returns the page-pool layout and the paged
+        lane-surgery APIs (``graft_paged`` / ``prefill_with_prefix`` /
+        ``reset_lane``) become the admission path."""
+        if spec is not None and not self.supports_paging:
+            raise NotImplementedError(
+                f"family {self.cfg.family!r} does not support the paged "
+                "KV cache (dense-transformer families only)")
+        self._paging = spec
+
+    @property
+    def paging(self) -> Optional[PagingSpec]:
+        return self._paging
+
+    def graft_paged(self, state: DecodeState, req_state: DecodeState,
+                    lane: jax.Array, num_slots: int) -> DecodeState:
+        """Copy logical slots [0, num_slots) of a B=1 contiguous prefill
+        cache into ``lane``'s pages of a paged multi-lane state."""
+        raise NotImplementedError
+
+    def prefill_with_prefix(self, params, batch, state: DecodeState,
+                            lane: jax.Array, prefix_len: jax.Array,
+                            aqua_proj: Optional[jax.Array] = None
+                            ) -> Tuple[jax.Array, DecodeState]:
+        """Prefill only the *tail* of a request whose page-aligned prompt
+        prefix is already mapped into ``lane`` (prefix sharing): tail
+        queries attend to the shared prefix K/V read from the pool, and
+        only the tail's K/V is written (into private pages)."""
+        raise NotImplementedError
 
     # -- mesh-native serving ------------------------------------------
     def set_state_shardings(self, shardings) -> None:

@@ -98,7 +98,14 @@ def block_step(cfg: ModelConfig, p: dict, x_t: jax.Array, cache: kv.AttnCache,
 
 class DenseLM(LM):
     """Decoder-only transformer (GQA/SWA/qk-norm/bias variants) with
-    first-class AQUA. ``vlm`` family splices stub patch embeddings."""
+    first-class AQUA. ``vlm`` family splices stub patch embeddings.
+
+    Supports the block-paged decode state (``enable_paging``): the per
+    layer cache becomes a global page pool + per-lane page tables, lane
+    admission grafts through ``graft_paged`` / ``prefill_with_prefix``
+    instead of the contiguous ``insert_lane`` row scatter."""
+
+    supports_paging = True
 
     def init(self, rng: jax.Array):
         cfg, dt = self.cfg, self.param_dtype
@@ -189,11 +196,109 @@ class DenseLM(LM):
     def init_decode_state(self, batch_size: int, max_seq: int) -> DecodeState:
         cfg, acfg = self.cfg, self.cfg.attention
         slots, dk, dv = self._cache_shape(max_seq)
-        one = lambda: kv.init_attn_cache(batch_size, acfg.num_kv_heads, slots,
-                                         dk, dv, self.dtype)
+        pg = self._paging
+        if pg is not None:
+            npl = kv.paged_pages(slots, pg.page_size)
+            one = lambda: kv.init_paged_cache(
+                batch_size, acfg.num_kv_heads, pg.num_pages, npl,
+                pg.page_size, dk, dv, self.dtype)
+        else:
+            one = lambda: kv.init_attn_cache(batch_size, acfg.num_kv_heads,
+                                             slots, dk, dv, self.dtype)
         stacked = jax.tree.map(
             lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape), one())
         return DecodeState(layers=stacked, extra={})
+
+    # -- paged lane surgery -------------------------------------------
+    def graft_paged(self, state: DecodeState, req_state: DecodeState,
+                    lane: jax.Array, num_slots: int) -> DecodeState:
+        """Copy logical slots [0, num_slots) of a B=1 *contiguous* prefill
+        cache into ``lane``'s pages, layer by layer. The page-table row
+        must already be installed (host allocator via the engine)."""
+        layers = jax.vmap(
+            lambda c, r: kv.paged_graft(c, r, lane, num_slots)
+        )(state.layers, req_state.layers)
+        return self.constrain_state(DecodeState(layers=layers,
+                                                extra=state.extra))
+
+    def reset_lane(self, state: DecodeState, lane: jax.Array,
+                   max_seq: int) -> DecodeState:
+        if self._paging is None:
+            return super().reset_lane(state, lane, max_seq)
+        layers = jax.vmap(kv.paged_reset_lane, in_axes=(0, None)
+                          )(state.layers, lane)
+        return self.constrain_state(DecodeState(layers=layers,
+                                                extra=state.extra))
+
+    def prefill_with_prefix(self, params, batch, state: DecodeState,
+                            lane: jax.Array, prefix_len: jax.Array,
+                            aqua_proj=None):
+        """Prefix-shared admission: prefill only the prompt *tail* —
+        queries attend to the shared prefix K/V read from the lane's
+        mapped pool pages (written by an earlier request's prefill), and
+        only tail K/V is written, into the lane's private pages. The
+        prefix is never recomputed and never written (copy-on-write
+        territory starts at the page-aligned divergence point).
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]                       # (1, T_pad) tail
+        lengths = batch.get("lengths")                 # (1,) valid tail
+        t = tokens.shape[1]
+        x = L.embed(params["embed"], tokens, self.dtype)
+        positions = prefix_len + jnp.arange(t, dtype=jnp.int32)[None]
+        ps = state.layers.k_pool.shape[3]   # stacked (L, P, KV, ps, Dk)
+        start_page = prefix_len // ps
+        tail_count = (prefix_len + t if lengths is None
+                      else prefix_len + lengths[0])
+
+        def body(xc, layer_in):
+            p_i, cache_i, proj_i = layer_in
+            tbl = cache_i.page_table[lane]             # (NP,)
+            pk = cache_i.k_pool[jnp.maximum(tbl, 0)]   # (NP, KV, ps, Dk)
+            pv = cache_i.v_pool[jnp.maximum(tbl, 0)]
+            ppos = cache_i.pos_pool[jnp.maximum(tbl, 0)]
+            ppos = jnp.where(tbl[:, None] >= 0, ppos, -1)
+            kvh = pk.shape[1]
+            s_log = cache_i.num_slots
+            pk = pk.transpose(1, 0, 2, 3).reshape(1, kvh, s_log, -1)
+            pv = pv.transpose(1, 0, 2, 3).reshape(1, kvh, s_log, -1)
+            ppos = ppos.reshape(1, s_log)
+            # trust only logical slots [0, prefix_len): the lane's private
+            # tail/decode pages are *recycled* pool pages that still hold
+            # a previous tenant's positions until paged_write_tail clears
+            # them (below, AFTER this read) — a stale position inside the
+            # prefix range would otherwise pass the prefix validity mask
+            # and attend over dead K/V. Full-cache policy: prefix token p
+            # lives at logical slot p, so the slot-index mask is exact.
+            ppos = jnp.where(jnp.arange(s_log)[None] < prefix_len, ppos, -1)
+            h_in = L.rms_norm(xc, p_i["ln1"], cfg.norm_eps)
+            h, k_t, v_t = attn.prefixed_tail_attention(
+                p_i["attn"], h_in, cfg.attention, cfg.aqua, proj_i,
+                prefix_k=pk, prefix_v=pv, prefix_positions=ppos,
+                prefix_len=prefix_len, positions=positions,
+                lengths=lengths)
+            y = xc + h
+            f, _ = ffn_apply(cfg, p_i["ffn"],
+                             L.rms_norm(y, p_i["ln2"], cfg.norm_eps))
+            cache_i = kv.paged_write_tail(cache_i, lane, k_t[0], v_t[0],
+                                          positions[0], start_page,
+                                          tail_count)
+            return y + f, cache_i
+        if aqua_proj is None:
+            x, caches = _scan(lambda c, pi: body(c, (pi[0], pi[1], None)),
+                              x, (params["layers"], state.layers))
+        else:
+            x, caches = _scan(body, x, (params["layers"], state.layers,
+                                        aqua_proj))
+        if lengths is None:
+            x_last = x[:, -1:]
+        else:
+            idx = jnp.clip(lengths - 1, 0, x.shape[1] - 1)
+            x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        logits = self._unembed(params, L.rms_norm(x_last, params["ln_f"],
+                                                  cfg.norm_eps))[:, 0]
+        return logits, self.constrain_state(
+            DecodeState(layers=caches, extra=state.extra))
 
     def prefill(self, params, batch, max_seq: int,
                 aqua_proj: Optional[jax.Array] = None):

@@ -1,5 +1,6 @@
 from repro.serving.engine import (ContinuousBatchingEngine,  # noqa: F401
-                                  GenerationResult, ServeEngine)
-from repro.serving.scheduler import (LaneScheduler, Request,  # noqa: F401
-                                     RequestOutput, ScheduleStats,
+                                  GenerationResult, ServeEngine,
+                                  decode_state_bytes)
+from repro.serving.scheduler import (LaneScheduler, PagePool,  # noqa: F401
+                                     Request, RequestOutput, ScheduleStats,
                                      StreamEvent, poisson_trace)

@@ -20,8 +20,9 @@ requests are in flight.
 from __future__ import annotations
 
 import bisect
+import hashlib
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -160,8 +161,17 @@ class LaneScheduler:
             return None
         if self._keys[0][0] > now:
             return None
-        self._keys.pop(0)
+        key = self._keys.pop(0)
+        self._last_key = key
         return self._pending.pop(0)
+
+    def unpop(self, req: Request) -> None:
+        """Return the most recently popped request to the head of the
+        queue (admission resource check failed — e.g. the page pool can't
+        fit it yet). It stays first among equal arrivals."""
+        key = getattr(self, "_last_key", (float(req.arrival), -1))
+        self._keys.insert(0, key)
+        self._pending.insert(0, req)
 
     def assign(self, req: Request) -> int:
         lane = self._free.pop()
@@ -174,6 +184,178 @@ class LaneScheduler:
         self._lane_req[lane] = None
         self._free.append(lane)
         return req
+
+
+class PagePool:
+    """Host-side free-list allocator for the block-paged KV cache.
+
+    Owns the workload-to-memory scheduling decisions the device never
+    sees: which physical pages back each lane's page-table row, page
+    refcounts (shared prefix pages are mapped read-only into several
+    lanes), and the prefix index that detects page-aligned common prompt
+    prefixes. The device side (repro.core.kvcache.PagedAttnCache) only
+    ever receives finished page-table rows, so every jitted step stays
+    static-shaped.
+
+    Sharing contract: only *full* pages of a prompt are shareable, so the
+    divergence point is always page-aligned and shared pages are never
+    written by decode (private tail/decode pages start at the divergence
+    page). ``make_private`` is the copy-on-write escape hatch for any
+    future policy that would write inside a shared region.
+
+    Invariants (property-tested in tests/test_kvcache_properties.py):
+      * a physical page is mapped by at most one lane unless it is a
+        registered shared-prefix page,
+      * refcount == number of lanes mapping the page,
+      * free pages are never referenced by any lane,
+      * the free list and the mapped set partition the pool.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, *,
+                 prefix_sharing: bool = True):
+        assert num_pages >= 1 and page_size >= 1
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.prefix_sharing = prefix_sharing
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self.refcount = np.zeros((num_pages,), np.int64)
+        self._lane_pages: Dict[int, List[int]] = {}
+        # chain-hash of the full token prefix ending at each shared page
+        self._prefix_index: Dict[bytes, int] = {}
+        self._page_key: Dict[int, bytes] = {}
+        # stats
+        self.peak_in_use = 0
+        self.prefix_hits = 0
+        self.tokens_saved = 0
+        self.util_sum = 0.0
+        self.util_samples = 0
+
+    # -- queries -------------------------------------------------------
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    @property
+    def utilization(self) -> float:
+        return self.pages_in_use / self.num_pages
+
+    @property
+    def mean_utilization(self) -> float:
+        return self.util_sum / max(self.util_samples, 1)
+
+    def sample_utilization(self) -> None:
+        """Record one utilization sample (the engine calls this per
+        decode step; the bench gate judges the mean)."""
+        self.util_sum += self.utilization
+        self.util_samples += 1
+
+    def lane_pages(self, lane: int) -> List[int]:
+        return list(self._lane_pages.get(lane, []))
+
+    def can_reserve(self, num_new: int) -> bool:
+        return num_new <= len(self._free)
+
+    # -- prefix sharing ------------------------------------------------
+    @staticmethod
+    def _chain_digests(tokens, num_pages: int, page_size: int
+                       ) -> List[bytes]:
+        """Rolling chain digests, one per full page:
+        ``digest_i = sha1(digest_{i-1} || page_i_tokens)``. Cumulative —
+        two prompts share page ``i`` only when *all* earlier tokens match
+        too — and computed in one O(prompt_len) pass (re-hashing the full
+        prefix per page would be quadratic on the admission path)."""
+        toks = np.asarray(tokens, np.int32)
+        out: List[bytes] = []
+        d = b"aqua-page-chain"
+        for i in range(num_pages):
+            page = np.ascontiguousarray(
+                toks[i * page_size:(i + 1) * page_size])
+            d = hashlib.sha1(d + page.tobytes()).digest()
+            out.append(d)
+        return out
+
+    def lookup_prefix(self, tokens) -> List[int]:
+        """Longest run of already-pooled full pages matching the prompt's
+        page-aligned prefix. Returns their physical page ids in logical
+        order (possibly empty)."""
+        if not self.prefix_sharing:
+            return []
+        toks = np.asarray(tokens, np.int32)
+        shared: List[int] = []
+        for key in self._chain_digests(toks, len(toks) // self.page_size,
+                                       self.page_size):
+            pid = self._prefix_index.get(key)
+            if pid is None:
+                break
+            shared.append(pid)
+        return shared
+
+    def register_prefix(self, tokens, pages: Sequence[int],
+                        prompt_len: int) -> None:
+        """Index the full pages covered by ``prompt_len`` of a freshly
+        prefilled prompt for future sharing. First writer wins: an already
+        indexed chain keeps its existing physical page."""
+        if not self.prefix_sharing:
+            return
+        toks = np.asarray(tokens, np.int32)
+        digests = self._chain_digests(toks, prompt_len // self.page_size,
+                                      self.page_size)
+        for i, key in enumerate(digests):
+            if key in self._prefix_index:
+                continue
+            pid = pages[i]
+            self._prefix_index[key] = pid
+            self._page_key[pid] = key
+
+    # -- reserve / release --------------------------------------------
+    def reserve(self, lane: int, shared_pages: Sequence[int],
+                num_new: int) -> Optional[List[int]]:
+        """Map ``shared_pages`` (increfed) plus ``num_new`` fresh pages
+        into ``lane``. Returns the lane's full page list in logical order,
+        or None (nothing changed) when the free list can't cover it."""
+        assert lane not in self._lane_pages, f"lane {lane} already mapped"
+        if num_new > len(self._free):
+            return None
+        fresh = [self._free.pop() for _ in range(num_new)]
+        pages = list(shared_pages) + fresh
+        for p in pages:
+            self.refcount[p] += 1
+        self._lane_pages[lane] = pages
+        self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
+        return list(pages)   # snapshot: make_private may remap the lane
+
+    def release(self, lane: int) -> None:
+        """Unmap a retired lane: decref its pages; pages reaching
+        refcount 0 return to the free list and leave the prefix index
+        (freed pages are never referenced)."""
+        for p in self._lane_pages.pop(lane, []):
+            self.refcount[p] -= 1
+            assert self.refcount[p] >= 0, f"page {p} refcount underflow"
+            if self.refcount[p] == 0:
+                key = self._page_key.pop(p, None)
+                if key is not None:
+                    self._prefix_index.pop(key, None)
+                self._free.append(p)
+
+    def make_private(self, lane: int, logical_page: int
+                     ) -> Optional[Tuple[int, int]]:
+        """Copy-on-write: give ``lane`` a private copy of its
+        ``logical_page`` if that page is shared (refcount > 1). Returns
+        ``(old_phys, new_phys)`` for the caller to copy device-side, or
+        None when the page was already private (no copy needed). The
+        fresh page is *not* prefix-indexed (its content will diverge)."""
+        pages = self._lane_pages[lane]
+        old = pages[logical_page]
+        if self.refcount[old] <= 1:
+            return None
+        if not self._free:
+            raise RuntimeError("page pool exhausted during copy-on-write")
+        new = self._free.pop()
+        self.refcount[old] -= 1
+        self.refcount[new] += 1
+        pages[logical_page] = new
+        self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
+        return old, new
 
 
 def poisson_trace(num_requests: int, *, mean_interarrival: float,

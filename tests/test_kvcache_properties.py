@@ -1,0 +1,269 @@
+"""Property-based cache-invariant suite for the block-paged KV cache.
+
+Random interleavings of insert / evict / reset / admit / retire across the
+full, sliding-window, H2O, AQUA-Memory-sliced and paged policies must
+preserve the paging invariants:
+
+  * no two lanes map the same physical page unless it is a registered
+    shared-prefix page (refcounted),
+  * ``refcount[p]`` equals the number of lanes mapping page ``p``,
+  * freed pages are never referenced by any lane,
+  * ``positions`` stay consistent with ``count`` (every valid position is
+    < count; the gathered paged view equals the contiguous layout
+    slot-for-slot),
+  * paged decode attention is token/output-identical to the contiguous
+    cache (full + window policies; page-granular H2O matches its own
+    numpy oracle instead — whole-page eviction is a deliberate policy
+    divergence).
+
+Runs under the ``_hypothesis_compat`` shim: with hypothesis installed the
+strategies explore; on a bare install a deterministic fallback set keeps
+every property executing real assertions.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import kvcache as kv
+from repro.core.h2o import reference_victim_page
+from repro.serving.scheduler import PagePool
+
+DK = DV = 8
+KV_HEADS = 2
+
+
+def _rand_kv(rng, batch):
+    k = jnp.asarray(rng.normal(size=(batch, KV_HEADS, DK)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(batch, KV_HEADS, DV)), jnp.float32)
+    return k, v
+
+
+def _paged_with_identity_table(batch, slots, page_size, extra_pages=2):
+    npl = slots // page_size
+    num_pages = batch * npl + extra_pages
+    cache = kv.init_paged_cache(batch, KV_HEADS, num_pages, npl, page_size,
+                                DK, DV, jnp.float32)
+    table = np.stack(
+        [np.arange(b * npl, (b + 1) * npl) for b in range(batch)]
+    ).astype(np.int32)
+    return dataclasses.replace(cache, page_table=jnp.asarray(table))
+
+
+# ---------------------------------------------------------------------------
+# Paged vs contiguous: slot-for-slot identity across policies
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**16),
+    batch=st.integers(min_value=1, max_value=3),
+    page_size=st.sampled_from([4, 8]),
+    policy=st.sampled_from(["full", "window", "aqua-mem"]),
+    steps=st.integers(min_value=1, max_value=40),
+)
+def test_paged_matches_contiguous(seed, batch, page_size, policy, steps):
+    rng = np.random.default_rng(seed)
+    slots = 16
+    window = 8 if policy == "window" else None
+    dk = 4 if policy == "aqua-mem" else DK  # AQUA-Memory static slice
+    cont = kv.init_attn_cache(batch, KV_HEADS, slots, dk, DV, jnp.float32)
+    paged = _paged_with_identity_table(batch, slots, page_size)
+    if dk != DK:
+        paged = dataclasses.replace(
+            paged, k_pool=paged.k_pool[..., :dk])
+    mask_seq = rng.random(steps) < 0.8  # interleave frozen-lane steps
+    for t in range(steps):
+        k, v = _rand_kv(rng, batch)
+        k = k[..., :dk]
+        wm = None
+        if not mask_seq[t]:
+            wm = jnp.asarray(rng.random(batch) < 0.5)
+        slot = kv.select_slot(cont, window=window, h2o=False, recent_len=0)
+        pslot, evict = kv.paged_select_slot(paged, window=window, h2o=False,
+                                            recent_len=0)
+        assert evict is None
+        np.testing.assert_array_equal(np.asarray(slot), np.asarray(pslot))
+        cont = kv.insert(cont, slot, k, v, write_mask=wm)
+        paged = kv.paged_insert(paged, pslot, k, v, write_mask=wm)
+    view = kv.paged_lane_view(paged)
+    np.testing.assert_array_equal(np.asarray(cont.k), np.asarray(view.k))
+    np.testing.assert_array_equal(np.asarray(cont.v), np.asarray(view.v))
+    np.testing.assert_array_equal(np.asarray(cont.positions),
+                                  np.asarray(view.positions))
+    np.testing.assert_array_equal(np.asarray(cont.count),
+                                  np.asarray(view.count))
+    # positions consistent with count: every valid position < count
+    pos = np.asarray(view.positions)
+    cnt = np.asarray(view.count)
+    assert (pos[pos >= 0] < cnt.repeat(pos.shape[1]).reshape(pos.shape)[
+        pos >= 0]).all()
+    # decode identity: masked softmax attention over both layouts
+    q = jnp.asarray(rng.normal(size=(batch, KV_HEADS, 2, dk)), jnp.float32)
+    from repro.core.attention import _masked_dense_decode_core
+    out_c, _ = _masked_dense_decode_core(
+        q, cont.k, cont.v, cont.positions, cont.count,
+        head_dim=DK, window=window)
+    out_p, _ = _masked_dense_decode_core(
+        q, view.k, view.v, view.positions, view.count,
+        head_dim=DK, window=window)
+    np.testing.assert_array_equal(np.asarray(out_c), np.asarray(out_p))
+
+
+# ---------------------------------------------------------------------------
+# Page-granular H2O: device victim choice matches the numpy oracle, and
+# freed (evicted) pages really read as empty afterwards
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**16),
+    page_size=st.sampled_from([4, 8]),
+    recent_len=st.integers(min_value=1, max_value=8),
+)
+def test_paged_h2o_page_eviction(seed, page_size, recent_len):
+    rng = np.random.default_rng(seed)
+    slots = 16
+    paged = _paged_with_identity_table(1, slots, page_size)
+    for t in range(3 * slots):
+        k, v = _rand_kv(rng, 1)
+        slot, evict = kv.paged_select_slot(paged, window=None, h2o=True,
+                                           recent_len=recent_len)
+        pos_before = np.asarray(kv.gather_positions(paged))[0]
+        acc_before = np.asarray(kv.paged_lane_view(paged).acc_score)[0]
+        expect = reference_victim_page(
+            pos_before, acc_before, int(paged.count[0]),
+            page_size=page_size, recent_len=recent_len)
+        ev = int(np.asarray(evict)[0])
+        assert ev == expect, (t, ev, expect)
+        if ev >= 0:
+            assert int(slot[0]) == ev * page_size
+        paged = kv.paged_insert(paged, slot, k, v, evict_page=evict)
+        # fake an H2O accumulation step so scores differentiate pages
+        w = jnp.asarray(rng.random((1, KV_HEADS, 2, slots)), jnp.float32)
+        w = w * (jnp.asarray(pos_before >= 0) | (jnp.arange(slots)
+                                                 == int(slot[0])))[None,
+                                                                   None,
+                                                                   None]
+        paged = kv.paged_accumulate_h2o(paged, w)
+        if ev >= 0:
+            # the freed page holds exactly one token now (the insert)
+            pos = np.asarray(kv.gather_positions(paged))[0]
+            page = pos[ev * page_size:(ev + 1) * page_size]
+            assert (page[1:] == -1).all()
+            assert page[0] == int(paged.count[0]) - 1
+
+
+# ---------------------------------------------------------------------------
+# Allocator invariants under random admit/retire interleavings
+# ---------------------------------------------------------------------------
+
+
+def _check_pool_invariants(pool, lanes):
+    mapped = {}
+    for lane, pages in lanes.items():
+        for p in pages:
+            mapped.setdefault(p, []).append(lane)
+    for p, owners in mapped.items():
+        assert pool.refcount[p] == len(owners), (p, owners)
+        assert p not in pool._free, f"free page {p} is referenced"
+        if len(owners) > 1:  # shared pages must be prefix-registered
+            assert p in pool._page_key, f"page {p} shared but unregistered"
+    for p in pool._free:
+        assert pool.refcount[p] == 0
+    assert len(pool._free) + len(mapped) == pool.num_pages
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**16),
+    num_pages=st.integers(min_value=4, max_value=16),
+    share=st.sampled_from([True, False]),
+    ops=st.integers(min_value=5, max_value=60),
+)
+def test_page_pool_invariants(seed, num_pages, share, ops):
+    rng = np.random.default_rng(seed)
+    ps = 4
+    pool = PagePool(num_pages, ps, prefix_sharing=share)
+    lanes = {}
+    next_lane = 0
+    common = rng.integers(0, 50, size=(2 * ps,), dtype=np.int32)
+    for _ in range(ops):
+        if lanes and rng.random() < 0.4:  # retire a random lane
+            lane = int(rng.choice(list(lanes)))
+            pool.release(lane)
+            del lanes[lane]
+        else:  # admit: half the prompts share a common prefix
+            if rng.random() < 0.5:
+                tail = rng.integers(0, 50, size=(int(rng.integers(1, 6)),),
+                                    dtype=np.int32)
+                tokens = np.concatenate([common, tail])
+            else:
+                tokens = rng.integers(0, 50,
+                                      size=(int(rng.integers(1, 12)),),
+                                      dtype=np.int32)
+            shared = pool.lookup_prefix(tokens)
+            shared = shared[:max(0, (len(tokens) - 1) // ps)]
+            total = -(-(len(tokens) + 2) // ps)  # + decode reservation
+            num_new = total - len(shared)
+            pages = pool.reserve(next_lane, shared, num_new) \
+                if pool.can_reserve(num_new) else None
+            if pages is not None:
+                lanes[next_lane] = pages
+                pool.register_prefix(tokens, pages, len(tokens))
+                next_lane += 1
+        _check_pool_invariants(pool, lanes)
+    for lane in list(lanes):
+        pool.release(lane)
+        del lanes[lane]
+        _check_pool_invariants(pool, lanes)
+    assert pool.pages_in_use == 0
+
+
+def test_page_pool_copy_on_write():
+    """make_private splits a shared page: refcounts rebalance, the copy is
+    unindexed, and the donor keeps its page."""
+    pool = PagePool(6, 4, prefix_sharing=True)
+    toks = np.arange(8, dtype=np.int32)
+    a = pool.reserve(0, [], 2)
+    pool.register_prefix(toks, a, 8)
+    shared = pool.lookup_prefix(toks)
+    assert shared == a[:2][: len(shared)] and len(shared) == 2
+    b = pool.reserve(1, shared[:1], 1)
+    assert pool.refcount[a[0]] == 2
+    moved = pool.make_private(1, 0)
+    assert moved is not None and moved[0] == a[0]
+    assert pool.refcount[a[0]] == 1 and pool.refcount[moved[1]] == 1
+    assert pool.make_private(1, 0) is None  # already private
+    assert pool.lane_pages(1)[0] == moved[1]
+    assert b[0] == a[0]          # reserve really mapped the shared page
+    pool.release(0)
+    pool.release(1)
+    assert pool.pages_in_use == 0
+    assert not pool._prefix_index  # freed pages leave the index
+
+
+def test_paged_reset_lane_clears_only_that_lane():
+    rng = np.random.default_rng(0)
+    paged = _paged_with_identity_table(2, 8, 4)
+    for _ in range(6):
+        k, v = _rand_kv(rng, 2)
+        slot, _ = kv.paged_select_slot(paged, window=None, h2o=False,
+                                       recent_len=0)
+        paged = kv.paged_insert(paged, slot, k, v)
+    before = np.asarray(kv.gather_positions(paged))
+    reset = kv.paged_reset_lane(paged, jnp.int32(0))
+    after_pos = np.asarray(kv.gather_positions(reset))
+    assert (np.asarray(reset.page_table)[0] == -1).all()
+    assert (after_pos[0] == -1).all()
+    np.testing.assert_array_equal(after_pos[1], before[1])
+    assert int(reset.count[0]) == 0 and int(reset.count[1]) == 6
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])
