@@ -504,7 +504,6 @@ def serving_throughput() -> List[Row]:
         # protect. block_dims=8 so the kernels actually engage; same
         # best-of-5 as every other gated serving row (the 20% threshold's
         # noise analysis in benchmarks/compare.py assumes it).
-        aqua8 = AquaConfig(k_ratio=0.5, block_dims=8)
         c8 = dataclasses.replace(cfg, aqua=aqua8)
         for backend in ("aqua-block-sparse", "aqua-masked-dense"):
             eng = ContinuousBatchingEngine(c8, params, ident, serving=scfg,
@@ -514,20 +513,36 @@ def serving_throughput() -> List[Row]:
                 # keep the row's label honest: fail the bench loudly if a
                 # dispatch regression would silently measure the fallback
                 # under the kernel's name
-                assert eng.kernel_native, \
-                    "block-sparse engine did not take the shard_mapped " \
+                assert eng.dispatch_plan().mesh_native, \
+                    "block-sparse engine did not plan the shard_mapped " \
                     "kernel path for the mesh2x2 bench row"
             dt, st = timed_drive(eng)
             rows.append((f"serving/{backend}@mesh2x2",
                          dt / max(st.decode_steps, 1) * 1e6,
                          f"tok_s={st.tokens_emitted / dt:.1f} "
                          f"occupancy={st.mean_occupancy:.2f}"))
+
+        # paged pool + mesh: the production configuration — the paged
+        # kernel runs shard_mapped (lane-partitioned page tables,
+        # lane-global KV-sharded pool), so the k_ratio savings and the
+        # pool's HBM savings finally stack. The plan assertion keeps this
+        # row on the kernel path forever.
+        eng = ContinuousBatchingEngine(c8, params, ident, serving=pscfg,
+                                       backend="aqua-block-sparse",
+                                       mesh=make_serving_mesh((2, 2)))
+        plan = eng.dispatch_plan()
+        assert plan.mesh_native and plan.paged, \
+            f"paged mesh2x2 bench row left the kernel path: {plan}"
+        paged_row("paged-aqua-block-sparse@mesh2x2", eng)
+        assert eng.mesh_fallback_events() == (), eng.mesh_fallback_events()
     else:
         rows.append(("serving/dense-jnp@mesh2x2", 0.0,
                      f"skipped=devices<4 ({jax.device_count()})"))
         for backend in ("aqua-block-sparse", "aqua-masked-dense"):
             rows.append((f"serving/{backend}@mesh2x2", 0.0,
                          f"skipped=devices<4 ({jax.device_count()})"))
+        rows.append(("serving/paged-aqua-block-sparse@mesh2x2", 0.0,
+                     f"skipped=devices<4 ({jax.device_count()})"))
 
     # rectangular contrast: one fixed batch per arrival "wave" — requests
     # cannot overlap across waves, so per-wave occupancy is 1 wave at a

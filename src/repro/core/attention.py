@@ -61,6 +61,11 @@ from repro.configs.base import AquaConfig, AttentionConfig
 from repro.core import aqua as aqua_lib
 from repro.core.aqua import ceil_to as _ceil_to
 from repro.core import kvcache as kv
+# single-source fallback-reason vocabulary: the dedup sink keys off these
+# exact strings and DispatchPlan.reasons carries the same constants, so
+# the plan's prediction and the trace-time warnings can never drift apart
+from repro.core.dispatch import (REASON_NONDIVISIBLE_MESH,
+                                 REASON_PAGE_GEOMETRY)
 
 NEG_INF = -1e30
 
@@ -414,6 +419,45 @@ def shard_mapped_decode_kernel(mesh, backend, q, cache, *, cfg, aqua):
     )(q, cache.k, cache.v, cache.positions, cache.count, cache.acc_score)
 
 
+def shard_mapped_paged_decode_kernel(mesh, backend, q, cache, *, cfg, aqua):
+    """Paged twin of :func:`shard_mapped_decode_kernel`: the block-sparse
+    paged decode kernel on shard-local pool + page-table leaves.
+
+    The partitioning follows :func:`distributed.sharding.decode_state_pspec`'s
+    paged branch exactly: the page *pool* (k/v/pos/acc) replicates over the
+    data axes — pages are lane-global, any lane may map any physical page,
+    so table entries are pool-global ids valid unchanged on every data
+    shard — while its KV-head axis shards over ``model`` (whole dim-blocks
+    and whole pages ride with their head). The page-*table* rows partition
+    with their lanes over the data axes, so each data shard's kernel
+    invocation scalar-prefetches only its own lane group's table rows and
+    dereferences them against its full (KV-sharded) pool slice inside the
+    ``index_map`` — zero collectives inside the mapped region, exactly like
+    the contiguous kernel threads its dim-block indices. q (B, KV, G, Dk);
+    returns (B, KV, G, Dv)."""
+    from jax.experimental.shard_map import shard_map
+
+    b, kvh = q.shape[0], q.shape[1]
+    batch_ax, kv_ax = _kernel_row_axes(mesh, b, kvh)
+
+    def core(qs, kp, vp, pp, ap, pt, cnt):
+        local = kv.PagedAttnCache(k_pool=kp, v_pool=vp, pos_pool=pp,
+                                  acc_pool=ap, page_table=pt, count=cnt)
+        return backend.paged_decode(qs, local, cfg=cfg, aqua=aqua)
+
+    P = jax.sharding.PartitionSpec
+    head4 = P(batch_ax, kv_ax, None, None)
+    pool4 = P(None, kv_ax, None, None)
+    return shard_map(
+        core, mesh=mesh,
+        in_specs=(head4, pool4, pool4, P(None, None), P(None, kv_ax, None),
+                  P(batch_ax, None), P(batch_ax)),
+        out_specs=head4,
+        check_rep=False,
+    )(q, cache.k_pool, cache.v_pool, cache.pos_pool, cache.acc_pool,
+      cache.page_table, cache.count)
+
+
 # ---------------------------------------------------------------------------
 # Chunked (flash-style) attention — pure-XLA memory-efficient path used for
 # long-sequence prefill; the S×S score matrix never materializes. On real
@@ -536,11 +580,16 @@ class AttentionBackend:
     ``requires_pallas`` backends fall back to the masked-dense reference
     when Pallas is unavailable; ``aqua_native`` backends additionally need
     calibrated AQUA projections (they consume unmasked q̂/k̂).
+    ``paged_decode`` (optional) is the decode entry for the block-paged
+    KV pool: same query contract as ``decode`` but over a
+    ``kv.PagedAttnCache`` (pool + per-lane page table) instead of the
+    contiguous slot cache.
     """
 
     name: str
     prefill: Callable[..., Tuple[jax.Array, Optional[jax.Array]]]
     decode: Optional[Callable[..., jax.Array]] = None
+    paged_decode: Optional[Callable[..., jax.Array]] = None
     requires_pallas: bool = False
     aqua_native: bool = False
 
@@ -686,6 +735,25 @@ def _aqua_block_sparse_decode(q_hat, cache, *, cfg, aqua):
     return out.reshape(b, kvh, g, -1)
 
 
+def _aqua_block_sparse_paged_decode(q_hat, cache: kv.PagedAttnCache, *,
+                                    cfg, aqua):
+    """Paged AQUA block-sparse decode: the page table rides the same
+    scalar-prefetch ``index_map`` machinery as the dim-block selection
+    (kernels/aqua_decode.aqua_paged_decode_attention) — pool pages stream
+    HBM→VMEM directly, no gathered lane view is ever materialized."""
+    from repro.kernels import ops as kops
+    b, kvh, g, dk = q_hat.shape
+    qf = q_hat.reshape(b, kvh * g, dk)
+    lengths = jnp.minimum(cache.count, cache.num_slots)
+    out = kops.aqua_paged_decode(qf, cache.k_pool, cache.v_pool,
+                                 cache.page_table, lengths,
+                                 k_ratio=aqua.k_ratio,
+                                 block_dims=aqua.block_dims,
+                                 seq_blk=aqua.decode_seq_blk,
+                                 scale=1.0 / float(cfg.head_dim) ** 0.5)
+    return out.reshape(b, kvh, g, -1)
+
+
 register_backend(AttentionBackend("dense-jnp", _dense_jnp_prefill))
 register_backend(AttentionBackend("flash", _flash_prefill,
                                   requires_pallas=True))
@@ -693,6 +761,7 @@ register_backend(AttentionBackend("aqua-masked-dense", _dense_jnp_prefill))
 register_backend(AttentionBackend("aqua-block-sparse",
                                   _aqua_block_sparse_prefill,
                                   decode=_aqua_block_sparse_decode,
+                                  paged_decode=_aqua_block_sparse_paged_decode,
                                   requires_pallas=True, aqua_native=True))
 
 
@@ -770,9 +839,8 @@ def prefill_attention(params: dict, x: jax.Array, cfg: AttentionConfig,
                                 batch=b):
             kernel_mesh = decode_mesh()
         else:
-            _log_mesh_kernel_fallback(
-                backend.name, "prefill",
-                "axis extents don't divide the serving mesh")
+            _log_mesh_kernel_fallback(backend.name, "prefill",
+                                      REASON_NONDIVISIBLE_MESH)
             backend = get_backend("aqua-masked-dense" if aqua_on
                                   else "dense-jnp")
     if backend.name == "aqua-block-sparse":
@@ -1044,9 +1112,8 @@ def decode_attention(params: dict, x_t: jax.Array, cache: kv.AttnCache,
         if dsh.kernel_shardable(decode_mesh(), cfg, aqua, batch=b):
             kernel_mesh = decode_mesh()
         else:
-            _log_mesh_kernel_fallback(
-                backend.name, "decode",
-                "axis extents don't divide the serving mesh")
+            _log_mesh_kernel_fallback(backend.name, "decode",
+                                      REASON_NONDIVISIBLE_MESH)
             kernel_ok = False
     if kernel_ok:
         if kernel_mesh is not None:
@@ -1075,25 +1142,6 @@ def decode_attention(params: dict, x_t: jax.Array, cache: kv.AttnCache,
     return out, cache
 
 
-def _aqua_block_sparse_paged_decode(q_hat, cache: kv.PagedAttnCache, *,
-                                    cfg, aqua):
-    """Paged AQUA block-sparse decode: the page table rides the same
-    scalar-prefetch ``index_map`` machinery as the dim-block selection
-    (kernels/aqua_decode.aqua_paged_decode_attention) — pool pages stream
-    HBM→VMEM directly, no gathered lane view is ever materialized."""
-    from repro.kernels import ops as kops
-    b, kvh, g, dk = q_hat.shape
-    qf = q_hat.reshape(b, kvh * g, dk)
-    lengths = jnp.minimum(cache.count, cache.num_slots)
-    out = kops.aqua_paged_decode(qf, cache.k_pool, cache.v_pool,
-                                 cache.page_table, lengths,
-                                 k_ratio=aqua.k_ratio,
-                                 block_dims=aqua.block_dims,
-                                 seq_blk=aqua.decode_seq_blk,
-                                 scale=1.0 / float(cfg.head_dim) ** 0.5)
-    return out.reshape(b, kvh, g, -1)
-
-
 def _paged_decode_product(params, x_t: jax.Array, q: jax.Array,
                           cache: kv.PagedAttnCache, cfg: AttentionConfig,
                           aqua: Optional[AquaConfig], *, h2o: bool,
@@ -1102,30 +1150,46 @@ def _paged_decode_product(params, x_t: jax.Array, q: jax.Array,
     """Read side of paged decode attention (the insert already ran).
 
     ``q`` is the projected (unmasked) query when AQUA is on. Dispatch
-    mirrors the contiguous path: the block-sparse Pallas kernel serves
-    the full-cache policy single-device (page table scalar-prefetched);
-    everything else — window rings, page-granular H2O, mesh serving —
-    runs the masked-dense reference on the gathered lane view, which is
+    mirrors the contiguous path exactly: the block-sparse Pallas kernel
+    serves the full-cache policy (page table scalar-prefetched), running
+    shard_mapped under a serving mesh (lane-partitioned page tables over
+    the data axes, the lane-global pool KV-sharded over ``model``; see
+    :func:`shard_mapped_paged_decode_kernel`) whenever
+    ``distributed.sharding.kernel_shardable`` admits the geometry.
+    Everything else — window rings, page-granular H2O, non-divisible
+    extents, pages that don't tile the kernel's sequence blocks — runs
+    the masked-dense reference on the gathered lane view, which is
     slot-for-slot identical to the contiguous cache layout.
     """
     aqua_on = aqua is not None and aqua.enabled
     head_dim = cfg.head_dim
+    b = q.shape[0]
     backend = resolve_backend(cfg.backend, aqua=aqua)
-    kernel_ok = (backend.decode is not None and aqua_on and not h2o
+    kernel_ok = (backend.paged_decode is not None and aqua_on and not h2o
                  and cfg.window is None and aqua.block_dims > 1
-                 and q.shape[-1] % aqua.block_dims == 0
-                 and cache.page_size % 8 == 0)
+                 and q.shape[-1] % aqua.block_dims == 0)
+    kernel_mesh = None
     if kernel_ok and decode_mesh() is not None:
-        # the pool is global across lanes — a shard_mapped paged kernel
-        # needs lane-partitioned page sets; under a mesh the GSPMD jnp
-        # reference serves (pool model-sharded on KV heads, replicated
-        # page tables; see distributed.sharding)
-        _log_mesh_kernel_fallback(backend.name, "decode",
-                                  "paged pool serves the jnp reference "
-                                  "under a mesh")
+        from repro.distributed import sharding as dsh
+        if dsh.kernel_shardable(decode_mesh(), cfg, aqua, batch=b,
+                                page_size=cache.page_size):
+            kernel_mesh = decode_mesh()
+        else:
+            reason = (REASON_PAGE_GEOMETRY
+                      if cache.page_size % dsh.KERNEL_PAGE_MULTIPLE != 0
+                      else REASON_NONDIVISIBLE_MESH)
+            _log_mesh_kernel_fallback(backend.name, "decode", reason)
+            kernel_ok = False
+    if kernel_ok and cache.page_size % 8 != 0:
+        # single-device: quietly keep the reference (same page-geometry
+        # constraint kernel_shardable applies on the mesh path)
         kernel_ok = False
     if kernel_ok:
-        out = _aqua_block_sparse_paged_decode(q, cache, cfg=cfg, aqua=aqua)
+        if kernel_mesh is not None:
+            out = shard_mapped_paged_decode_kernel(kernel_mesh, backend, q,
+                                                   cache, cfg=cfg, aqua=aqua)
+        else:
+            out = backend.paged_decode(q, cache, cfg=cfg, aqua=aqua)
         out = jnp.einsum("bkgd,kgdm->bm", out, params["wo"].astype(x_t.dtype))
         return out, cache
 

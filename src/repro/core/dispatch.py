@@ -1,0 +1,133 @@
+"""Unified serving-dispatch plan: one resolved, inspectable decision.
+
+The serving engine used to scatter its dispatch state across an
+``engine._kernel_native`` bool, ad-hoc ``kernel_shardable(...)`` call
+sites, and per-engine ``_mesh_fallback`` set reads — with the fallback
+*reason* strings duplicated between ``core/attention.py`` and the engine
+(a wording drift silently split one dedup key into two warning events).
+:class:`DispatchPlan` replaces that: resolved once per engine from the
+same predicates the attention dispatch applies at trace time, frozen,
+and exposed as the one public inspection point
+(``ContinuousBatchingEngine.dispatch_plan()``). The reason constants
+below are the *single source* for every fallback string — the attention
+dispatch logs them verbatim, the warning-dedup sink keys off them, and
+the README backend×mesh matrix (``launch/matrix.py``) renders them.
+
+Resolution is geometry- and policy-complete but trace-free: the plan
+predicts exactly what ``repro.core.attention`` will dispatch, and the
+engine's ``mesh_fallback_events()`` (trace-time truth) stays empty iff
+the plan said ``mesh_native=True``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+# Cache layouts a plan can pick.
+CACHE_CONTIGUOUS = "contiguous"
+CACHE_PAGED = "paged"
+
+# Canonical fallback-reason vocabulary. These exact strings key the
+# warning dedup in ``attention._log_mesh_kernel_fallback`` and appear in
+# ``DispatchPlan.reasons`` — never inline a variant wording at a dispatch
+# site (that is the drift this module exists to end).
+REASON_NO_MESH = "no serving mesh installed"
+REASON_REFERENCE_BACKEND = "backend has no Pallas decode kernel"
+REASON_PER_DIM_SELECTION = (
+    "block_dims <= 1 keeps the paper's per-dim selection "
+    "(masked-dense semantics)")
+REASON_WINDOW = "sliding-window policy needs per-slot position masking"
+REASON_H2O = "H2O eviction needs the reference path's dense weights"
+REASON_NONDIVISIBLE_MESH = "axis extents don't divide the serving mesh"
+REASON_PAGE_GEOMETRY = (
+    "page size doesn't tile into the kernel's 8-token sequence blocks")
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchPlan:
+    """The engine's resolved serving-dispatch decision.
+
+    backend:        resolved attention backend name (after the
+                    ``resolve_backend`` fallback policy), or ``"none"``
+                    for attention-free families.
+    cache_layout:   :data:`CACHE_CONTIGUOUS` or :data:`CACHE_PAGED`.
+    mesh_native:    True when decode serves through the shard_mapped
+                    Pallas kernel path (and the cache is laid out for
+                    it) — the contract ``launch.serve
+                    --expect-kernel-mesh`` gates on.
+    prefix_sharing: True when paged admissions share page-aligned prompt
+                    prefixes (policy + layout admit it).
+    reasons:        why ``mesh_native`` is False — a tuple of the
+                    REASON_* constants above, in check order; empty iff
+                    ``mesh_native``.
+    """
+
+    backend: str
+    cache_layout: str
+    mesh_native: bool
+    prefix_sharing: bool
+    reasons: Tuple[str, ...] = ()
+
+    @property
+    def paged(self) -> bool:
+        return self.cache_layout == CACHE_PAGED
+
+
+def resolve_dispatch_plan(*, attention, aqua, serving, mesh,
+                          prefix_sharing: bool = False,
+                          batch: Optional[int] = None) -> DispatchPlan:
+    """Resolve the dispatch plan the attention product will follow.
+
+    ``attention``/``aqua`` are the model's configs (post any per-engine
+    backend override), ``serving`` a ``ServingConfig``, ``mesh`` the
+    serving mesh or None. ``batch`` overrides the decode batch size
+    (default ``serving.max_lanes``). ``prefix_sharing`` is the engine's
+    effective prefix decision (it folds in model-capability checks the
+    config alone can't see), recorded verbatim.
+
+    Imports are deferred: ``core.attention`` imports this module for the
+    reason constants, so the reverse dependency must stay lazy.
+    """
+    from repro.core.attention import resolve_backend
+    from repro.core.h2o import h2o_budget
+    from repro.distributed import sharding as dsh
+
+    paged = serving.page_size is not None
+    cache_layout = CACHE_PAGED if paged else CACHE_CONTIGUOUS
+    if batch is None:
+        batch = serving.max_lanes
+    reasons = []
+    if attention is None:
+        backend_name = "none"
+        be = None
+    else:
+        be = resolve_backend(attention.backend, aqua=aqua)
+        backend_name = be.name
+    if mesh is None:
+        reasons.append(REASON_NO_MESH)
+    decode_fn = None
+    if be is not None:
+        decode_fn = be.paged_decode if paged else be.decode
+    if be is None or not (be.requires_pallas and decode_fn is not None):
+        reasons.append(REASON_REFERENCE_BACKEND)
+    else:
+        aqua_on = aqua is not None and aqua.enabled
+        if aqua_on and aqua.block_dims <= 1:
+            reasons.append(REASON_PER_DIM_SELECTION)
+        if attention.window is not None:
+            reasons.append(REASON_WINDOW)
+        if aqua_on and h2o_budget(aqua, serving.max_seq) is not None:
+            reasons.append(REASON_H2O)
+        if mesh is not None and not dsh.kernel_shardable(
+                mesh, attention, aqua, batch=batch,
+                page_size=serving.page_size):
+            if (serving.page_size is not None
+                    and serving.page_size % dsh.KERNEL_PAGE_MULTIPLE != 0):
+                reasons.append(REASON_PAGE_GEOMETRY)
+            else:
+                reasons.append(REASON_NONDIVISIBLE_MESH)
+    mesh_native = mesh is not None and not reasons
+    return DispatchPlan(backend=backend_name, cache_layout=cache_layout,
+                        mesh_native=mesh_native,
+                        prefix_sharing=bool(prefix_sharing),
+                        reasons=tuple(reasons))

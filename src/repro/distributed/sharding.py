@@ -283,18 +283,28 @@ def make_state_shardings(state, mesh: Mesh, *, kv_heads: int, batch: int,
     return jax.tree_util.tree_map_with_path(one, state)
 
 
+# The paged decode kernel tiles each page into whole 8-token sequence
+# sub-blocks (TPU sublane granularity; ops.aqua_paged_decode clamps
+# seq_blk to the page size, so a non-multiple page would leave a ragged
+# tail block the index_map can't address).
+KERNEL_PAGE_MULTIPLE = 8
+
+
 def kernel_shardable(mesh: Optional[Mesh], cfg, aqua=None, *,
-                     batch: Optional[int] = None) -> bool:
+                     batch: Optional[int] = None,
+                     page_size: Optional[int] = None) -> bool:
     """Can the Pallas attention kernels run shard_mapped under ``mesh``?
 
     Geometry-only predicate (policy checks — H2O, sliding window,
     ``block_dims > 1`` — stay with the dispatch sites in
-    ``repro.core.attention``):
+    ``repro.core.attention`` and ``repro.core.dispatch``):
 
     * For AQUA-native kernels (``aqua`` given) the kept dims must tile
       into whole ``block_dims`` dim-blocks, so every model shard holds
       whole dim-blocks of the dim-major K̂ cache.
-    * A multi-row batch must divide the data axes. When it doesn't,
+    * A multi-row batch must divide the data axes — lanes partition into
+      whole per-data-shard groups (contiguous caches *and* paged page
+      tables ride the lane axis). When it doesn't,
       :func:`decode_state_pspec` has already moved the mesh axes onto the
       cache's *slot* axis (context parallelism), and the kernels — which
       stream full sequence stripes per (lane, head) shard — would force a
@@ -302,6 +312,14 @@ def kernel_shardable(mesh: Optional[Mesh], cfg, aqua=None, *,
       reference path. ``batch == 1`` (admission prefills) replicates the
       batch axis instead and stays kernel-runnable, as does MQA's single
       KV head (the head axis replicates).
+    * Paged geometry (``page_size`` given): pages must tile into whole
+      :data:`KERNEL_PAGE_MULTIPLE`-token sequence blocks. No *sharding*
+      divisibility applies to the pool itself: ``model`` only ever
+      shards the pool's KV-head axis (dim-blocks and pages ride whole
+      per model shard), and the pool never splits over the data axes —
+      any lane may map any physical page, so page-table entries are
+      pool-global ids valid unchanged on every data shard (see
+      :func:`decode_state_pspec`'s paged branch).
     """
     if mesh is None:
         return False
@@ -313,6 +331,8 @@ def kernel_shardable(mesh: Optional[Mesh], cfg, aqua=None, *,
     if batch is not None and batch > 1:
         if batch % _axis_size(mesh, data_axes(mesh)) != 0:
             return False
+    if page_size is not None and page_size % KERNEL_PAGE_MULTIPLE != 0:
+        return False
     return True
 
 

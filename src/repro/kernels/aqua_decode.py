@@ -23,6 +23,17 @@ shard-local lane/head extents while the slot axis S stays whole per
 shard — the engine's kernel-native cache layout never slot-shards or
 dim-splits the K̂ stripes, so the scalar-prefetched block-index tables
 and the ``NB_sel``/``NB_total`` accounting are purely shard-local.
+
+The paged kernel (:func:`aqua_paged_decode_attention`) rides the same
+machinery shard_mapped (``shard_mapped_paged_decode_kernel``): the
+page-table rows it scalar-prefetches are the shard's own lane group's —
+tables partition with their lanes over the data axes — while the page
+pool arrives with its page axis whole per data shard (pages are
+lane-global; ``model`` only partitions the pool's KV-head axis, so whole
+pages and whole dim-blocks ride with each head). Table entries are
+pool-global page ids valid unchanged on every shard, so the ``index_map``
+page dereference needs no translation and no collective — exactly like
+the contiguous kernel's dim-block indices.
 """
 from __future__ import annotations
 
@@ -120,6 +131,13 @@ def aqua_paged_decode_attention(q_sel: jax.Array, khat_pages: jax.Array,
     selection already uses, composed on the sequence axis. HBM traffic is
     unchanged vs the contiguous kernel (pages only redirect addressing);
     the pool itself is what shrinks (repro.core.kvcache.PagedAttnCache).
+
+    Shard-local contract: under a serving mesh this runs inside
+    ``shard_map`` with B the shard's lane-group extent and ``page_table``
+    that group's rows, while ``khat_pages``/``v_pages`` keep their page
+    axis whole (P is pool-global; only KV is shard-local, over ``model``).
+    The entries of ``page_table`` are pool-global page ids, so the
+    ``index_map`` dereference above is valid verbatim on every shard.
     """
     from repro import runtime_flags as _rtf
     b, h, nb_sel, bd = q_sel.shape

@@ -25,6 +25,16 @@ without changes because nothing here crosses the batch or head axes: the
 top-k block-index tables are computed per (row, head), the sequence and
 dim axes arrive whole per shard, and the per-shard ``NB_total``/
 ``NB_sel`` accounting equals the global one (:func:`block_counts`).
+
+The paged wrapper extends the same contract: page-*table* rows are
+shard-local (they partition with their lanes over the data axes), while
+the page *pool* arrives with its page axis whole on every data shard —
+pages are lane-global, any lane may map any physical page, so the
+shard-local table entries are pool-global page ids that dereference
+unchanged inside the kernel's ``index_map``. Only the pool's KV-head
+axis is shard-local (partitioned over ``model``, whole dim-blocks and
+whole pages riding with their head); no collective is ever needed
+between the table lookup and the page DMA.
 """
 from __future__ import annotations
 

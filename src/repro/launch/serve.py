@@ -143,14 +143,16 @@ def main():
                          prefix_sharing=not args.no_prefix_share)
     eng = ContinuousBatchingEngine(cfg, params, proj, serving=scfg,
                                    backend=args.backend, mesh=mesh)
-    if args.expect_kernel_mesh and not eng.kernel_native:
+    plan = eng.dispatch_plan()
+    if args.expect_kernel_mesh and not plan.mesh_native:
         # independent of the engine's own dispatch decision: the caller
         # (CI) declares the kernel path is REQUIRED for this geometry, so
         # a predicate regression fails loudly instead of silently serving
         # the masked-dense reference
-        print("[serve] EXPECT-KERNEL FAILED: engine did not select the "
-              "kernel-native mesh path (mesh/backend/config geometry "
-              "rejected by the dispatch predicate)")
+        print("[serve] EXPECT-KERNEL FAILED: engine did not plan the "
+              "kernel-native mesh path "
+              f"(backend={plan.backend!r} layout={plan.cache_layout}); "
+              f"reasons: {'; '.join(plan.reasons)}")
         raise SystemExit(1)
     prompt_lens = tuple(int(x) for x in args.prompt_lens.split(","))
     reqs = poisson_trace(args.requests,
@@ -223,14 +225,15 @@ def main():
             raise SystemExit(1)
 
     if ((args.verify or args.expect_kernel_mesh) and mesh is not None
-            and eng.kernel_native):
+            and plan.mesh_native):
         # kernel-path identity is only meaningful if the kernel actually
-        # served on the mesh. `_kernel_native` is the engine's own dispatch
-        # decision (backend resolves to the block-sparse kernel, AQUA
-        # block geometry + mesh extents admit it, no H2O/window policy in
-        # the way) — --expect-kernel-mesh above already failed if that
-        # decision itself went wrong — so any per-engine fallback event
-        # means the masked-dense reference silently served instead.
+        # served on the mesh. `plan.mesh_native` is the engine's resolved
+        # dispatch decision (backend resolves to the block-sparse kernel,
+        # AQUA block + page geometry + mesh extents admit it, no
+        # H2O/window policy in the way) — --expect-kernel-mesh above
+        # already failed if that decision itself went wrong — so any
+        # per-engine fallback event means the masked-dense reference
+        # silently served instead.
         backend_name = eng.cfg.attention.backend
         events = eng.mesh_fallback_events()
         if events:
@@ -263,14 +266,26 @@ def main():
             # greedy: the reference is single-device AND contiguous, so a
             # paged drive is checked against the lane-stripe layout it
             # replaces (token-identity is exact — the gathered lane view
-            # is slot-for-slot the contiguous cache). A prefix-shared
-            # admission reuses the sharer's prefix K/V bitwise, but its
-            # *tail* softmax reduces over a differently-split key axis, so
-            # tail logits can move by ulps; greedy argmax absorbs that
-            # unless two logits are within rounding of each other.
-            where = "single-device contiguous"
-            ref_scfg = dataclasses.replace(scfg, page_size=None,
-                                           num_pages=None)
+            # is slot-for-slot the contiguous cache). Exception: when
+            # prefix sharing actually engages, a shared admission prefills
+            # only its *tail* (attention.prefixed_tail_attention) — a
+            # different reduction split than the contiguous engine's full
+            # prompt prefill. The jnp backends reduce identically either
+            # way, but a kernel-native engine full-prefills through the
+            # Pallas prefill kernel, so shared-tail logits move by ulps
+            # and greedy tokens can flip. Kernel-native prefix drives
+            # therefore verify against the single-device *paged* engine
+            # instead: the same admission paths solo, so the mesh wrap —
+            # which is what --verify pins here — must be token-exact.
+            prefix_engaged = (plan.prefix_sharing and plan.mesh_native
+                              and args.shared_prefix_len > 0)
+            if prefix_engaged:
+                where = "single-device paged"
+                ref_scfg = scfg
+            else:
+                where = "single-device contiguous"
+                ref_scfg = dataclasses.replace(scfg, page_size=None,
+                                               num_pages=None)
             ref_eng = ContinuousBatchingEngine(cfg, params, proj,
                                                serving=ref_scfg,
                                                backend=args.backend)

@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from dataclasses import dataclass
 from typing import Dict, Iterable, Iterator, List, Optional
 
@@ -52,6 +53,7 @@ import numpy as np
 from repro.configs.base import ModelConfig, ServingConfig
 from repro.core import kvcache as kvc
 from repro.core.calibration import AquaProjections
+from repro.core.dispatch import DispatchPlan, resolve_dispatch_plan
 from repro.core.h2o import h2o_budget
 from repro.models import build_model
 from repro.models.base import DecodeState, PagingSpec
@@ -342,7 +344,15 @@ class ContinuousBatchingEngine:
             self.mesh = make_serving_mesh(serving.mesh_shape,
                                           serving.mesh_axes)
         self._lane_order = None
-        self._kernel_native = False
+        # the engine's single resolved dispatch decision: backend, cache
+        # layout, mesh-nativeness, and structured fallback reasons. The
+        # plan is resolved from the same predicates the attention product
+        # applies at trace time, so ``dispatch_plan().mesh_native`` iff
+        # the mesh_fallback_events() record stays empty
+        self._plan: DispatchPlan = resolve_dispatch_plan(
+            attention=cfg.attention, aqua=cfg.aqua, serving=serving,
+            mesh=self.mesh, prefix_sharing=self._prefix_ok)
+        self._kernel_native = self._plan.mesh_native
         # per-engine mesh-fallback record: filled (and warning-deduped) by
         # the attention dispatch while this engine's steps trace, so each
         # engine owns its fallback report regardless of other engines in
@@ -372,7 +382,6 @@ class ContinuousBatchingEngine:
         surgery) and the attention path (shard_map cores / shard_mapped
         Pallas kernels). Returns (admit, step) ``out_shardings`` pinning
         the jitted entry points."""
-        from repro.core import attention as attn
         from repro.distributed import sharding as dsh
 
         mesh, s = self.mesh, self.scfg
@@ -382,23 +391,13 @@ class ContinuousBatchingEngine:
             self.proj = jax.device_put(self.proj, dsh.replicated(mesh))
         att = self.cfg.attention
         kvh = att.num_kv_heads if att is not None else 0
-        # kernel-native layout: when the block-sparse decode kernel will
-        # serve this engine shard_mapped, the cache keeps its slot axis
-        # (and dim-blocks) whole per shard — unshardable axes replicate
-        # instead of absorbing into the sequence stripe
-        aq = self.cfg.aqua
-        self._kernel_native = False
-        if (att is not None and aq is not None and aq.enabled
-                and not self._paged):
-            # paged pools are global across lanes — the paged kernel does
-            # not run shard_mapped (yet); under a mesh the paged engine
-            # serves the GSPMD jnp reference on the gathered lane view
-            be = attn.resolve_backend(att.backend, aqua=aq)
-            self._kernel_native = (
-                be.requires_pallas and be.decode is not None
-                and aq.block_dims > 1 and att.window is None
-                and h2o_budget(aq, s.max_seq) is None
-                and dsh.kernel_shardable(mesh, att, aq, batch=s.max_lanes))
+        # kernel-native layout: when the dispatch plan picked the
+        # shard_mapped Pallas kernel path (contiguous or paged), the cache
+        # keeps its slot axis (and dim-blocks, and pages) whole per shard
+        # — unshardable axes replicate instead of absorbing into the
+        # sequence stripe. The plan is the single source; _install_mesh no
+        # longer recomputes the predicate (see repro.core.dispatch).
+        self._kernel_native = self._plan.mesh_native
         state_struct = jax.eval_shape(
             lambda: self.model.init_decode_state(s.max_lanes, s.max_seq))
         self._state_sh = dsh.make_state_shardings(
@@ -438,8 +437,19 @@ class ContinuousBatchingEngine:
     def mesh_fallback_events(self):
         """(backend, mode, reason) mesh-kernel fallbacks traced by THIS
         engine — empty means every Pallas-backend step really served
-        shard_mapped (``launch.serve --verify`` asserts this)."""
+        shard_mapped (``launch.serve --verify`` asserts this). The reason
+        strings are the ``repro.core.dispatch.REASON_*`` constants, so
+        trace-time events line up with ``dispatch_plan().reasons`` — a
+        plan with ``mesh_native=True`` predicts this stays empty."""
         return tuple(sorted(self._mesh_fallback))
+
+    def dispatch_plan(self) -> DispatchPlan:
+        """The engine's resolved :class:`repro.core.dispatch.DispatchPlan`
+        — the one public inspection point for the serving dispatch:
+        backend, cache layout (contiguous/paged), ``mesh_native`` (the
+        contract ``launch.serve --expect-kernel-mesh`` gates on),
+        prefix-sharing, and structured fallback ``reasons``."""
+        return self._plan
 
     @property
     def paged(self) -> bool:
@@ -457,10 +467,12 @@ class ContinuousBatchingEngine:
 
     @property
     def kernel_native(self) -> bool:
-        """True when this engine's dispatch chose the shard_mapped Pallas
-        kernel path (and laid the cache out for it) — the public contract
-        ``launch.serve --expect-kernel-mesh`` / ``--verify`` gate on."""
-        return self._kernel_native
+        """Deprecated shim for ``dispatch_plan().mesh_native`` — kept one
+        release so callers migrate deliberately."""
+        warnings.warn(
+            "ContinuousBatchingEngine.kernel_native is deprecated; use "
+            "dispatch_plan().mesh_native", DeprecationWarning, stacklevel=2)
+        return self._plan.mesh_native
 
     # -- jitted bodies -------------------------------------------------
     def _finish_admit(self, logits, lanes: LaneState, lane, rng, max_new,

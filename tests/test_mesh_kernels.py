@@ -95,7 +95,7 @@ def test_kernel_mesh_token_identity(base_model):
     eng = ContinuousBatchingEngine(cfg, params, proj, serving=scfg,
                                    backend="aqua-block-sparse",
                                    mesh=make_serving_mesh((2, 2)))
-    assert eng.kernel_native
+    assert eng.dispatch_plan().mesh_native
     reqs = _trace(cfg, num_requests=4, max_new=6)
     outs = eng.run(reqs)
     assert eng.mesh_fallback_events() == ()
@@ -151,7 +151,7 @@ def test_mqa_kernel_under_mesh(base_model):
     reqs = _trace(cfg, num_requests=3, max_new=4, seed=3)
     eng = ContinuousBatchingEngine(cfg, params, proj, serving=scfg,
                                    backend="aqua-block-sparse", mesh=mesh)
-    assert eng.kernel_native
+    assert eng.dispatch_plan().mesh_native
     outs = eng.run(reqs)
     assert eng.mesh_fallback_events() == ()
     # placement independence at greedy: each request re-served solo on a
@@ -215,6 +215,175 @@ def test_shard_mapped_kernel_wrap_is_bitwise(kvh):
     np.testing.assert_array_equal(np.asarray(out_d), np.asarray(ref_d))
 
 
+PAGED_SCFG = ServingConfig(max_lanes=4, max_seq=64, max_new_tokens=6,
+                           prompt_bucket=8, page_size=8, num_pages=32)
+
+
+def test_paged_kernel_mesh_token_identity(base_model):
+    """The tentpole contract: paged + mesh decodes through the
+    shard_mapped paged kernel (lane-partitioned page tables, lane-global
+    KV-sharded pool) and is greedy-token-identical to BOTH the contiguous
+    mesh kernel engine and the single-device paged engine."""
+    cfg, params, proj = _aqua_model(base_model, k_ratio=0.5)
+    mesh = make_serving_mesh((2, 2))
+    reqs = _trace(cfg, num_requests=4, max_new=6, seed=5)
+
+    eng = ContinuousBatchingEngine(cfg, params, proj, serving=PAGED_SCFG,
+                                   backend="aqua-block-sparse", mesh=mesh)
+    plan = eng.dispatch_plan()
+    assert plan.mesh_native and plan.paged, plan
+    outs = eng.run([dataclasses.replace(r) for r in reqs])
+    assert eng.mesh_fallback_events() == ()
+    assert attn_mod.mesh_fallback_events() == ()
+
+    cscfg = dataclasses.replace(PAGED_SCFG, page_size=None, num_pages=None)
+    contig = ContinuousBatchingEngine(cfg, params, proj, serving=cscfg,
+                                      backend="aqua-block-sparse", mesh=mesh)
+    assert contig.dispatch_plan().mesh_native
+    c_outs = contig.run([dataclasses.replace(r) for r in reqs])
+
+    solo = ContinuousBatchingEngine(cfg, params, proj, serving=PAGED_SCFG,
+                                    backend="aqua-block-sparse")
+    s_outs = solo.run([dataclasses.replace(r) for r in reqs])
+    for r in reqs:
+        np.testing.assert_array_equal(np.asarray(outs[r.uid].tokens),
+                                      np.asarray(c_outs[r.uid].tokens),
+                                      err_msg=f"vs contiguous+mesh "
+                                              f"uid={r.uid}")
+        np.testing.assert_array_equal(np.asarray(outs[r.uid].tokens),
+                                      np.asarray(s_outs[r.uid].tokens),
+                                      err_msg=f"vs paged solo uid={r.uid}")
+    # pool sharding: pages lane-global (never data-sharded), KV heads over
+    # model; page-table rows ride the lane axis
+    kp = eng.last_state.layers.k_pool
+    assert kp.sharding.spec == jax.sharding.PartitionSpec(
+        None, None, "model", None, None), kp.sharding
+    pt = eng.last_state.layers.page_table
+    assert pt.sharding.spec == jax.sharding.PartitionSpec(
+        None, ("data",), None), pt.sharding
+
+
+def test_prefix_shared_lanes_decode_through_kernel(base_model):
+    """Prefix-shared admissions (same page-aligned prompt prefix mapping
+    the same physical pages) still decode through the shard_mapped paged
+    kernel — shared pages are pool-global ids like any other table entry
+    — token-identically to the solo paged engine."""
+    cfg, params, proj = _aqua_model(base_model, k_ratio=0.5)
+    mesh = make_serving_mesh((2, 2))
+    rng = np.random.default_rng(6)
+    pre = rng.integers(0, cfg.vocab_size, size=(8,), dtype=np.int32)
+    reqs = [Request(uid=i,
+                    tokens=np.concatenate(
+                        [pre, rng.integers(0, cfg.vocab_size, size=(4 + i,),
+                                           dtype=np.int32)]),
+                    max_new_tokens=5, arrival=float(i) * 1.5)
+            for i in range(4)]
+    eng = ContinuousBatchingEngine(cfg, params, proj, serving=PAGED_SCFG,
+                                   backend="aqua-block-sparse", mesh=mesh)
+    plan = eng.dispatch_plan()
+    assert plan.mesh_native and plan.prefix_sharing, plan
+    outs = eng.run([dataclasses.replace(r) for r in reqs])
+    assert eng.mesh_fallback_events() == ()
+    assert eng.page_pool.prefix_hits >= 1, eng.page_pool
+    solo = ContinuousBatchingEngine(cfg, params, proj, serving=PAGED_SCFG,
+                                    backend="aqua-block-sparse")
+    s_outs = solo.run([dataclasses.replace(r) for r in reqs])
+    for r in reqs:
+        np.testing.assert_array_equal(np.asarray(outs[r.uid].tokens),
+                                      np.asarray(s_outs[r.uid].tokens),
+                                      err_msg=f"uid={r.uid}")
+
+
+@pytest.mark.parametrize("kvh", [1, 2])
+def test_shard_mapped_paged_kernel_wrap_is_bitwise(kvh):
+    """The shard_map wrap around the *paged* decode kernel is bit-exact vs
+    the unwrapped kernel on an identical pool: page-table rows partition
+    with their lanes, the pool's page axis stays whole per data shard, and
+    the pool-global page ids dereference unchanged in the index_map."""
+    from repro.configs.base import AttentionConfig
+    from repro.core import kvcache as kvc
+
+    mesh = make_serving_mesh((2, 2))
+    b, g, d, ps, ppl = 4, 2, 16, 8, 4
+    s = ps * ppl
+    h = kvh * g
+    num_pages = b * ppl
+    cfg = AttentionConfig(num_heads=h, num_kv_heads=kvh, head_dim=d)
+    aqua = AquaConfig(k_ratio=0.5, block_dims=8)
+    backend = attn_mod.get_backend("aqua-block-sparse")
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    cache = kvc.PagedAttnCache(
+        k_pool=jax.random.normal(ks[0], (num_pages, kvh, ps, d),
+                                 jnp.float32),
+        v_pool=jax.random.normal(ks[1], (num_pages, kvh, ps, d),
+                                 jnp.float32),
+        pos_pool=jnp.tile(jnp.arange(ps, dtype=jnp.int32)[None],
+                          (num_pages, 1))
+        + ps * jnp.tile(jnp.arange(ppl, dtype=jnp.int32), b)[:, None],
+        acc_pool=jnp.zeros((num_pages, kvh, ps), jnp.float32),
+        page_table=jnp.arange(num_pages,
+                              dtype=jnp.int32).reshape(b, ppl),
+        count=jnp.full((b,), s, jnp.int32))
+    qd = jax.random.normal(ks[2], (b, kvh, g, d), jnp.float32)
+    ref = backend.paged_decode(qd, cache, cfg=cfg, aqua=aqua)
+    out = jax.jit(lambda q, c: attn_mod.shard_mapped_paged_decode_kernel(
+        mesh, backend, q, c, cfg=cfg, aqua=aqua))(qd, cache)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_paged_nondivisible_batch_routes_to_jnp_once(base_model, caplog):
+    """max_lanes=3 paged on a data=2 mesh: the page-table rows can't
+    partition the data axes, so paged decode routes to the jnp reference
+    on the gathered lane view — once, with the logged reason — and the
+    plan predicts it with the same reason string."""
+    from repro.core.dispatch import REASON_NONDIVISIBLE_MESH
+
+    cfg, params, proj = _aqua_model(base_model, k_ratio=0.5)
+    scfg = dataclasses.replace(PAGED_SCFG, max_lanes=3, num_pages=24,
+                               max_new_tokens=4)
+    reqs = _trace(cfg, num_requests=3, max_new=4, seed=8)
+    with caplog.at_level(logging.WARNING, logger="repro.core.attention"):
+        eng = ContinuousBatchingEngine(cfg, params, proj, serving=scfg,
+                                       backend="aqua-block-sparse",
+                                       mesh=make_serving_mesh((2, 2)))
+        plan = eng.dispatch_plan()
+        assert not plan.mesh_native
+        assert plan.reasons == (REASON_NONDIVISIBLE_MESH,), plan
+        outs = eng.run(reqs)
+    warns = [r for r in caplog.records if "falling back" in r.message]
+    assert len(warns) == 1, caplog.records
+    assert "decode" in warns[0].message and "aqua-block-sparse" \
+        in warns[0].message
+    events = eng.mesh_fallback_events()
+    assert [e[1] for e in events] == ["decode"], events
+    assert events[0][2] == REASON_NONDIVISIBLE_MESH, events
+    assert all(len(o.tokens) == 4 for o in outs.values()), outs
+
+
+def test_paged_page_geometry_routes_to_jnp_with_reason(base_model, caplog):
+    """page_size=4 can't tile into the kernel's 8-token sequence blocks:
+    the plan (and the logged trace-time fallback) carry the page-geometry
+    reason, distinct from the axis-divisibility one."""
+    from repro.core.dispatch import REASON_PAGE_GEOMETRY
+
+    cfg, params, proj = _aqua_model(base_model, k_ratio=0.5)
+    scfg = dataclasses.replace(PAGED_SCFG, page_size=4, num_pages=64,
+                               max_new_tokens=3)
+    reqs = _trace(cfg, num_requests=2, max_new=3, seed=9)
+    with caplog.at_level(logging.WARNING, logger="repro.core.attention"):
+        eng = ContinuousBatchingEngine(cfg, params, proj, serving=scfg,
+                                       backend="aqua-block-sparse",
+                                       mesh=make_serving_mesh((2, 2)))
+        plan = eng.dispatch_plan()
+        assert not plan.mesh_native
+        assert plan.reasons == (REASON_PAGE_GEOMETRY,), plan
+        outs = eng.run(reqs)
+    events = eng.mesh_fallback_events()
+    assert [e[1] for e in events] == ["decode"], events
+    assert events[0][2] == REASON_PAGE_GEOMETRY, events
+    assert all(len(o.tokens) == 3 for o in outs.values()), outs
+
+
 def test_nondivisible_batch_routes_to_jnp_once(base_model, caplog):
     """max_lanes=3 on a data=2 mesh: the decode batch can't partition the
     data axes (the cache's slot axis absorbed them), so decode routes to
@@ -229,7 +398,7 @@ def test_nondivisible_batch_routes_to_jnp_once(base_model, caplog):
                                        backend="aqua-block-sparse",
                                        mesh=make_serving_mesh((2, 2)))
         outs = eng.run(reqs)
-    assert not eng.kernel_native
+    assert not eng.dispatch_plan().mesh_native
     warns = [r for r in caplog.records if "falling back" in r.message]
     assert len(warns) == 1, caplog.records
     assert "decode" in warns[0].message and "aqua-block-sparse" \

@@ -212,7 +212,7 @@ def test_block_sparse_serves_shard_mapped_without_fallback(dense_model,
     assert not any("falling back" in r.message for r in caplog.records), \
         caplog.records
     assert attn_mod.mesh_fallback_events() == ()
-    assert eng.kernel_native
+    assert eng.dispatch_plan().mesh_native
     assert all(len(o.tokens) == 3 for o in outs.values()), outs
 
 
