@@ -113,6 +113,26 @@ def compare(base, fresh, threshold):
         if b is not None and f is not None:
             yield name, "max_abs_err", b, f, f <= max(b * 10.0, 1e-5)
 
+    # interleaving contract — judged *within the fresh dump* so machine
+    # speed cancels: the chunked-prefill row must cut the tail inter-token
+    # latency of the monolithic-admission row on the same trace without
+    # giving up throughput. (The per-row tok_s_rel gates above still judge
+    # both rows against the committed trajectory.)
+    mono = fresh.get("serving/interleave-monolithic", ("", {}))[1]
+    chunk = fresh.get("serving/interleave-chunked", ("", {}))[1]
+    if mono.get("p99_itl_ms") is not None \
+            and chunk.get("p99_itl_ms") is not None:
+        b, f = mono["p99_itl_ms"], chunk["p99_itl_ms"]
+        yield "serving/interleave-chunked", "p99_itl_vs_mono", b, f, f <= b
+        b, f = mono.get("slo_miss"), chunk.get("slo_miss")
+        if b is not None and f is not None:
+            yield "serving/interleave-chunked", "slo_miss_vs_mono", b, f, \
+                f <= b
+        b, f = mono.get("tok_s"), chunk.get("tok_s")
+        if b is not None and f is not None:
+            yield "serving/interleave-chunked", "tok_s_vs_mono", b, f, \
+                f >= b * (1 - threshold)
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)

@@ -483,6 +483,38 @@ def serving_throughput() -> List[Row]:
                                        backend="dense-jnp"),
               reqs_override=shared_reqs)
 
+    # chunked-prefill/decode interleaving: the same mixed trace with long
+    # prompts served twice. Monolithic admission stalls every decoding
+    # lane for a whole co-tenant prefill; a 16-token budget bounds the
+    # stall at one chunk step. p99 inter-token latency and the SLO-miss
+    # rate are this pair's contract — benchmarks/compare.py checks the
+    # chunked row beats monolithic *within the same dump* (machine speed
+    # cancels) at equal normalized throughput.
+    mixed_reqs = poisson_trace(12, mean_interarrival=4.0,
+                               prompt_lens=(8, 48, 96),
+                               max_new_tokens=max_new,
+                               vocab_size=cfg.vocab_size, seed=1)
+    mscfg = dataclasses.replace(scfg, max_seq=160)
+    slo_s = 0.025
+    for label, budget in (("interleave-monolithic", None),
+                          ("interleave-chunked", 16)):
+        eng = ContinuousBatchingEngine(
+            cfg, params, None,
+            serving=dataclasses.replace(mscfg, prefill_budget_tokens=budget),
+            backend="dense-jnp")
+        if budget is not None:
+            assert eng.dispatch_plan().chunked_prefill, \
+                f"interleave bench row fell back to monolithic admission: " \
+                f"{eng.dispatch_plan().chunked_reasons}"
+        dt, st = timed_drive(eng, trace=mixed_reqs)
+        rows.append((f"serving/{label}",
+                     dt / max(st.decode_steps, 1) * 1e6,
+                     f"tok_s={st.tokens_emitted / dt:.1f} "
+                     f"occupancy={st.mean_occupancy:.2f} "
+                     f"p50_itl_ms={st.itl_percentile(50) * 1e3:.2f} "
+                     f"p99_itl_ms={st.itl_percentile(99) * 1e3:.2f} "
+                     f"slo_miss={st.slo_miss_rate(slo_s):.3f}"))
+
     # mesh-native serving (2×2 data×model) — the sharded row of the bench
     # trajectory. Skipped (not silently: a sentinel row records why) when
     # the platform has fewer than 4 devices; CI's bench-regression gate

@@ -1,3 +1,4 @@
 """repro — production-grade JAX framework implementing AQUA
 (Attention via QUery mAgnitudes, 2025)."""
+
 __version__ = "1.0.0"

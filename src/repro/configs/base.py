@@ -254,11 +254,34 @@ class ServingConfig:
     # shared prefix skip its prefill entirely. Paged full-cache policy
     # only; ignored otherwise.
     prefix_sharing: bool = True
+    # Chunked-prefill/decode interleaving: cap the prefill tokens advanced
+    # per decode step. Prompts longer than the budget are admitted
+    # immediately into a PREFILLING lane and their KV cache is built in
+    # page-aligned chunks between decode steps, so active decode lanes
+    # never stall longer than one chunk. None keeps monolithic admission
+    # (the whole prefill runs inside the admit). Must be a multiple of
+    # ``prompt_bucket`` (and of ``page_size`` when paged) so every
+    # non-final chunk lands bucket- and page-aligned.
+    prefill_budget_tokens: Optional[int] = None
+    # Admission head-of-line lookahead: number of queue positions tried
+    # first-fit per admission pass when the head cannot reserve pages —
+    # the head plus up to ``admission_lookahead - 1`` later *arrived*
+    # requests. 1 = strict FIFO (head-only, the pre-lookahead behavior).
+    # Skipped-over requests keep their exact queue position.
+    admission_lookahead: int = 4
 
     def validate(self) -> None:
         assert self.max_lanes >= 1
         assert self.max_new_tokens >= 1
         assert self.prompt_bucket >= 1
+        assert self.admission_lookahead >= 1
+        if self.prefill_budget_tokens is not None:
+            assert self.prefill_budget_tokens >= 1
+            assert self.prefill_budget_tokens % self.prompt_bucket == 0, \
+                (self.prefill_budget_tokens, self.prompt_bucket)
+            if self.page_size is not None:
+                assert self.prefill_budget_tokens % self.page_size == 0, \
+                    (self.prefill_budget_tokens, self.page_size)
         if self.page_size is not None:
             assert self.page_size >= 1
             assert self.max_seq % self.page_size == 0, \

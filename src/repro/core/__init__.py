@@ -1,3 +1,4 @@
 """The paper's contribution: AQUA attention approximation, calibration,
 H2O coupling, and the unified cache machinery."""
+
 from repro.core import aqua, attention, calibration, h2o, kvcache  # noqa: F401

@@ -184,6 +184,40 @@ def _aqua_mask(qh, aqua: AquaConfig, head_dim: int):
                                    block_dims=aqua.block_dims)
 
 
+def _chunk_tile_mask(qh, aqua: AquaConfig, q_blk: int,
+                     lengths: Optional[jax.Array]):
+    """Per-*tile* dim-block mask reproducing the block-sparse kernel's
+    chunk-aggregated selection (``aqua.chunk_topk_block_indices``) on the
+    reference layout: all ``q_blk`` queries of a tile share the block set
+    their summed |q̂| picks. The chunked-prefill serve path uses this so a
+    chunk's selection equals the monolithic kernel invocation's for tiles
+    at the same anchor (the engine keeps chunk cursors q_blk-aligned —
+    ``REASON_CHUNK_GEOMETRY`` gates geometries where it can't).
+
+    qh: (B, T, KV, G, D) projected (sliced) queries; lengths: (B,) valid
+    rows (padding is excluded from the aggregation, as in the kernel
+    wrapper). Returns a 0/1 mask shaped like ``qh``.
+    """
+    from repro.kernels.ops import round_k_dims
+    b, t, kvh, g, d = qh.shape
+    bd = aqua.block_dims
+    if lengths is None:
+        lengths = jnp.full((b,), t, jnp.int32)
+    qf = qh.transpose(0, 2, 3, 1, 4).reshape(b, kvh * g, t, d)
+    tpad = _ceil_to(t, q_blk)
+    if tpad != t:
+        qf = jnp.pad(qf, ((0, 0), (0, 0), (0, tpad - t), (0, 0)))
+    k_dims = round_k_dims(d, aqua.k_ratio, bd)
+    bidx = aqua_lib.chunk_topk_block_indices(qf, k_dims, bd, q_blk, lengths)
+    nb = d // bd
+    bmask = jnp.zeros((b, kvh * g, tpad // q_blk, nb), qh.dtype)
+    bmask = jnp.put_along_axis(bmask, bidx, 1.0, axis=-1, inplace=False)
+    mask = jnp.repeat(bmask, bd, axis=-1)                 # (B, H, NQC, D)
+    mask = jnp.repeat(mask[:, :, :, None, :], q_blk, axis=3)
+    mask = mask.reshape(b, kvh * g, tpad, d)[:, :, :t]
+    return mask.reshape(b, kvh, g, t, d).transpose(0, 3, 1, 2, 4)
+
+
 # ---------------------------------------------------------------------------
 # Mesh-native attention: shard_map-wrapped cores for every backend.
 #
@@ -977,11 +1011,13 @@ def prefixed_tail_attention(params: dict, x: jax.Array, cfg: AttentionConfig,
                             prefix_k: jax.Array, prefix_v: jax.Array,
                             prefix_positions: jax.Array,
                             prefix_len: jax.Array, positions: jax.Array,
-                            lengths: Optional[jax.Array] = None
+                            lengths: Optional[jax.Array] = None,
+                            select_q_blk: Optional[int] = None
                             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Causal attention of a prompt *tail* against a read-only cache
     prefix plus itself — the zero-recompute admission path for
-    prefix-shared paged serving.
+    prefix-shared paged serving, and the per-chunk step of chunked
+    prefill.
 
     x: (1, T, d_model) tail activations; ``prefix_k`` (1, KV, S, Dk') /
     ``prefix_v`` (1, KV, S, Dv) are the lane's gathered cache view (keys
@@ -991,7 +1027,12 @@ def prefixed_tail_attention(params: dict, x: jax.Array, cfg: AttentionConfig,
     (``prefix_len + arange``); ``lengths`` (1,) masks ragged tail padding.
 
     Runs the masked-dense reference path (admission-time work, exactly
-    like B=1 graft prefills under a mesh). Returns
+    like B=1 graft prefills under a mesh). ``select_q_blk`` (static)
+    switches the AQUA selection from per-query to per-tile aggregation
+    (:func:`_chunk_tile_mask`) — the chunked-prefill engine passes the
+    kernel's ``prefill_q_blk`` there so chunks of a fresh prompt select
+    exactly the dim-blocks the monolithic kernel admission would.
+    Returns
     (out (1, T, d_model), k_cache (1, T, KV, Dk'), v (1, T, KV, Dv)) with
     ``k_cache`` in the cache's stored form (projected/sliced under AQUA).
     """
@@ -999,7 +1040,10 @@ def prefixed_tail_attention(params: dict, x: jax.Array, cfg: AttentionConfig,
     aqua_on = aqua is not None and aqua.enabled
     qh, kh = _aqua_project(q, k, aqua, proj, cfg.head_dim)
     if aqua_on:
-        qq = qh * _aqua_mask(qh, aqua, cfg.head_dim)
+        if select_q_blk is not None:
+            qq = qh * _chunk_tile_mask(qh, aqua, select_q_blk, lengths)
+        else:
+            qq = qh * _aqua_mask(qh, aqua, cfg.head_dim)
         kk = kh
     else:
         qq, kk = q, k

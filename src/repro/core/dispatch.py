@@ -41,6 +41,20 @@ REASON_H2O = "H2O eviction needs the reference path's dense weights"
 REASON_NONDIVISIBLE_MESH = "axis extents don't divide the serving mesh"
 REASON_PAGE_GEOMETRY = (
     "page size doesn't tile into the kernel's 8-token sequence blocks")
+# Chunked-prefill attribution (``DispatchPlan.chunked_prefill``): why an
+# engine keeps monolithic admission even though interleaving exists.
+REASON_NO_PREFILL_BUDGET = "no prefill_budget_tokens configured"
+REASON_FRONTEND = (
+    "modality frontend splices non-token embeddings at prefill time")
+REASON_MOE_CAPACITY = (
+    "MoE capacity routing is batch-shape dependent; chunk boundaries "
+    "would change which tokens drop")
+REASON_FAMILY_SURGERY = (
+    "model family lacks chunk-resumable lane surgery (recurrent state "
+    "is not a slot cache)")
+REASON_CHUNK_GEOMETRY = (
+    "prefill budget is not a multiple of the kernel's q-chunk tile — "
+    "chunk boundaries would change the dim-block selection")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +74,13 @@ class DispatchPlan:
     reasons:        why ``mesh_native`` is False — a tuple of the
                     REASON_* constants above, in check order; empty iff
                     ``mesh_native``.
+    chunked_prefill: True when admissions longer than the configured
+                    ``prefill_budget_tokens`` are split into page-aligned
+                    chunks interleaved with decode steps (the PREFILLING
+                    lane state). False falls back to monolithic admission
+                    — the whole prefill runs inside the admit.
+    chunked_reasons: why ``chunked_prefill`` is False, in check order;
+                    empty iff ``chunked_prefill``.
     """
 
     backend: str
@@ -67,6 +88,8 @@ class DispatchPlan:
     mesh_native: bool
     prefix_sharing: bool
     reasons: Tuple[str, ...] = ()
+    chunked_prefill: bool = False
+    chunked_reasons: Tuple[str, ...] = ()
 
     @property
     def paged(self) -> bool:
@@ -75,7 +98,9 @@ class DispatchPlan:
 
 def resolve_dispatch_plan(*, attention, aqua, serving, mesh,
                           prefix_sharing: bool = False,
-                          batch: Optional[int] = None) -> DispatchPlan:
+                          batch: Optional[int] = None,
+                          family: str = "dense",
+                          frontend: str = "none") -> DispatchPlan:
     """Resolve the dispatch plan the attention product will follow.
 
     ``attention``/``aqua`` are the model's configs (post any per-engine
@@ -83,7 +108,11 @@ def resolve_dispatch_plan(*, attention, aqua, serving, mesh,
     serving mesh or None. ``batch`` overrides the decode batch size
     (default ``serving.max_lanes``). ``prefix_sharing`` is the engine's
     effective prefix decision (it folds in model-capability checks the
-    config alone can't see), recorded verbatim.
+    config alone can't see), recorded verbatim. ``family``/``frontend``
+    are the model family and frontend kind — the chunked-prefill
+    predicate needs them (chunk boundaries must not change what a token
+    computes, which capacity-routed MoE and embedding-splicing frontends
+    cannot promise).
 
     Imports are deferred: ``core.attention`` imports this module for the
     reason constants, so the reverse dependency must stay lazy.
@@ -127,7 +156,40 @@ def resolve_dispatch_plan(*, attention, aqua, serving, mesh,
             else:
                 reasons.append(REASON_NONDIVISIBLE_MESH)
     mesh_native = mesh is not None and not reasons
+
+    # Chunked-prefill interleaving: admissible only where splitting the
+    # prefill at an arbitrary page boundary provably computes the same
+    # tokens as the monolithic pass (full-cache slot placement, no
+    # batch-shape-dependent routing, token-only inputs).
+    chunked_reasons = []
+    if serving.prefill_budget_tokens is None:
+        chunked_reasons.append(REASON_NO_PREFILL_BUDGET)
+    if attention is None or family not in ("dense", "vlm", "moe"):
+        chunked_reasons.append(REASON_FAMILY_SURGERY)
+    elif family == "moe":
+        chunked_reasons.append(REASON_MOE_CAPACITY)
+    if frontend != "none":
+        chunked_reasons.append(REASON_FRONTEND)
+    if attention is not None:
+        if attention.window is not None:
+            chunked_reasons.append(REASON_WINDOW)
+        if (aqua is not None and aqua.enabled
+                and h2o_budget(aqua, serving.max_seq) is not None):
+            chunked_reasons.append(REASON_H2O)
+        # block-sparse kernel prefill aggregates |q̂| per q-chunk tile:
+        # chunk cursors must land on tile boundaries or a straddling
+        # tile would select different dim-blocks than the monolithic
+        # invocation (identity broken, not just delayed)
+        if (serving.prefill_budget_tokens is not None
+                and backend_name == "aqua-block-sparse"
+                and aqua is not None and aqua.enabled
+                and aqua.block_dims > 1
+                and serving.prefill_budget_tokens % aqua.prefill_q_blk != 0):
+            chunked_reasons.append(REASON_CHUNK_GEOMETRY)
+
     return DispatchPlan(backend=backend_name, cache_layout=cache_layout,
                         mesh_native=mesh_native,
                         prefix_sharing=bool(prefix_sharing),
-                        reasons=tuple(reasons))
+                        reasons=tuple(reasons),
+                        chunked_prefill=not chunked_reasons,
+                        chunked_reasons=tuple(chunked_reasons))

@@ -149,6 +149,41 @@ def insert(cache: AttnCache, slot: jax.Array, k_new: jax.Array,
                      acc_score=acc)
 
 
+def lane_write_tail(cache: AttnCache, lane: jax.Array, k_tail: jax.Array,
+                    v_tail: jax.Array, positions: jax.Array,
+                    start: jax.Array, new_count: jax.Array) -> AttnCache:
+    """Write a prefill *chunk*'s K/V into one lane of a contiguous
+    full-cache, leaving slots below ``start`` untouched.
+
+    The contiguous counterpart of :func:`paged_write_tail`: k_tail
+    (T, KV, Dk) / v_tail (T, KV, Dv) / positions (T,) start at logical
+    slot ``start`` (the chunk cursor). Slots at/beyond ``start`` are
+    cleared first (positions -1, scores 0) so a recycled lane's previous
+    tenant never reads as valid — the first chunk (``start`` 0) therefore
+    wipes the whole lane, later chunks only clear ahead of themselves.
+    Full-cache slot placement only (slot i holds position i); window
+    rings and H2O eviction place slots differently and must keep
+    monolithic admission.
+    """
+    s = cache.num_slots
+    t = k_tail.shape[0]
+    ahead = jnp.arange(s) >= start                       # (S,)
+    pos_row = jnp.where(ahead, -1, cache.positions[lane])
+    acc_row = jnp.where(ahead[None, :], 0.0, cache.acc_score[lane])
+    idx = start + jnp.arange(t)
+    k = cache.k.at[lane, :, idx].set(k_tail.astype(cache.k.dtype),
+                                     mode="drop")
+    v = cache.v.at[lane, :, idx].set(v_tail.astype(cache.v.dtype),
+                                     mode="drop")
+    pos_row = pos_row.at[idx].set(positions, mode="drop")
+    acc_row = acc_row.at[:, idx].set(0.0, mode="drop")
+    return dataclasses.replace(
+        cache, k=k, v=v,
+        positions=cache.positions.at[lane].set(pos_row),
+        acc_score=cache.acc_score.at[lane].set(acc_row),
+        count=cache.count.at[lane].set(new_count))
+
+
 def valid_mask(cache: AttnCache, *, window: Optional[int]) -> jax.Array:
     """(B, S_slots) bool — slots attendable by the current token."""
     return valid_mask_from(cache.positions, cache.count, window=window)

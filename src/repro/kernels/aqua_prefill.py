@@ -58,7 +58,7 @@ NEG_INF = -1e30
 def _kernel(idx_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
             s_ref, m_ref, l_ref, acc_ref, *, scale: float, q_blk: int,
             k_blk: int, nb_sel: int, nkc: int, causal: bool,
-            window: Optional[int]):
+            window: Optional[int], q_offset: int):
     bi = pl.program_id(0)
     qc = pl.program_id(2)
     kc = pl.program_id(3)
@@ -72,12 +72,14 @@ def _kernel(idx_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
     # Skip tiles that the causal / window band fully masks: the last query
     # of this chunk sits before the first key, or every key is staler than
-    # the window of the first query.
+    # the window of the first query. ``q_offset`` shifts query positions
+    # for chunk-resumable invocations (queries are rows
+    # [q_offset, q_offset + T) of the sequence whose keys span the stripe).
     live = kc >= 0
     if causal:
-        live &= kc * k_blk <= qc * q_blk + (q_blk - 1)
+        live &= kc * k_blk <= q_offset + qc * q_blk + (q_blk - 1)
     if window is not None:
-        live &= kc * k_blk + (k_blk - 1) > qc * q_blk - window
+        live &= kc * k_blk + (k_blk - 1) > q_offset + qc * q_blk - window
 
     @pl.when(live & (j == 0))
     def _reset_scores():
@@ -96,7 +98,7 @@ def _kernel(idx_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
     @pl.when(live & (j == nb_sel - 1))
     def _finalize_tile():
         s = s_ref[...] * scale                       # (q_blk, k_blk)
-        qpos = qc * q_blk + jax.lax.broadcasted_iota(
+        qpos = q_offset + qc * q_blk + jax.lax.broadcasted_iota(
             jnp.int32, (q_blk, k_blk), 0)
         kpos = kc * k_blk + jax.lax.broadcasted_iota(
             jnp.int32, (q_blk, k_blk), 1)
@@ -126,7 +128,7 @@ def _kernel(idx_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
 @functools.partial(jax.jit, static_argnames=("block_dims", "q_blk", "k_blk",
                                              "causal", "window", "scale",
-                                             "interpret"))
+                                             "interpret", "q_offset"))
 def aqua_prefill_attention(q_sel: jax.Array, khat_blocks: jax.Array,
                            v: jax.Array, block_idx: jax.Array,
                            lengths: jax.Array, *, block_dims: int = 8,
@@ -134,7 +136,8 @@ def aqua_prefill_attention(q_sel: jax.Array, khat_blocks: jax.Array,
                            causal: bool = True,
                            window: Optional[int] = None,
                            scale: Optional[float] = None,
-                           interpret: Optional[bool] = None) -> jax.Array:
+                           interpret: Optional[bool] = None,
+                           q_offset: int = 0) -> jax.Array:
     """Block-sparse AQUA chunked-prefill attention.
 
     q_sel:       (B, H, NQC, NB_sel, q_blk, bd) — queries, pre-gathered
@@ -147,14 +150,23 @@ def aqua_prefill_attention(q_sel: jax.Array, khat_blocks: jax.Array,
     scale:       score scale; default 1/sqrt(NB_total * bd). AQUA
                  approximates *full* head-dim scores, so pass
                  1/sqrt(head_dim) when k̂ is statically sliced.
-    returns out: (B, H, S, Dv)
+    q_offset:    static row offset of the queries within the key stripe —
+                 the chunk-resumable entry (``ops.aqua_prefill_chunk``):
+                 the queries are sequence rows [q_offset, q_offset + T)
+                 while the keys span [0, S). Masked-out key tiles are
+                 exact no-ops in the online softmax, so a q_blk-aligned
+                 chunk invocation is bitwise identical to the matching
+                 tiles of the monolithic call. 0 = classic full prefill.
+    returns out: (B, H, T, Dv) with T = NQC * q_blk
     """
     b, h, nqc, nb_sel, qb, bd = q_sel.shape
     _, kvh, nb_total, bd2, s = khat_blocks.shape
     assert bd == bd2 == block_dims and qb == q_blk
     dv = v.shape[-1]
     g = h // kvh
-    assert s % k_blk == 0 and s == nqc * q_blk, (s, q_blk, k_blk, nqc)
+    assert s % k_blk == 0, (s, k_blk)
+    assert q_offset >= 0 and q_offset + nqc * q_blk <= s, \
+        (q_offset, nqc, q_blk, s)
     nkc = s // k_blk
     if scale is None:
         scale = 1.0 / ((nb_total * bd) ** 0.5)
@@ -192,7 +204,8 @@ def aqua_prefill_attention(q_sel: jax.Array, khat_blocks: jax.Array,
     )
     kernel = functools.partial(_kernel, scale=scale, q_blk=q_blk,
                                k_blk=k_blk, nb_sel=nb_sel, nkc=nkc,
-                               causal=causal, window=window)
+                               causal=causal, window=window,
+                               q_offset=q_offset)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,

@@ -215,3 +215,93 @@ def aqua_prefill(q_hat: jax.Array, khat: jax.Array, v: jax.Array,
                                  k_blk=k_blk, causal=causal, window=window,
                                  scale=scale, interpret=interpret)
     return out[:, :, :s]
+
+
+@functools.partial(jax.jit, static_argnames=("q_offset", "k_ratio",
+                                             "block_dims", "q_blk", "k_blk",
+                                             "causal", "window", "scale",
+                                             "interpret"))
+def aqua_prefill_chunk(q_hat: jax.Array, khat: jax.Array, v: jax.Array,
+                       lengths: jax.Array, *, q_offset: int,
+                       mag_state: Optional[jax.Array] = None,
+                       k_ratio: float = 0.75, block_dims: int = 8,
+                       q_blk: int = 128, k_blk: int = 128,
+                       causal: bool = True, window: Optional[int] = None,
+                       scale: Optional[float] = None,
+                       interpret: Optional[bool] = None) -> tuple:
+    """Chunk-resumable AQUA prefill: attention for query rows
+    [q_offset, q_offset + T) against the key stripe [0, S).
+
+    Masked-out key tiles are exact no-ops in the online softmax, so when
+    every chunk boundary is a ``q_blk`` multiple the concatenated chunk
+    outputs are **bitwise identical** to one monolithic
+    :func:`aqua_prefill` call — each chunk runs the same tiles with the
+    same dim-block selection. A ragged boundary (``q_offset % q_blk !=
+    0``) is still numerically valid (tiles re-anchor at ``q_offset``) but
+    only approximately equal, because the straddling tile aggregates |q̂|
+    over a different row set; ``mag_state`` keeps the selection itself
+    consistent across a ragged split.
+
+    q_hat:     (B, H, T, D) projected queries for this chunk only
+    khat:      (B, KV, S, D) projected keys, seq-major, covering at least
+               rows [0, q_offset + T) — typically the whole cache stripe
+    v:         (B, KV, S, Dv)
+    lengths:   (B,) — valid *sequence* lengths (global positions; both the
+               key mask and the |q̂| aggregation use them)
+    q_offset:  static global row index of this chunk's first query
+    mag_state: (B, H, NB_total) float32 running |q̂| block aggregate of a
+               partially filled leading tile (from the previous chunk's
+               carry), or None. Added to this chunk's first tile before
+               selection.
+    returns:   (out (B, H, T, Dv), carry (B, H, NB_total) float32) —
+               ``carry`` is the trailing tile's |q̂| aggregate when
+               ``T % q_blk != 0`` (feed it to the next chunk's
+               ``mag_state``), else zeros.
+    """
+    b, h, t, d = q_hat.shape
+    s = khat.shape[2]
+    assert q_offset >= 0 and q_offset + t <= s, (q_offset, t, s)
+
+    q_blk = min(q_blk, _ceil_to(t, 8))
+    k_blk = min(k_blk, _ceil_to(s, 8))
+    tpad = _ceil_to(t, q_blk)
+    spad = _ceil_to(max(s, q_offset + tpad), k_blk)
+    if tpad - t:
+        q_hat = jnp.pad(q_hat, ((0, 0), (0, 0), (0, tpad - t), (0, 0)))
+    if spad - s:
+        khat = jnp.pad(khat, ((0, 0), (0, 0), (0, spad - s), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, spad - s), (0, 0)))
+    nqc = tpad // q_blk
+    nb = d // block_dims
+    k_dims = round_k_dims(d, k_ratio, block_dims)
+    kb = k_dims // block_dims
+
+    # chunk-local |q̂| block aggregation — same math as
+    # chunk_topk_block_indices but masked by *global* positions and
+    # carrying the previous chunk's partial leading-tile aggregate
+    mag = jnp.abs(q_hat.astype(jnp.float32))
+    row = jnp.arange(tpad)
+    valid = (row[None, :] < t) & (q_offset + row[None, :] < lengths[:, None])
+    mag = mag * valid[:, None, :, None]
+    bmag = mag.reshape(b, h, nqc, q_blk, nb, block_dims
+                       ).sum(axis=(3, 5))                    # (B,H,NQC,NB)
+    if mag_state is not None:
+        bmag = bmag.at[:, :, 0, :].add(mag_state)
+    if t % q_blk != 0:
+        carry = bmag[:, :, -1, :]
+    else:
+        carry = jnp.zeros((b, h, nb), jnp.float32)
+    _, bidx = jax.lax.top_k(bmag, kb)
+    block_idx = jnp.sort(bidx, axis=-1).astype(jnp.int32)
+
+    qb = q_hat.reshape(b, h, nqc, q_blk, nb, block_dims
+                       ).transpose(0, 1, 2, 4, 3, 5)
+    q_sel = jnp.take_along_axis(qb, block_idx[..., None, None], axis=3)
+
+    khat_blocks = to_dim_major_blocks(khat, block_dims)
+    out = aqua_prefill_attention(q_sel, khat_blocks, v, block_idx, lengths,
+                                 block_dims=block_dims, q_blk=q_blk,
+                                 k_blk=k_blk, causal=causal, window=window,
+                                 scale=scale, interpret=interpret,
+                                 q_offset=q_offset)
+    return out[:, :, :t], carry

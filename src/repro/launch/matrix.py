@@ -54,13 +54,20 @@ def _cell(plan) -> str:
     return f"shard_map/jnp reference ({plan.reasons[0]})"
 
 
+def _chunk_cell(plan) -> str:
+    if plan.chunked_prefill:
+        return "interleaved (PREFILLING lanes)"
+    return f"monolithic admit ({plan.chunked_reasons[0]})"
+
+
 def generate_matrix() -> str:
     """The README table (markdown, BEGIN/END markers included)."""
     mesh = AbstractMesh((("data", 2), ("model", 2)))
     lines = [
         BEGIN,
-        "| backend | contiguous cache @ mesh | paged cache @ mesh |",
-        "|---|---|---|",
+        "| backend | contiguous cache @ mesh | paged cache @ mesh "
+        "| chunked prefill @ budget |",
+        "|---|---|---|---|",
     ]
     for label, backend, aqua in _ROWS:
         att = dataclasses.replace(_ATT, backend=backend)
@@ -70,7 +77,14 @@ def generate_matrix() -> str:
             plan = resolve_dispatch_plan(attention=att, aqua=aqua,
                                          serving=serving, mesh=mesh)
             cells.append(_cell(plan))
-        lines.append(f"| `{label}` | {cells[0]} | {cells[1]} |")
+        # chunked-prefill admissibility is cache-layout independent; the
+        # reference budget is one block-sparse q-chunk tile (128), the
+        # geometry the REASON_CHUNK_GEOMETRY predicate requires
+        serving = dataclasses.replace(_SERVING, prefill_budget_tokens=128)
+        plan = resolve_dispatch_plan(attention=att, aqua=aqua,
+                                     serving=serving, mesh=mesh)
+        cells.append(_chunk_cell(plan))
+        lines.append(f"| `{label}` | {cells[0]} | {cells[1]} | {cells[2]} |")
     lines.append(END)
     return "\n".join(lines)
 

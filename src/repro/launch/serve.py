@@ -50,6 +50,10 @@ def main():
     ap.add_argument("--s-ratio", type=float, default=0.0)
     ap.add_argument("--h2o-ratio", type=float, default=1.0)
     ap.add_argument("--block-dims", type=int, default=1)
+    ap.add_argument("--prefill-q-blk", type=int, default=None,
+                    help="block-sparse prefill kernel q-chunk tile (one "
+                         "dim-block selection per tile); a chunked-prefill "
+                         "budget must be a multiple of it")
     ap.add_argument("--no-aqua", action="store_true")
     ap.add_argument("--backend", default=None,
                     help="attention backend override (see core.attention)")
@@ -79,6 +83,17 @@ def main():
                          "free pages)")
     ap.add_argument("--no-prefix-share", action="store_true",
                     help="disable prompt prefix page sharing")
+    # chunked-prefill/decode interleaving
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="interleave admissions with decode: at most this "
+                         "many prefill tokens run between consecutive "
+                         "decode steps (None = monolithic admission; the "
+                         "engine falls back with an attributed reason when "
+                         "the geometry/policy can't chunk — see "
+                         "dispatch_plan().chunked_reasons)")
+    ap.add_argument("--itl-slo-ms", type=float, default=None,
+                    help="report the fraction of inter-token gaps above "
+                         "this wall-clock threshold (SLO miss rate)")
     ap.add_argument("--shared-prefix-len", type=int, default=0,
                     help="prepend a fixed random prefix of this length to "
                          "every trace prompt (prefix-sharing demo/CI)")
@@ -102,6 +117,9 @@ def main():
         aqua = AquaConfig(k_ratio=args.k_ratio, s_ratio=args.s_ratio,
                           h2o_ratio=args.h2o_ratio,
                           block_dims=args.block_dims)
+        if args.prefill_q_blk is not None:
+            aqua = dataclasses.replace(aqua,
+                                       prefill_q_blk=args.prefill_q_blk)
     cfg = dataclasses.replace(cfg, aqua=aqua)
 
     model = build_model(cfg)
@@ -140,10 +158,20 @@ def main():
                          temperature=args.temperature,
                          page_size=args.page_size,
                          num_pages=args.pool_pages,
-                         prefix_sharing=not args.no_prefix_share)
+                         prefix_sharing=not args.no_prefix_share,
+                         prefill_budget_tokens=args.prefill_budget)
     eng = ContinuousBatchingEngine(cfg, params, proj, serving=scfg,
                                    backend=args.backend, mesh=mesh)
     plan = eng.dispatch_plan()
+    if args.prefill_budget is not None and not plan.chunked_prefill:
+        print("[serve] chunked prefill OFF (monolithic admission): "
+              f"{'; '.join(plan.chunked_reasons)}")
+        if args.verify:
+            # CI drives a budget to pin the interleaved path; a predicate
+            # regression silently serving monolithic must fail loudly
+            print("[serve] VERIFY FAILED: --prefill-budget requested but "
+                  "the engine planned monolithic admission")
+            raise SystemExit(1)
     if args.expect_kernel_mesh and not plan.mesh_native:
         # independent of the engine's own dispatch decision: the caller
         # (CI) declares the kernel path is REQUIRED for this geometry, so
@@ -192,6 +220,19 @@ def main():
           f"({st.tokens_emitted / dt:.1f} tok/s), "
           f"{st.decode_steps} decode steps, "
           f"mean lane occupancy {st.mean_occupancy:.2f}/{args.lanes}")
+    if st.itl_gaps:
+        line = (f"[serve] inter-token latency: p50 "
+                f"{st.itl_percentile(50) * 1e3:.1f}ms, p99 "
+                f"{st.itl_percentile(99) * 1e3:.1f}ms, max "
+                f"{st.max_itl * 1e3:.1f}ms")
+        if args.itl_slo_ms is not None:
+            line += (f", SLO>{args.itl_slo_ms:g}ms miss rate "
+                     f"{st.slo_miss_rate(args.itl_slo_ms / 1e3):.3f}")
+        print(line)
+    if args.prefill_budget is not None and plan.chunked_prefill:
+        print(f"[serve] chunked prefill: {st.chunked_admissions} admissions "
+              f"interleaved over {st.prefill_chunks} chunk steps "
+              f"(budget {args.prefill_budget} tokens/step)")
     print(f"[serve] KV cache bytes @ {args.lanes} lanes: "
           f"{eng.cache_bytes():,}")
     if eng.paged:
@@ -286,6 +327,13 @@ def main():
                 where = "single-device contiguous"
                 ref_scfg = dataclasses.replace(scfg, page_size=None,
                                                num_pages=None)
+            # the reference always admits monolithically: a chunked drive
+            # is thereby pinned against the engine it replaces — chunking
+            # must change *when* work happens, never *what* is computed
+            ref_scfg = dataclasses.replace(ref_scfg,
+                                           prefill_budget_tokens=None)
+            if args.prefill_budget is not None:
+                where += " monolithic-admit"
             ref_eng = ContinuousBatchingEngine(cfg, params, proj,
                                                serving=ref_scfg,
                                                backend=args.backend)
@@ -298,6 +346,29 @@ def main():
             raise SystemExit(1)
         print(f"[serve] verify: all {len(streamed)} requests "
               f"token-identical to the {where} reference engine")
+        if (args.prefill_budget is not None and plan.chunked_prefill
+                and args.temperature == 0):
+            # the point of interleaving: decode lanes never stall for a
+            # whole co-tenant prefill, so the worst inter-token gap must
+            # come down vs the monolithic-admit reference on the same
+            # trace. Both engines re-serve WARM (every jit shape was
+            # compiled by the drives above) — the first drives' gaps are
+            # dominated by compilation, which the chunked engine pays
+            # more of (one extra jit per chunk geometry), not by the
+            # admission stalls this check pins.
+            eng.run([dataclasses.replace(r) for r in reqs])
+            ref_eng.run([dataclasses.replace(r) for r in reqs])
+            warm_max = eng.stats.max_itl
+            ref_max = ref_eng.stats.max_itl
+            if warm_max >= ref_max and ref_max > 0:
+                print(f"[serve] VERIFY FAILED: chunked max inter-token gap "
+                      f"{warm_max * 1e3:.1f}ms is not below the "
+                      f"monolithic reference's {ref_max * 1e3:.1f}ms "
+                      "(warm re-drives)")
+                raise SystemExit(1)
+            print(f"[serve] verify: max inter-token gap "
+                  f"{warm_max * 1e3:.1f}ms < monolithic "
+                  f"{ref_max * 1e3:.1f}ms (warm re-drives)")
 
 
 def _drive_rectangular(cfg, params, proj, args):

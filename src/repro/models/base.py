@@ -76,12 +76,33 @@ class LM:
 
     def prefill_with_prefix(self, params, batch, state: DecodeState,
                             lane: jax.Array, prefix_len: jax.Array,
-                            aqua_proj: Optional[jax.Array] = None
+                            aqua_proj: Optional[jax.Array] = None,
+                            select_q_blk: Optional[int] = None
                             ) -> Tuple[jax.Array, DecodeState]:
         """Prefill only the *tail* of a request whose page-aligned prompt
         prefix is already mapped into ``lane`` (prefix sharing): tail
         queries attend to the shared prefix K/V read from the pool, and
         only the tail's K/V is written (into private pages)."""
+        raise NotImplementedError
+
+    def prefill_chunk(self, params, batch, state: DecodeState,
+                      lane: jax.Array, prefix_len: jax.Array,
+                      aqua_proj: Optional[jax.Array] = None,
+                      select_q_blk: Optional[int] = None
+                      ) -> Tuple[jax.Array, DecodeState]:
+        """Advance ``lane``'s cache by one prefill chunk: the chunk's
+        queries attend to everything the lane already holds in logical
+        slots ``[0, prefix_len)`` (earlier chunks — or a shared prefix —
+        of the same prompt) plus themselves, and only the chunk's K/V is
+        written, starting at slot ``prefix_len``. Returns next-token
+        logits for the chunk's last valid row (meaningful on the final
+        chunk) and the updated state. ``select_q_blk`` (static) switches
+        the AQUA dim-block selection to the block-sparse kernel's
+        per-tile aggregation so chunked admissions reproduce the
+        monolithic kernel's selection (cursors must be multiples of it).
+        Families whose decode state is not a slot cache (recurrent
+        state) cannot resume mid-prompt and keep monolithic admission
+        (see ``core.dispatch``)."""
         raise NotImplementedError
 
     # -- mesh-native serving ------------------------------------------

@@ -232,13 +232,23 @@ class DenseLM(LM):
 
     def prefill_with_prefix(self, params, batch, state: DecodeState,
                             lane: jax.Array, prefix_len: jax.Array,
-                            aqua_proj=None):
+                            aqua_proj=None, select_q_blk=None):
         """Prefix-shared admission: prefill only the prompt *tail* —
         queries attend to the shared prefix K/V read from the lane's
         mapped pool pages (written by an earlier request's prefill), and
         only tail K/V is written, into the lane's private pages. The
         prefix is never recomputed and never written (copy-on-write
         territory starts at the page-aligned divergence point).
+
+        The same cache-extension step also serves *chunked* prefill
+        (``prefill_chunk`` alias): there ``prefix_len`` is the chunk
+        cursor and the "prefix" is simply the part of the same prompt an
+        earlier chunk already wrote. ``select_q_blk`` (static) switches
+        the AQUA dim-block selection to the block-sparse kernel's
+        per-tile aggregation — the chunked engine passes it for fresh
+        (non-prefix-shared) prompts so every chunk selects exactly the
+        blocks the monolithic kernel admission would (chunk cursors stay
+        q_blk-aligned).
         """
         cfg = self.cfg
         tokens = batch["tokens"]                       # (1, T_pad) tail
@@ -246,43 +256,56 @@ class DenseLM(LM):
         t = tokens.shape[1]
         x = L.embed(params["embed"], tokens, self.dtype)
         positions = prefix_len + jnp.arange(t, dtype=jnp.int32)[None]
-        ps = state.layers.k_pool.shape[3]   # stacked (L, P, KV, ps, Dk)
-        start_page = prefix_len // ps
+        paged = self._paging is not None
+        if paged:
+            ps = state.layers.k_pool.shape[3]  # stacked (L, P, KV, ps, Dk)
+            start_page = prefix_len // ps
         tail_count = (prefix_len + t if lengths is None
                       else prefix_len + lengths[0])
 
         def body(xc, layer_in):
             p_i, cache_i, proj_i = layer_in
-            tbl = cache_i.page_table[lane]             # (NP,)
-            pk = cache_i.k_pool[jnp.maximum(tbl, 0)]   # (NP, KV, ps, Dk)
-            pv = cache_i.v_pool[jnp.maximum(tbl, 0)]
-            ppos = cache_i.pos_pool[jnp.maximum(tbl, 0)]
-            ppos = jnp.where(tbl[:, None] >= 0, ppos, -1)
-            kvh = pk.shape[1]
             s_log = cache_i.num_slots
-            pk = pk.transpose(1, 0, 2, 3).reshape(1, kvh, s_log, -1)
-            pv = pv.transpose(1, 0, 2, 3).reshape(1, kvh, s_log, -1)
-            ppos = ppos.reshape(1, s_log)
+            if paged:
+                tbl = cache_i.page_table[lane]            # (NP,)
+                pk = cache_i.k_pool[jnp.maximum(tbl, 0)]  # (NP, KV, ps, Dk)
+                pv = cache_i.v_pool[jnp.maximum(tbl, 0)]
+                ppos = cache_i.pos_pool[jnp.maximum(tbl, 0)]
+                ppos = jnp.where(tbl[:, None] >= 0, ppos, -1)
+                kvh = pk.shape[1]
+                pk = pk.transpose(1, 0, 2, 3).reshape(1, kvh, s_log, -1)
+                pv = pv.transpose(1, 0, 2, 3).reshape(1, kvh, s_log, -1)
+                ppos = ppos.reshape(1, s_log)
+            else:
+                pk = cache_i.k[lane][None]                # (1, KV, S, Dk)
+                pv = cache_i.v[lane][None]
+                ppos = cache_i.positions[lane][None]      # (1, S)
             # trust only logical slots [0, prefix_len): the lane's private
-            # tail/decode pages are *recycled* pool pages that still hold
-            # a previous tenant's positions until paged_write_tail clears
-            # them (below, AFTER this read) — a stale position inside the
-            # prefix range would otherwise pass the prefix validity mask
-            # and attend over dead K/V. Full-cache policy: prefix token p
-            # lives at logical slot p, so the slot-index mask is exact.
+            # tail/decode slots are *recycled* (pool pages or a contiguous
+            # stripe) and still hold a previous tenant's positions until
+            # the write-tail below clears them AFTER this read — a stale
+            # position inside the prefix range would otherwise pass the
+            # prefix validity mask and attend over dead K/V. Full-cache
+            # policy: prefix token p lives at logical slot p, so the
+            # slot-index mask is exact.
             ppos = jnp.where(jnp.arange(s_log)[None] < prefix_len, ppos, -1)
             h_in = L.rms_norm(xc, p_i["ln1"], cfg.norm_eps)
             h, k_t, v_t = attn.prefixed_tail_attention(
                 p_i["attn"], h_in, cfg.attention, cfg.aqua, proj_i,
                 prefix_k=pk, prefix_v=pv, prefix_positions=ppos,
                 prefix_len=prefix_len, positions=positions,
-                lengths=lengths)
+                lengths=lengths, select_q_blk=select_q_blk)
             y = xc + h
             f, _ = ffn_apply(cfg, p_i["ffn"],
                              L.rms_norm(y, p_i["ln2"], cfg.norm_eps))
-            cache_i = kv.paged_write_tail(cache_i, lane, k_t[0], v_t[0],
-                                          positions[0], start_page,
-                                          tail_count)
+            if paged:
+                cache_i = kv.paged_write_tail(cache_i, lane, k_t[0], v_t[0],
+                                              positions[0], start_page,
+                                              tail_count)
+            else:
+                cache_i = kv.lane_write_tail(cache_i, lane, k_t[0], v_t[0],
+                                             positions[0], prefix_len,
+                                             tail_count)
             return y + f, cache_i
         if aqua_proj is None:
             x, caches = _scan(lambda c, pi: body(c, (pi[0], pi[1], None)),
@@ -299,6 +322,12 @@ class DenseLM(LM):
                                                   cfg.norm_eps))[:, 0]
         return logits, self.constrain_state(
             DecodeState(layers=caches, extra=state.extra))
+
+    # Chunked prefill advances a lane's cache by one page-aligned chunk:
+    # exactly a prefix-shared tail where the "prefix" is what earlier
+    # chunks of the same prompt already wrote (contiguous stripes reuse
+    # the same step via kv.lane_write_tail).
+    prefill_chunk = prefill_with_prefix
 
     def prefill(self, params, batch, max_seq: int,
                 aqua_proj: Optional[jax.Array] = None):

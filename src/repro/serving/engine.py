@@ -42,7 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import warnings
+import time
 from dataclasses import dataclass
 from typing import Dict, Iterable, Iterator, List, Optional
 
@@ -351,16 +351,49 @@ class ContinuousBatchingEngine:
         # the mesh_fallback_events() record stays empty
         self._plan: DispatchPlan = resolve_dispatch_plan(
             attention=cfg.attention, aqua=cfg.aqua, serving=serving,
-            mesh=self.mesh, prefix_sharing=self._prefix_ok)
+            mesh=self.mesh, prefix_sharing=self._prefix_ok,
+            family=cfg.family, frontend=cfg.frontend.kind)
         self._kernel_native = self._plan.mesh_native
         # per-engine mesh-fallback record: filled (and warning-deduped) by
         # the attention dispatch while this engine's steps trace, so each
         # engine owns its fallback report regardless of other engines in
         # the process (see attention.use_decode_mesh's fallback_sink)
         self._mesh_fallback: set = set()
+        self._state_sh = None
         admit_sh = step_sh = None
         if self.mesh is not None:
             admit_sh, step_sh = self._install_mesh()
+
+        # chunked-prefill interleaving: admissions longer than the token
+        # budget run as page-aligned chunks between decode steps (the
+        # PREFILLING lane state). The dispatch plan is the single gate —
+        # it folds in every policy/family predicate (see core.dispatch)
+        self._chunked = (serving.prefill_budget_tokens is not None
+                         and self._plan.chunked_prefill
+                         and self._supports_ragged)
+        # non-final chunks must keep the cursor aligned to the prompt
+        # bucket (ragged prefill batches) *and* the page size (paged tail
+        # writes address whole pages); the budget is validated to be a
+        # multiple of both
+        self._chunk_align = self.scfg.prompt_bucket
+        if self._paged:
+            self._chunk_align = math.lcm(self._chunk_align,
+                                         self.scfg.page_size)
+        # block-sparse kernel prefill: fresh-prompt chunks must reproduce
+        # the kernel's per-tile dim-block selection, so cursors also stay
+        # q_blk-aligned and the chunk step selects per tile
+        # (attention._chunk_tile_mask). Prefix-shared admissions keep the
+        # per-query selection their monolithic twin (_admit_prefix) uses.
+        self._tile_q_blk = None
+        if (self._chunked and self._plan.backend == "aqua-block-sparse"
+                and cfg.aqua is not None and cfg.aqua.enabled
+                and cfg.aqua.block_dims > 1
+                and (cfg.aqua.kept_dims(cfg.attention.head_dim)
+                     % cfg.aqua.block_dims == 0)
+                and (self.mesh is None or self._plan.mesh_native)):
+            self._tile_q_blk = cfg.aqua.prefill_q_blk
+            self._chunk_align = math.lcm(self._chunk_align,
+                                         self._tile_q_blk)
 
         # `use_top_k` is static: traffic without top-k compiles the decode
         # step without the per-row dynamic-threshold full-vocab sort
@@ -375,6 +408,21 @@ class ContinuousBatchingEngine:
                                      out_shardings=admit_sh)
         self._step = jax.jit(self._step_impl, static_argnames=("use_top_k",),
                              out_shardings=step_sh)
+        # chunk steps: non-final chunks only advance the lane's cache (no
+        # token sampled, lane bookkeeping untouched); the final chunk
+        # fuses the admission tail (first-token sampling) exactly like the
+        # monolithic admits. The paged first chunk also installs the
+        # allocator's page-table row (later chunks inherit it from state)
+        self._chunk = jax.jit(self._chunk_impl,
+                              static_argnames=("select_q_blk",),
+                              out_shardings=self._state_sh)
+        self._chunk_paged = jax.jit(self._chunk_paged_impl,
+                                    static_argnames=("select_q_blk",),
+                                    out_shardings=self._state_sh)
+        self._chunk_final = jax.jit(self._chunk_final_impl,
+                                    static_argnames=("use_top_k",
+                                                     "select_q_blk"),
+                                    out_shardings=admit_sh)
 
     def _install_mesh(self):
         """Shard params/projections, derive decode-state + lane-state
@@ -465,15 +513,6 @@ class ContinuousBatchingEngine:
             return None
         return (self._num_pages, self._pages_per_lane, self.scfg.page_size)
 
-    @property
-    def kernel_native(self) -> bool:
-        """Deprecated shim for ``dispatch_plan().mesh_native`` — kept one
-        release so callers migrate deliberately."""
-        warnings.warn(
-            "ContinuousBatchingEngine.kernel_native is deprecated; use "
-            "dispatch_plan().mesh_native", DeprecationWarning, stacklevel=2)
-        return self._plan.mesh_native
-
     # -- jitted bodies -------------------------------------------------
     def _finish_admit(self, logits, lanes: LaneState, lane, rng, max_new,
                       temperature, top_k, eos_id, uid, use_top_k):
@@ -545,6 +584,44 @@ class ContinuousBatchingEngine:
         state = self._set_table_row(state, lane, table_row)
         logits, state = self.model.prefill_with_prefix(
             params, batch, state, lane, prefix_len, aqua_proj=proj)
+        tok, done, lanes = self._finish_admit(logits, lanes, lane, rng,
+                                              max_new, temperature, top_k,
+                                              eos_id, uid, use_top_k)
+        return tok, done, state, lanes
+
+    def _chunk_impl(self, params, batch, state, lane, cursor, proj,
+                    select_q_blk=None):
+        """Advance one PREFILLING lane by a non-final prefill chunk: the
+        chunk's K/V lands in logical slots starting at ``cursor``; no
+        token is sampled and lane bookkeeping is untouched (the lane
+        emits nothing until the final chunk)."""
+        _, state = self.model.prefill_chunk(params, batch, state, lane,
+                                            cursor, aqua_proj=proj,
+                                            select_q_blk=select_q_blk)
+        return state
+
+    def _chunk_paged_impl(self, params, batch, state, lane, table_row,
+                          cursor, proj, select_q_blk=None):
+        """First paged chunk: install the allocator's page-table row,
+        then advance the lane (subsequent chunks read the row from
+        state)."""
+        state = self._set_table_row(state, lane, table_row)
+        _, state = self.model.prefill_chunk(params, batch, state, lane,
+                                            cursor, aqua_proj=proj,
+                                            select_q_blk=select_q_blk)
+        return state
+
+    def _chunk_final_impl(self, params, batch, state, lanes: LaneState,
+                          lane, cursor, proj, rng, max_new, temperature,
+                          top_k, eos_id, uid, use_top_k=True,
+                          select_q_blk=None):
+        """Final prefill chunk: advance the cache to the full prompt and
+        sample the request's first token — the chunked twin of the
+        monolithic admission tail."""
+        logits, state = self.model.prefill_chunk(params, batch, state,
+                                                 lane, cursor,
+                                                 aqua_proj=proj,
+                                                 select_q_blk=select_q_blk)
         tok, done, lanes = self._finish_admit(logits, lanes, lane, rng,
                                               max_new, temperature, top_k,
                                               eos_id, uid, use_top_k)
@@ -654,6 +731,78 @@ class ContinuousBatchingEngine:
             return None
         return shared, num_new
 
+    # -- chunked-prefill planning (host side) --------------------------
+    def _should_chunk(self, req: Request, page_plan) -> bool:
+        """Chunk this admission? Only when the engine interleaves, the
+        request is token-only, and the prefill actually exceeds the
+        budget — short prompts keep the monolithic admit (exact same
+        path as a non-chunked engine, kernel-capable under a mesh)."""
+        if not self._chunked or req.extra_inputs:
+            return False
+        prefix_len = 0
+        if self._paged and page_plan is not None:
+            prefix_len = len(page_plan[0]) * self.scfg.page_size
+        padded = self._padded_prompt_len(req.prompt_len - prefix_len,
+                                         self.scfg.max_seq - prefix_len)
+        return padded > self.scfg.prefill_budget_tokens
+
+    def _admit_chunked(self, sched: LaneScheduler, req: Request,
+                       page_plan) -> tuple:
+        """Admit a long prompt into a PREFILLING lane: reserve its pages
+        for the whole lifetime (paged) and set the chunk cursor. No
+        device work happens here — the serve loop spends the budget
+        chunk by chunk. Returns (lane, job) host bookkeeping."""
+        lane = sched.assign(req, prefilling=True)
+        job = {"req": req, "row": None, "row_set": False,
+               "register": False, "pages": None,
+               "select": self._tile_q_blk}
+        if self._paged:
+            shared, num_new = page_plan
+            pool = self.page_pool
+            pages = pool.reserve(lane, shared, num_new)
+            assert pages is not None      # _plan_pages checked can_reserve
+            row = np.full((self._pages_per_lane,), -1, np.int32)
+            row[:len(pages)] = pages
+            job["row"] = jnp.asarray(row)
+            job["pages"] = pages
+            # prefix registration is deferred until the final chunk has
+            # written the whole prompt: sharers read shared pages at
+            # admission, so a half-written prompt must stay unindexed
+            job["register"] = self._prefix_ok and not req.extra_inputs
+            if shared:
+                prefix_len = len(shared) * self.scfg.page_size
+                pool.prefix_hits += 1
+                pool.tokens_saved += prefix_len
+                sched.begin_prefill(lane, prefix_len, req.prompt_len)
+                # prefix-shared chunks match _admit_prefix's per-query
+                # selection (the shared-prefix cursor is page-, not
+                # necessarily q_blk-aligned)
+                job["select"] = None
+        return lane, job
+
+    def _chunk_padded_len(self, cursor: int, count: int) -> int:
+        """Tokens a chunk's prefill batch holds after bucket padding —
+        the chunk's budget cost (mirrors ``_prefill_batch``'s padding,
+        clamped so the padded tail never writes past the cache)."""
+        bucket = self.scfg.prompt_bucket
+        padded = max(bucket, ((count + bucket - 1) // bucket) * bucket)
+        cap = self._num_slots if self._paged else self.scfg.max_seq
+        return min(padded, cap - cursor)
+
+    def _chunk_batch(self, req: Request, cursor: int,
+                     count: int) -> Dict[str, jax.Array]:
+        """Prefill batch for prompt tokens [cursor, cursor + count):
+        bucket-padded with ragged ``lengths``. Non-final chunks are
+        align-sized (multiples of lcm(prompt_bucket, page_size)) so their
+        padding is empty and the next cursor stays page-aligned; only the
+        final chunk is ragged."""
+        toks = np.asarray(req.tokens, np.int32)
+        padded_len = self._chunk_padded_len(cursor, count)
+        padded = np.zeros((1, padded_len), np.int32)
+        padded[0, :count] = toks[cursor:cursor + count]
+        return {"tokens": jnp.asarray(padded),
+                "lengths": jnp.asarray([count], jnp.int32)}
+
     def _dispatch_admit(self, req: Request, lane: int, state, lanes, rng,
                         use_top_k: bool, page_plan=None):
         """Run the right jitted admission step for ``req`` (contiguous,
@@ -714,7 +863,16 @@ class ContinuousBatchingEngine:
         """Drive a trace of requests to completion, yielding one
         ``StreamEvent`` per generated token (in emission order). Aggregate
         trace statistics land in ``self.stats``; pool statistics (paged
-        mode) in ``self.page_pool``."""
+        mode) in ``self.page_pool``.
+
+        Chunked-prefill interleaving (``prefill_budget_tokens`` set and
+        the dispatch plan admits it): prompts whose padded prefill
+        exceeds the budget are admitted immediately into PREFILLING lanes
+        and advance by at most the budget between decode steps, so a
+        decoding lane never stalls behind a monolithic prefill longer
+        than one chunk. Tokens are greedy-identical to monolithic
+        admission — sampling keys fold the request uid and token counter,
+        and chunk boundaries never change what a token computes."""
         sched = LaneScheduler(self.scfg.max_lanes,
                               lane_order=self._lane_order)
         use_top_k = False
@@ -739,78 +897,186 @@ class ContinuousBatchingEngine:
         stats = ScheduleStats()
         self.stats = stats
         emitted_count: Dict[int, int] = {}
+        last_emit: Dict[int, float] = {}   # uid -> perf_counter of last yield
+        jobs: Dict[int, dict] = {}         # PREFILLING lanes' bookkeeping
+        budget = self.scfg.prefill_budget_tokens
         now = 0.0
 
         def finish_reason(tok: int, req: Request) -> str:
             return "eos" if (req.eos_id is not None and req.eos_id >= 0
                              and tok == req.eos_id) else "length"
 
+        def record_emit(uid: int) -> None:
+            t = time.perf_counter()
+            if uid in last_emit:
+                stats.itl_gaps.append(t - last_emit[uid])
+            last_emit[uid] = t
+
+        def first_token(req: Request, lane: int, tok, done) -> StreamEvent:
+            t, d = int(tok[0]), bool(done[0])
+            stats.tokens_emitted += 1
+            emitted_count[req.uid] = 1
+            record_emit(req.uid)
+            if d:
+                self._retire(sched, lane)
+                stats.requests_finished += 1
+                last_emit.pop(req.uid, None)
+            return StreamEvent(req.uid, t, 0, d,
+                               finish_reason(t, req) if d else "")
+
         while sched.has_work:
-            # admissions: fill free lanes with every arrived request (in
-            # paged mode, only while the page pool covers the request's
-            # whole lifetime — otherwise it waits for lanes to retire and
-            # free pages: workload-to-memory scheduling, not OOM)
+            # admissions: fill free lanes with every arrived request. In
+            # paged mode a request only admits while the page pool covers
+            # its whole lifetime (workload-to-memory scheduling, not OOM);
+            # when the queue head can't fit, up to ``admission_lookahead``
+            # later arrivals may admit first (bounded first-fit, no
+            # head-of-line blocking) and the head keeps its exact queue
+            # position for the next pass.
             while True:
-                req = sched.pop_admissible(now)
-                if req is None:
-                    break
-                page_plan = None
-                if self._paged:
-                    page_plan = self._plan_pages(req)
-                    if page_plan is None:
-                        sched.unpop(req)
-                        if sched.num_active == 0:
-                            raise RuntimeError(
-                                f"page pool ({self._num_pages} pages of "
-                                f"{self.scfg.page_size}) cannot fit request "
-                                f"{req.uid} even with every lane free — "
-                                "raise ServingConfig.num_pages")
+                req, page_plan, skip = None, None, 0
+                unbounded = sched.num_active == 0   # nothing will retire
+                while True:
+                    cand = sched.pop_admissible(now, skip=skip)
+                    if cand is None:
                         break
+                    plan = None
+                    if self._paged:
+                        plan = self._plan_pages(cand)
+                        if plan is None:
+                            sched.unpop(cand)
+                            skip += 1
+                            if (not unbounded
+                                    and skip >= self.scfg.admission_lookahead):
+                                break
+                            continue
+                    req, page_plan = cand, plan
+                    break
+                if req is None:
+                    if skip > 0 and sched.num_active == 0:
+                        raise RuntimeError(
+                            f"page pool ({self._num_pages} pages of "
+                            f"{self.scfg.page_size}) cannot fit any of the "
+                            f"{skip} arrived request(s) even with every "
+                            "lane free — raise ServingConfig.num_pages")
+                    break
+                if self._should_chunk(req, page_plan):
+                    lane, job = self._admit_chunked(sched, req, page_plan)
+                    jobs[lane] = job
+                    stats.chunked_admissions += 1
+                    continue
                 lane = sched.assign(req)
                 tok, done, state, lanes = self._dispatch_admit(
                     req, lane, state, lanes, rng, use_top_k,
                     page_plan=page_plan)
                 self.last_state, self.last_lanes = state, lanes
-                t, d = int(tok[0]), bool(done[0])
-                stats.tokens_emitted += 1
-                emitted_count[req.uid] = 1
-                if d:
-                    self._retire(sched, lane)
-                    stats.requests_finished += 1
-                yield StreamEvent(req.uid, t, 0, d,
-                                  finish_reason(t, req) if d else "")
+                yield first_token(req, lane, tok, done)
             if sched.num_active == 0:
                 if sched.has_pending:
                     now = max(now, sched.next_arrival)   # idle-jump
                     continue
                 break
 
-            with self._use_mesh():
-                state, lanes, tok, emitted, done = self._step(
-                    self.params, state, lanes, self.proj, rng,
-                    use_top_k=use_top_k)
-            self.last_state, self.last_lanes = state, lanes
-            tok_h = np.asarray(tok)
-            em_h = np.asarray(emitted)
-            done_h = np.asarray(done)
-            stats.decode_steps += 1
-            stats.occupancy_sum += int(em_h.sum())
-            if self._paged:
-                self.page_pool.sample_utilization()
-            now += 1.0
-            for lane in sched.active_lanes():
-                if not em_h[lane]:
-                    continue
-                req = sched.request_in(lane)
-                t, d = int(tok_h[lane]), bool(done_h[lane])
-                idx = emitted_count[req.uid]
-                emitted_count[req.uid] = idx + 1
-                stats.tokens_emitted += 1
-                if d:
-                    self._retire(sched, lane)
-                    stats.requests_finished += 1
-                yield StreamEvent(req.uid, t, idx, d,
-                                  finish_reason(t, req) if d else "")
+            # spend the prefill budget on PREFILLING lanes, oldest first
+            # (strict FIFO: when the oldest lane's next chunk doesn't fit
+            # the remaining budget, younger lanes wait too — no
+            # starvation). The final chunk fuses first-token sampling and
+            # flips the lane to DECODING.
+            if self._chunked and sched.num_prefilling > 0:
+                left = budget
+                for lane in sched.prefilling_lanes():
+                    job = jobs[lane]
+                    req = job["req"]
+                    cursor = sched.prefill_cursor(lane)
+                    rem = sched.prefill_remaining(lane)
+                    if rem > left:
+                        # non-final chunk, align-sized so the next cursor
+                        # stays bucket- and page-aligned
+                        n = (left // self._chunk_align) * self._chunk_align
+                        if n <= 0:
+                            break
+                        batch = self._chunk_batch(req, cursor, n)
+                        with self._use_mesh():
+                            if (job["row"] is not None
+                                    and not job["row_set"]):
+                                state = self._chunk_paged(
+                                    self.params, batch, state,
+                                    jnp.int32(lane), job["row"],
+                                    jnp.int32(cursor), self.proj,
+                                    select_q_blk=job["select"])
+                                job["row_set"] = True
+                            else:
+                                state = self._chunk(
+                                    self.params, batch, state,
+                                    jnp.int32(lane), jnp.int32(cursor),
+                                    self.proj,
+                                    select_q_blk=job["select"])
+                        self.last_state = state
+                        sched.advance_prefill(lane, n)
+                        stats.prefill_chunks += 1
+                        left -= n
+                        if left <= 0:
+                            break
+                        continue
+                    padded = self._chunk_padded_len(cursor, rem)
+                    if padded > left:
+                        break
+                    batch = self._chunk_batch(req, cursor, rem)
+                    jobs.pop(lane)
+                    with self._use_mesh():
+                        tok, done, state, lanes = self._chunk_final(
+                            self.params, batch, state, lanes,
+                            jnp.int32(lane), jnp.int32(cursor), self.proj,
+                            rng, req.max_new_tokens, req.temperature,
+                            req.top_k, req.eos_id, req.uid,
+                            use_top_k=use_top_k,
+                            select_q_blk=job["select"])
+                    self.last_state, self.last_lanes = state, lanes
+                    sched.advance_prefill(lane, rem)
+                    sched.mark_decoding(lane)
+                    stats.prefill_chunks += 1
+                    left -= padded
+                    if job["register"]:
+                        self.page_pool.register_prefix(
+                            req.tokens, job["pages"], req.prompt_len)
+                    yield first_token(req, lane, tok, done)
+                    if left <= 0:
+                        break
+
+            # decode step over the DECODING lanes (PREFILLING lanes ride
+            # along frozen under the write_mask). Skipped while only
+            # prefills are in flight — time still advances, so arrivals
+            # keep flowing while a long prompt chunks in.
+            if sched.num_decoding > 0:
+                with self._use_mesh():
+                    state, lanes, tok, emitted, done = self._step(
+                        self.params, state, lanes, self.proj, rng,
+                        use_top_k=use_top_k)
+                self.last_state, self.last_lanes = state, lanes
+                tok_h = np.asarray(tok)
+                em_h = np.asarray(emitted)
+                done_h = np.asarray(done)
+                stats.decode_steps += 1
+                stats.occupancy_sum += int(em_h.sum())
+                if self._paged:
+                    self.page_pool.sample_utilization()
+                now += 1.0
+                for lane in sched.decoding_lanes():
+                    if not em_h[lane]:
+                        continue
+                    req = sched.request_in(lane)
+                    t, d = int(tok_h[lane]), bool(done_h[lane])
+                    idx = emitted_count[req.uid]
+                    emitted_count[req.uid] = idx + 1
+                    stats.tokens_emitted += 1
+                    record_emit(req.uid)
+                    if d:
+                        self._retire(sched, lane)
+                        stats.requests_finished += 1
+                        last_emit.pop(req.uid, None)
+                    yield StreamEvent(req.uid, t, idx, d,
+                                      finish_reason(t, req) if d else "")
+            else:
+                now += 1.0
 
     def run(self, requests: Iterable[Request]
             ) -> Dict[int, RequestOutput]:

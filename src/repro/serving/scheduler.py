@@ -9,14 +9,24 @@ compiled step.
 Request lifecycle::
 
     submit --> pending (arrival-ordered) --> admitted into a free *lane*
-           --> decoding (one token per engine step) --> retired
+           --> [PREFILLING (chunked admission, no tokens emitted) -->]
+               DECODING (one token per engine step) --> retired
                (EOS, length limit) --> lane freed for the next request
 
 A *lane* is one batch row of the engine's shared decode state; the
 number of lanes is fixed (``ServingConfig.max_lanes``) so the decode
 step always runs at a static, jit-friendly shape regardless of how many
 requests are in flight.
+
+Chunked prefill (``ServingConfig.prefill_budget_tokens``) admits a long
+prompt immediately into a ``LANE_PREFILLING`` lane: the engine advances
+its per-lane *prefill cursor* by at most the token budget between decode
+steps, and the lane transitions to ``LANE_DECODING`` (first token
+sampled) only when the cursor reaches the prompt length. The scheduler
+owns the cursor bookkeeping and the state machine; the engine owns the
+device work and the budget spending loop.
 """
+
 from __future__ import annotations
 
 import bisect
@@ -25,6 +35,10 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+# Lane states (``LaneScheduler.lane_state``). A free lane has state None.
+LANE_PREFILLING = "prefilling"
+LANE_DECODING = "decoding"
 
 
 @dataclass
@@ -38,8 +52,8 @@ class Request:
     """
 
     uid: int
-    tokens: np.ndarray                      # (S,) int32 prompt
-    max_new_tokens: Optional[int] = None    # includes the prefill-sampled token
+    tokens: np.ndarray  # (S,) int32 prompt
+    max_new_tokens: Optional[int] = None  # includes the prefill-sampled token
     temperature: Optional[float] = None
     top_k: Optional[int] = None
     eos_id: Optional[int] = None
@@ -62,7 +76,7 @@ class StreamEvent:
     token: int
     index: int
     finished: bool = False
-    finish_reason: str = ""                 # "eos" | "length" when finished
+    finish_reason: str = ""  # "eos" | "length" when finished
 
 
 @dataclass
@@ -73,7 +87,7 @@ class RequestOutput:
     prompt_len: int
     tokens: List[int] = field(default_factory=list)
     finish_reason: str = ""
-    admitted_at: int = -1                   # engine step counter at admission
+    admitted_at: int = -1  # engine step counter at admission
     finished_at: int = -1
 
 
@@ -84,11 +98,35 @@ class ScheduleStats:
     decode_steps: int = 0
     tokens_emitted: int = 0
     requests_finished: int = 0
-    occupancy_sum: int = 0                  # sum over steps of active lanes
+    occupancy_sum: int = 0  # sum over steps of active lanes
+    # chunked-prefill interleaving
+    prefill_chunks: int = 0  # chunk steps executed between decode steps
+    chunked_admissions: int = 0  # requests admitted in PREFILLING state
+    # wall-clock gaps between consecutive emitted tokens of one request,
+    # in seconds (every request's gaps pooled) — the tail of this
+    # distribution is what chunked prefill exists to cut
+    itl_gaps: List[float] = field(default_factory=list)
 
     @property
     def mean_occupancy(self) -> float:
         return self.occupancy_sum / max(self.decode_steps, 1)
+
+    @property
+    def max_itl(self) -> float:
+        return max(self.itl_gaps) if self.itl_gaps else 0.0
+
+    def itl_percentile(self, pct: float) -> float:
+        """Inter-token latency percentile in seconds (0 if no gaps)."""
+        if not self.itl_gaps:
+            return 0.0
+        return float(np.percentile(np.asarray(self.itl_gaps), pct))
+
+    def slo_miss_rate(self, threshold_s: float) -> float:
+        """Fraction of inter-token gaps exceeding ``threshold_s``."""
+        if not self.itl_gaps:
+            return 0.0
+        misses = sum(1 for g in self.itl_gaps if g > threshold_s)
+        return misses / len(self.itl_gaps)
 
 
 class LaneScheduler:
@@ -106,18 +144,24 @@ class LaneScheduler:
     device step is oblivious to which lanes are preferred.
     """
 
-    def __init__(self, max_lanes: int,
-                 lane_order: Optional[Sequence[int]] = None):
+    def __init__(self, max_lanes: int, lane_order: Optional[Sequence[int]] = None):
         assert max_lanes >= 1
         self.max_lanes = max_lanes
         self._pending: List[Request] = []
-        self._keys: List[tuple] = []        # (arrival, seq) sort keys
+        self._keys: List[tuple] = []  # (arrival, seq) sort keys
         self._seq = 0
         self._lane_req: List[Optional[Request]] = [None] * max_lanes
-        order = (list(range(max_lanes)) if lane_order is None
-                 else list(lane_order))
-        assert sorted(order) == list(range(max_lanes)), \
-            f"lane_order must permute 0..{max_lanes - 1}: {lane_order}"
+        self._lane_state: List[Optional[str]] = [None] * max_lanes
+        # chunked-prefill cursors: prompt tokens already written / total,
+        # keyed by lane; ``_prefill_order`` keeps admission (FIFO) order
+        # so the engine spends its per-step budget oldest-first
+        self._prefill_cursor: Dict[int, int] = {}
+        self._prefill_target: Dict[int, int] = {}
+        self._prefill_order: List[int] = []
+        order = list(range(max_lanes)) if lane_order is None else list(lane_order)
+        assert sorted(order) == list(
+            range(max_lanes)
+        ), f"lane_order must permute 0..{max_lanes - 1}: {lane_order}"
         # stack: pop() assigns, so the preferred-first order goes reversed
         self._free: List[int] = order[::-1]
 
@@ -143,6 +187,14 @@ class LaneScheduler:
         return self.max_lanes - len(self._free)
 
     @property
+    def num_decoding(self) -> int:
+        return sum(1 for s in self._lane_state if s == LANE_DECODING)
+
+    @property
+    def num_prefilling(self) -> int:
+        return len(self._prefill_order)
+
+    @property
     def next_arrival(self) -> Optional[float]:
         return self._keys[0][0] if self._keys else None
 
@@ -154,34 +206,94 @@ class LaneScheduler:
     def active_lanes(self) -> List[int]:
         return [i for i, r in enumerate(self._lane_req) if r is not None]
 
+    def lane_state(self, lane: int) -> Optional[str]:
+        return self._lane_state[lane]
+
+    def decoding_lanes(self) -> List[int]:
+        return [
+            i for i, s in enumerate(self._lane_state) if s == LANE_DECODING
+        ]
+
+    def prefilling_lanes(self) -> List[int]:
+        """Lanes with an in-flight chunked prefill, in admission order."""
+        return list(self._prefill_order)
+
     # -- admission / retirement ---------------------------------------
-    def pop_admissible(self, now: float) -> Optional[Request]:
-        """Next pending request that has arrived, if a lane is free."""
-        if not self._free or not self._pending:
+    def pop_admissible(self, now: float, skip: int = 0) -> Optional[Request]:
+        """Pop the (``skip``+1)-th pending request that has arrived, if a
+        lane is free. ``skip`` > 0 is the head-of-line lookahead: when the
+        queue head cannot be admitted (page pool exhausted), the engine
+        retries with increasing ``skip`` so later small requests are not
+        blocked by a large head (first-fit within a bounded window)."""
+        if not self._free or len(self._pending) <= skip:
             return None
-        if self._keys[0][0] > now:
+        if self._keys[skip][0] > now:
             return None
-        key = self._keys.pop(0)
-        self._last_key = key
-        return self._pending.pop(0)
+        self._last_key = self._keys.pop(skip)
+        return self._pending.pop(skip)
 
     def unpop(self, req: Request) -> None:
-        """Return the most recently popped request to the head of the
-        queue (admission resource check failed — e.g. the page pool can't
-        fit it yet). It stays first among equal arrivals."""
+        """Return the most recently popped request to its exact previous
+        queue position (admission resource check failed — e.g. the page
+        pool can't fit it yet). Keys are unique, so bisect restores the
+        original order among equal arrivals."""
         key = getattr(self, "_last_key", (float(req.arrival), -1))
-        self._keys.insert(0, key)
-        self._pending.insert(0, req)
+        i = bisect.bisect_left(self._keys, key)
+        self._keys.insert(i, key)
+        self._pending.insert(i, req)
 
-    def assign(self, req: Request) -> int:
+    def assign(self, req: Request, prefilling: bool = False) -> int:
         lane = self._free.pop()
         self._lane_req[lane] = req
+        self._lane_state[lane] = LANE_PREFILLING if prefilling else LANE_DECODING
+        if prefilling:
+            self._prefill_cursor[lane] = 0
+            self._prefill_target[lane] = req.prompt_len
+            self._prefill_order.append(lane)
         return lane
+
+    # -- chunked-prefill state machine --------------------------------
+    def begin_prefill(self, lane: int, cursor: int, target: int) -> None:
+        """Set the cursor window for a PREFILLING lane: ``cursor`` tokens
+        already in the cache (a shared prefix), ``target`` total prompt
+        tokens to reach."""
+        assert self._lane_state[lane] == LANE_PREFILLING, lane
+        assert 0 <= cursor < target, (cursor, target)
+        self._prefill_cursor[lane] = cursor
+        self._prefill_target[lane] = target
+
+    def prefill_cursor(self, lane: int) -> int:
+        return self._prefill_cursor[lane]
+
+    def prefill_remaining(self, lane: int) -> int:
+        return self._prefill_target[lane] - self._prefill_cursor[lane]
+
+    def advance_prefill(self, lane: int, num_tokens: int) -> None:
+        """Record ``num_tokens`` prompt tokens written by one chunk."""
+        assert self._lane_state[lane] == LANE_PREFILLING, lane
+        assert num_tokens >= 1, num_tokens
+        cur = self._prefill_cursor[lane] + num_tokens
+        assert cur <= self._prefill_target[lane], (cur, lane)
+        self._prefill_cursor[lane] = cur
+
+    def mark_decoding(self, lane: int) -> None:
+        """PREFILLING -> DECODING transition (final chunk done, first
+        token sampled). The cursor must have reached the prompt length."""
+        assert self._lane_state[lane] == LANE_PREFILLING, lane
+        assert self._prefill_cursor[lane] == self._prefill_target[lane], lane
+        self._lane_state[lane] = LANE_DECODING
+        self._prefill_cursor.pop(lane)
+        self._prefill_target.pop(lane)
+        self._prefill_order.remove(lane)
 
     def retire(self, lane: int) -> Request:
         req = self._lane_req[lane]
         assert req is not None, f"retiring free lane {lane}"
+        assert (
+            self._lane_state[lane] == LANE_DECODING
+        ), f"retiring lane {lane} mid-prefill"
         self._lane_req[lane] = None
+        self._lane_state[lane] = None
         self._free.append(lane)
         return req
 
@@ -211,8 +323,7 @@ class PagePool:
       * the free list and the mapped set partition the pool.
     """
 
-    def __init__(self, num_pages: int, page_size: int, *,
-                 prefix_sharing: bool = True):
+    def __init__(self, num_pages: int, page_size: int, *, prefix_sharing: bool = True):
         assert num_pages >= 1 and page_size >= 1
         self.num_pages = num_pages
         self.page_size = page_size
@@ -257,8 +368,7 @@ class PagePool:
 
     # -- prefix sharing ------------------------------------------------
     @staticmethod
-    def _chain_digests(tokens, num_pages: int, page_size: int
-                       ) -> List[bytes]:
+    def _chain_digests(tokens, num_pages: int, page_size: int) -> List[bytes]:
         """Rolling chain digests, one per full page:
         ``digest_i = sha1(digest_{i-1} || page_i_tokens)``. Cumulative —
         two prompts share page ``i`` only when *all* earlier tokens match
@@ -268,8 +378,7 @@ class PagePool:
         out: List[bytes] = []
         d = b"aqua-page-chain"
         for i in range(num_pages):
-            page = np.ascontiguousarray(
-                toks[i * page_size:(i + 1) * page_size])
+            page = np.ascontiguousarray(toks[i * page_size : (i + 1) * page_size])
             d = hashlib.sha1(d + page.tobytes()).digest()
             out.append(d)
         return out
@@ -282,24 +391,25 @@ class PagePool:
             return []
         toks = np.asarray(tokens, np.int32)
         shared: List[int] = []
-        for key in self._chain_digests(toks, len(toks) // self.page_size,
-                                       self.page_size):
+        for key in self._chain_digests(
+            toks, len(toks) // self.page_size, self.page_size
+        ):
             pid = self._prefix_index.get(key)
             if pid is None:
                 break
             shared.append(pid)
         return shared
 
-    def register_prefix(self, tokens, pages: Sequence[int],
-                        prompt_len: int) -> None:
+    def register_prefix(self, tokens, pages: Sequence[int], prompt_len: int) -> None:
         """Index the full pages covered by ``prompt_len`` of a freshly
         prefilled prompt for future sharing. First writer wins: an already
         indexed chain keeps its existing physical page."""
         if not self.prefix_sharing:
             return
         toks = np.asarray(tokens, np.int32)
-        digests = self._chain_digests(toks, prompt_len // self.page_size,
-                                      self.page_size)
+        digests = self._chain_digests(
+            toks, prompt_len // self.page_size, self.page_size
+        )
         for i, key in enumerate(digests):
             if key in self._prefix_index:
                 continue
@@ -308,8 +418,9 @@ class PagePool:
             self._page_key[pid] = key
 
     # -- reserve / release --------------------------------------------
-    def reserve(self, lane: int, shared_pages: Sequence[int],
-                num_new: int) -> Optional[List[int]]:
+    def reserve(
+        self, lane: int, shared_pages: Sequence[int], num_new: int
+    ) -> Optional[List[int]]:
         """Map ``shared_pages`` (increfed) plus ``num_new`` fresh pages
         into ``lane``. Returns the lane's full page list in logical order,
         or None (nothing changed) when the free list can't cover it."""
@@ -322,7 +433,7 @@ class PagePool:
             self.refcount[p] += 1
         self._lane_pages[lane] = pages
         self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
-        return list(pages)   # snapshot: make_private may remap the lane
+        return list(pages)  # snapshot: make_private may remap the lane
 
     def release(self, lane: int) -> None:
         """Unmap a retired lane: decref its pages; pages reaching
@@ -337,8 +448,7 @@ class PagePool:
                     self._prefix_index.pop(key, None)
                 self._free.append(p)
 
-    def make_private(self, lane: int, logical_page: int
-                     ) -> Optional[Tuple[int, int]]:
+    def make_private(self, lane: int, logical_page: int) -> Optional[Tuple[int, int]]:
         """Copy-on-write: give ``lane`` a private copy of its
         ``logical_page`` if that page is shared (refcount > 1). Returns
         ``(old_phys, new_phys)`` for the caller to copy device-side, or
@@ -358,10 +468,16 @@ class PagePool:
         return old, new
 
 
-def poisson_trace(num_requests: int, *, mean_interarrival: float,
-                  prompt_lens: tuple, max_new_tokens: int,
-                  vocab_size: int, seed: int = 0,
-                  temperature: float = 0.0) -> List[Request]:
+def poisson_trace(
+    num_requests: int,
+    *,
+    mean_interarrival: float,
+    prompt_lens: tuple,
+    max_new_tokens: int,
+    vocab_size: int,
+    seed: int = 0,
+    temperature: float = 0.0,
+) -> List[Request]:
     """Synthetic mixed-traffic trace: Poisson arrivals (exponential
     inter-arrival times in decode-step units), prompt lengths cycled from
     ``prompt_lens``, random token prompts. Used by ``launch/serve.py``
@@ -372,7 +488,13 @@ def poisson_trace(num_requests: int, *, mean_interarrival: float,
         t += float(rng.exponential(mean_interarrival))
         s = int(prompt_lens[i % len(prompt_lens)])
         toks = rng.integers(0, vocab_size, size=(s,), dtype=np.int32)
-        reqs.append(Request(uid=i, tokens=toks,
-                            max_new_tokens=max_new_tokens,
-                            temperature=temperature, arrival=t))
+        reqs.append(
+            Request(
+                uid=i,
+                tokens=toks,
+                max_new_tokens=max_new_tokens,
+                temperature=temperature,
+                arrival=t,
+            )
+        )
     return reqs

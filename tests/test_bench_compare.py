@@ -88,3 +88,40 @@ def test_anchor_present_rows_still_gate_deterministic_metrics():
     fresh = _table([("kernel/aqua_decode_k0.5", "hbm_bytes_ratio=0.900")])
     rows = {(n, m): ok for n, m, _, _, ok in _run(base, fresh)}
     assert rows[("kernel/aqua_decode_k0.5", "hbm_bytes_ratio")] is False
+
+
+def test_interleave_gate_compares_within_fresh_dump():
+    """The chunked-prefill row must beat monolithic on p99 ITL and
+    SLO-miss *within the fresh file* (machine speed cancels) while
+    holding throughput within the threshold."""
+    mono = "tok_s=1000.0 p50_itl_ms=1.00 p99_itl_ms=8.00 slo_miss=0.100"
+    base = _table(
+        [
+            ("serving/interleave-monolithic", mono),
+            ("serving/interleave-chunked",
+             "tok_s=950.0 p50_itl_ms=0.90 p99_itl_ms=3.00 slo_miss=0.000"),
+        ]
+    )
+    good = _table(
+        [
+            ("serving/interleave-monolithic", mono),
+            ("serving/interleave-chunked",
+             "tok_s=900.0 p50_itl_ms=0.90 p99_itl_ms=4.00 slo_miss=0.050"),
+        ]
+    )
+    rows = {(n, m): ok for n, m, _, _, ok in _run(base, good)}
+    assert rows[("serving/interleave-chunked", "p99_itl_vs_mono")] is True
+    assert rows[("serving/interleave-chunked", "slo_miss_vs_mono")] is True
+    assert rows[("serving/interleave-chunked", "tok_s_vs_mono")] is True
+    # a chunked row whose tail latency regressed past monolithic fails
+    bad = _table(
+        [
+            ("serving/interleave-monolithic", mono),
+            ("serving/interleave-chunked",
+             "tok_s=700.0 p50_itl_ms=0.90 p99_itl_ms=9.00 slo_miss=0.200"),
+        ]
+    )
+    rows = {(n, m): ok for n, m, _, _, ok in _run(base, bad)}
+    assert rows[("serving/interleave-chunked", "p99_itl_vs_mono")] is False
+    assert rows[("serving/interleave-chunked", "slo_miss_vs_mono")] is False
+    assert rows[("serving/interleave-chunked", "tok_s_vs_mono")] is False

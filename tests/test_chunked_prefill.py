@@ -1,0 +1,234 @@
+"""Chunked-prefill/decode interleaving: token identity vs the
+monolithic-admit engine (chunking must change *when* work happens, never
+*what* is computed), the chunk-resumable kernel entry, and the bounded
+head-of-line admission lookahead.
+
+Greedy identity is checked for every backend × cache-layout × mesh
+combination the interleaved path serves: the jnp reference backends use
+per-query dim selection (position-pure, trivially chunk-invariant) while
+``aqua-block-sparse`` reproduces the kernel's per-tile |q̂| aggregation
+(``attention._chunk_tile_mask``), which requires the budget to land on
+``prefill_q_blk`` tile boundaries — the geometry the dispatch plan's
+``REASON_CHUNK_GEOMETRY`` gate enforces.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced
+from repro.configs.base import AquaConfig, ServingConfig
+from repro.core.calibration import identity_projections
+from repro.models import build_model
+from repro.serving import ContinuousBatchingEngine, Request
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = dataclasses.replace(reduced("qwen3-0.6b"), remat=False,
+                              dtype="float32")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _trace(cfg, n=5, max_new=6, seed=3, lo=20, hi=60):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    tokens=rng.integers(0, cfg.vocab_size,
+                                        size=(int(rng.integers(lo, hi)),),
+                                        dtype=np.int32),
+                    max_new_tokens=max_new, arrival=float(i) * 0.25)
+            for i in range(n)]
+
+
+SCFG = ServingConfig(max_lanes=4, max_seq=96, max_new_tokens=6,
+                     prompt_bucket=8)
+PSCFG = dataclasses.replace(SCFG, page_size=8, num_pages=48)
+
+# budget 16 < every padded prompt in the trace, so admissions really
+# chunk; prefill_q_blk=16 keeps the block-sparse kernel's selection
+# tiles on chunk boundaries (else the plan falls back to monolithic)
+POLICIES = {
+    "dense-jnp": dict(aqua=None, backend="dense-jnp"),
+    "aqua-masked-dense": dict(
+        aqua=AquaConfig(k_ratio=0.75, block_dims=1), backend="aqua-masked-dense"),
+    "aqua-block-sparse": dict(
+        aqua=AquaConfig(k_ratio=0.5, block_dims=8, prefill_q_blk=16),
+        backend="aqua-block-sparse"),
+}
+
+
+def _engine(dense_model, policy, scfg, budget=None, mesh=None):
+    cfg, params = dense_model
+    spec = POLICIES[policy]
+    cfg = dataclasses.replace(cfg, aqua=spec["aqua"])
+    if budget is not None:
+        scfg = dataclasses.replace(scfg, prefill_budget_tokens=budget)
+    proj = None
+    if spec["aqua"] is not None:
+        proj = identity_projections(cfg.num_layers,
+                                    cfg.attention.num_kv_heads,
+                                    cfg.attention.head_dim)
+    return ContinuousBatchingEngine(cfg, params, proj, serving=scfg,
+                                    backend=spec["backend"], mesh=mesh)
+
+
+@pytest.mark.parametrize("layout", ["contiguous", "paged"])
+@pytest.mark.parametrize("policy", list(POLICIES))
+def test_chunked_token_identity(dense_model, policy, layout):
+    """Greedy tokens from an interleaved drive must be identical to the
+    monolithic-admit engine for every backend × cache layout."""
+    cfg, _ = dense_model
+    scfg = SCFG if layout == "contiguous" else PSCFG
+    reqs = _trace(cfg)
+    mono = _engine(dense_model, policy, scfg)
+    chunk = _engine(dense_model, policy, scfg, budget=16)
+    plan = chunk.dispatch_plan()
+    assert plan.chunked_prefill, plan.chunked_reasons
+    outs_m = mono.run([dataclasses.replace(r) for r in reqs])
+    outs_c = chunk.run([dataclasses.replace(r) for r in reqs])
+    for uid in outs_m:
+        assert outs_m[uid].tokens == outs_c[uid].tokens, (policy, layout, uid)
+    st = chunk.stats
+    assert st.chunked_admissions == len(reqs)
+    assert st.prefill_chunks > st.chunked_admissions  # really interleaved
+
+
+def test_chunk_geometry_guard(dense_model):
+    """A budget off the kernel's q-chunk tile must keep monolithic
+    admission (attributed), not silently change the selection."""
+    from repro.core.dispatch import REASON_CHUNK_GEOMETRY
+    eng = _engine(dense_model, "aqua-block-sparse",
+                  dataclasses.replace(SCFG, prompt_bucket=8), budget=24)
+    plan = eng.dispatch_plan()
+    assert not plan.chunked_prefill
+    assert REASON_CHUNK_GEOMETRY in plan.chunked_reasons
+
+
+@pytest.mark.parametrize("policy", ["dense-jnp", "aqua-block-sparse"])
+def test_chunked_token_identity_mesh2x2(dense_model, policy):
+    """Interleaving under the serving mesh (incl. the shard_mapped
+    kernel path) serves the same greedy tokens as monolithic admission."""
+    if jax.device_count() < 4:
+        pytest.skip("needs 4 forced host devices")
+    from repro.launch.mesh import make_serving_mesh
+    cfg, _ = dense_model
+    reqs = _trace(cfg)
+    mesh = make_serving_mesh((2, 2))
+    mono = _engine(dense_model, policy, SCFG, mesh=mesh)
+    chunk = _engine(dense_model, policy, SCFG, budget=16, mesh=mesh)
+    assert chunk.dispatch_plan().chunked_prefill
+    if policy == "aqua-block-sparse":
+        assert chunk.dispatch_plan().mesh_native
+    outs_m = mono.run([dataclasses.replace(r) for r in reqs])
+    outs_c = chunk.run([dataclasses.replace(r) for r in reqs])
+    for uid in outs_m:
+        assert outs_m[uid].tokens == outs_c[uid].tokens, (policy, uid)
+    if policy == "aqua-block-sparse":
+        assert chunk.mesh_fallback_events() == ()
+
+
+def test_hol_lookahead_admits_small_after_blocked_head(dense_model):
+    """When the pool can't fit the queue head, a later small request may
+    admit first (bounded first-fit); strict FIFO (lookahead=1) keeps the
+    old head-of-line blocking. Token outputs are identical either way."""
+    cfg, _ = dense_model
+    scfg = ServingConfig(max_lanes=3, max_seq=64, max_new_tokens=10,
+                         prompt_bucket=8, page_size=8, num_pages=9,
+                         prefix_sharing=False)
+    rng = np.random.default_rng(11)
+
+    def mk(uid, n, arrival, max_new=10):
+        return Request(uid=uid,
+                       tokens=rng.integers(0, cfg.vocab_size, size=(n,),
+                                           dtype=np.int32),
+                       max_new_tokens=max_new, arrival=arrival)
+    # A reserves 5 of 9 pages; B (5 pages) can't fit while A is live;
+    # C (2 pages) can.
+    reqs = [mk(0, 30, 0.0), mk(1, 30, 0.0), mk(2, 8, 0.0, max_new=4)]
+
+    def first_emission_order(lookahead):
+        eng = _engine(dense_model, "dense-jnp",
+                      dataclasses.replace(scfg,
+                                          admission_lookahead=lookahead))
+        seen, outs = [], {}
+        for ev in eng.serve([dataclasses.replace(r) for r in reqs]):
+            if ev.uid not in seen:
+                seen.append(ev.uid)
+            outs.setdefault(ev.uid, []).append(ev.token)
+        return seen, outs
+
+    fifo_order, fifo_outs = first_emission_order(1)
+    la_order, la_outs = first_emission_order(4)
+    # strict FIFO: the blocked head (uid 1) holds uid 2 back
+    assert fifo_order.index(1) < fifo_order.index(2)
+    # lookahead: the small request overtakes the blocked head
+    assert la_order.index(2) < la_order.index(1)
+    assert fifo_outs == la_outs   # admission order never changes tokens
+
+
+# -- chunk-resumable kernel entry ------------------------------------------
+
+
+def test_prefill_chunk_aligned_bitwise():
+    """q_blk-aligned chunk invocations of the block-sparse kernel are
+    bitwise identical to the monolithic call: chunk-local |q̂| tile
+    aggregation sees exactly the monolithic tiles, and masked-out key
+    tiles are exact no-ops in the online softmax."""
+    from repro.kernels.ops import aqua_prefill, aqua_prefill_chunk
+    rng = np.random.default_rng(0)
+    b, h, kv, s, d = 2, 4, 2, 64, 32
+    q = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, kv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, kv, s, 16)), jnp.float32)
+    lengths = jnp.asarray([s, 40], jnp.int32)
+    kw = dict(k_ratio=0.5, block_dims=8, q_blk=16, k_blk=16)
+    ref = aqua_prefill(q, k, v, lengths, **kw)
+    for split in (16, 32, 48):
+        parts = []
+        for lo, hi in ((0, split), (split, s)):
+            out, carry = aqua_prefill_chunk(q[:, :, lo:hi], k, v, lengths,
+                                            q_offset=lo, **kw)
+            parts.append(out)
+            assert not np.asarray(carry).any()  # aligned -> no carry
+        chunked = jnp.concatenate(parts, axis=2)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(chunked))
+
+
+def test_prefill_chunk_carry_oracle():
+    """A chunk ending mid-tile returns the partial tile's masked |q̂|
+    aggregate as carry, and a following chunk folds a passed carry into
+    its first tile's selection."""
+    from repro.core.aqua import chunk_topk_block_indices
+    from repro.kernels.ops import aqua_prefill_chunk
+    rng = np.random.default_rng(1)
+    b, h, s, d, q_blk, bd = 1, 2, 48, 32, 16, 8
+    q = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, 1, s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, 1, s, 8)), jnp.float32)
+    lengths = jnp.asarray([44], jnp.int32)
+    t1 = 24   # mid-tile boundary: tile [16, 32) straddles it
+    _, carry = aqua_prefill_chunk(q[:, :, :t1], k, v, lengths, q_offset=0,
+                                  k_ratio=0.5, block_dims=bd, q_blk=q_blk,
+                                  k_blk=16)
+    # oracle: |q̂| of the partial tile's valid rows, summed per dim-block
+    rows = np.abs(np.asarray(q[:, :, 16:t1], np.float32))
+    oracle = rows.reshape(b, h, t1 - 16, d // bd, bd).sum(axis=(2, 4))
+    np.testing.assert_allclose(np.asarray(carry), oracle, rtol=1e-6)
+    # a second chunk resuming at a tile boundary must NOT see a carry
+    _, carry2 = aqua_prefill_chunk(q[:, :, :32], k, v, lengths, q_offset=0,
+                                   k_ratio=0.5, block_dims=bd, q_blk=q_blk,
+                                   k_blk=16)
+    assert not np.asarray(carry2).any()
+    # carry-in shifts the resumed tile's selection to the full-tile
+    # aggregate: selection of [16, 32) resumed at row 24 with carry ==
+    # monolithic selection of that tile
+    full_idx = chunk_topk_block_indices(q[:, :, :32], 16, bd, q_blk,
+                                        jnp.minimum(lengths, 32))
+    mag2 = np.abs(np.asarray(q[:, :, t1:32], np.float32))
+    bmag2 = mag2.reshape(b, h, 32 - t1, d // bd, bd).sum(axis=(2, 4))
+    resumed = np.argsort(-(bmag2 + oracle), axis=-1)[..., :2]
+    np.testing.assert_array_equal(np.sort(resumed, axis=-1),
+                                  np.asarray(full_idx)[:, :, 1])

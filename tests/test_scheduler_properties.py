@@ -1,0 +1,121 @@
+"""Property tests for the LaneScheduler's admission queue and the
+PREFILLING-lane state machine (chunked-prefill interleaving).
+
+Runs under real hypothesis when installed, else the deterministic
+fallback in tests/_hypothesis_compat.py (corner + LCG-picked interior
+examples) — the invariants execute either way.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.serving import LaneScheduler, Request
+from repro.serving.scheduler import LANE_DECODING, LANE_PREFILLING
+
+
+def _req(uid, arrival, prompt_len=8, max_new=4):
+    return Request(uid=uid, tokens=np.zeros((prompt_len,), np.int32),
+                   max_new_tokens=max_new, arrival=arrival)
+
+
+@settings(deadline=None, max_examples=40)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n=st.integers(min_value=2, max_value=12),
+       skip=st.integers(min_value=0, max_value=11))
+def test_unpop_restores_exact_queue_position(seed, n, skip):
+    """pop_admissible(skip=k) followed by unpop is a no-op on the queue,
+    for any skip position — including among equal arrival times."""
+    rng = np.random.default_rng(seed)
+    sched = LaneScheduler(max_lanes=2)
+    # clustered arrivals force equal-key ties; submission order must hold
+    arrivals = sorted(float(x) for x in rng.integers(0, 3, size=n))
+    rng.shuffle(arrivals)
+    for uid, arr in enumerate(arrivals):
+        sched.submit(_req(uid, arr))
+    before = [r.uid for r in sched._pending]
+    req = sched.pop_admissible(now=10.0, skip=min(skip, n - 1))
+    assert req is not None
+    sched.unpop(req)
+    assert [r.uid for r in sched._pending] == before
+    assert sched._keys == sorted(sched._keys)
+
+
+@settings(deadline=None, max_examples=40)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       lanes=st.integers(min_value=1, max_value=4),
+       budget=st.sampled_from([8, 16, 32]))
+def test_prefilling_state_machine_invariants(seed, lanes, budget):
+    """Drive a random mixed workload through the scheduler the way the
+    engine does and check, at every step: a lane is never double-
+    assigned, per-step prefill spend never exceeds the budget, cursors
+    never pass their target, and every admitted request eventually
+    decodes and retires."""
+    rng = np.random.default_rng(seed)
+    sched = LaneScheduler(max_lanes=lanes)
+    n = int(rng.integers(3, 10))
+    for uid in range(n):
+        sched.submit(_req(uid, arrival=float(rng.integers(0, 4)),
+                          prompt_len=int(rng.integers(4, 80)),
+                          max_new=int(rng.integers(1, 4))))
+    decoded_steps = {}
+    retired = set()
+    now, steps = 0.0, 0
+    while sched.has_work:
+        steps += 1
+        assert steps < 10_000, "scheduler failed to drain"
+        # admissions (mirrors the engine: long prompts go PREFILLING)
+        while True:
+            req = sched.pop_admissible(now)
+            if req is None:
+                break
+            occupied = set(sched.active_lanes())
+            lane = sched.assign(req, prefilling=req.prompt_len > budget)
+            assert lane not in occupied          # no double-assign
+            if sched.lane_state(lane) == LANE_PREFILLING:
+                assert sched.prefill_cursor(lane) == 0
+                assert sched.prefill_remaining(lane) == req.prompt_len
+            else:
+                decoded_steps[req.uid] = 0
+        # one engine step: spend the chunk budget oldest-first, then
+        # decode every DECODING lane
+        spent = 0
+        for lane in sched.prefilling_lanes():
+            rem = sched.prefill_remaining(lane)
+            assert rem > 0
+            take = min(rem, budget - spent)
+            if take == 0:
+                break
+            sched.advance_prefill(lane, take)
+            spent += take
+            assert spent <= budget               # budget never exceeded
+            assert sched.prefill_cursor(lane) <= \
+                sched.request_in(lane).prompt_len
+            if sched.prefill_remaining(lane) == 0:
+                uid = sched.request_in(lane).uid
+                sched.mark_decoding(lane)
+                decoded_steps[uid] = 0
+        for lane in sched.decoding_lanes():
+            req = sched.request_in(lane)
+            decoded_steps[req.uid] += 1
+            if decoded_steps[req.uid] >= req.max_new_tokens:
+                assert sched.retire(lane) is req
+                retired.add(req.uid)
+        now += 1.0
+    # liveness: every admitted request decoded to completion
+    assert retired == set(range(n))
+    assert sched.num_active == 0 and not sched.prefilling_lanes()
+
+
+def test_retire_mid_prefill_is_rejected():
+    """A PREFILLING lane must finish its chunks before it can retire —
+    the state machine refuses the transition outright."""
+    sched = LaneScheduler(max_lanes=1)
+    sched.submit(_req(0, 0.0, prompt_len=32))
+    req = sched.pop_admissible(now=0.0)
+    lane = sched.assign(req, prefilling=True)
+    with pytest.raises(AssertionError):
+        sched.retire(lane)
+    sched.advance_prefill(lane, 32)
+    sched.mark_decoding(lane)
+    assert sched.lane_state(lane) == LANE_DECODING
+    assert sched.retire(lane) is req
