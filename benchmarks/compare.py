@@ -112,6 +112,12 @@ def compare(base, fresh, threshold):
         b, f = metrics.get("max_abs_err"), f_metrics.get("max_abs_err")
         if b is not None and f is not None:
             yield name, "max_abs_err", b, f, f <= max(b * 10.0, 1e-5)
+        # greedy-token identity of the int8 engine vs the fp engine: an
+        # absolute drift bound, not relative — the metric is a fraction
+        # in [0, 1] and the committed value is the fidelity contract
+        b, f = metrics.get("token_match"), f_metrics.get("token_match")
+        if b is not None and f is not None:
+            yield name, "token_match", b, f, f >= b - 0.05
 
     # interleaving contract — judged *within the fresh dump* so machine
     # speed cancels: the chunked-prefill row must cut the tail inter-token
@@ -142,14 +148,22 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     base, fresh = load(args.baseline), load(args.fresh)
-    checks = failures = 0
+    checks = 0
+    failed = []
     for name, metric, b, f, ok in compare(base, fresh, args.threshold):
         mark = "ok        " if ok else "REGRESSION"
         print(f"{mark}  {name:40s} {metric:16s} base={b:.4g} fresh={f:.4g}")
         checks += 1
-        failures += 0 if ok else 1
-    if failures:
-        print(f"{failures}/{checks} checks beyond threshold {args.threshold}")
+        if not ok:
+            failed.append((name, metric, b, f))
+    if failed:
+        # the exit summary names every failed gate so a CI log tail is
+        # enough to see WHAT regressed, not just that something did
+        print(f"{len(failed)}/{checks} checks beyond threshold "
+              f"{args.threshold}:")
+        for name, metric, b, f in failed:
+            print(f"  FAILED {name}: {metric} "
+                  f"(base={b:.4g} fresh={f:.4g})")
         sys.exit(1)
     print(f"bench gate green: {checks} checks over {len(base)} baseline rows")
 

@@ -15,7 +15,7 @@ import numpy as np
 
 from benchmarks.common import (data_config, eval_nll, get_trained_model,
                                timeit, BENCH_SEQ)
-from repro.configs.base import AquaConfig
+from repro.configs.base import AquaConfig, CacheSpec, QuantSpec
 from repro.core import aqua as aqua_lib
 from repro.data.pipeline import make_batch
 from repro.models import build_model
@@ -381,6 +381,121 @@ def kernel_bandwidth() -> List[Row]:
 
 
 # ---------------------------------------------------------------------------
+# Quantized KV pools: int8 fidelity gate (no trained model; CI smoke).
+# ---------------------------------------------------------------------------
+
+
+def quant_fidelity() -> List[Row]:
+    """int8 page-pool fidelity, kernel- and serving-level.
+
+    Kernel level: quantize a permuted page pool at both scale
+    granularities and decode through the scale-folded Pallas path; the
+    max_abs_err rows compare against the SAME kernel over the
+    dequantized full-precision pools, so addressing/selection cancels
+    and only the scale-folding arithmetic is judged (must be ~float
+    rounding). The roundtrip rows carry the quantization noise itself
+    (~amax/254 per page).
+
+    Serving level: greedy-token identity of an int8 paged engine vs the
+    full-precision paged engine on the same trace, swept across
+    k_ratio × quant mode — the tolerance record for how often int8
+    rounding flips an argmax. Gated by benchmarks/compare.py
+    (token_match must not drift below the committed baseline).
+    """
+    from repro.configs import reduced
+    from repro.configs.base import ServingConfig
+    from repro.core.calibration import identity_projections
+    from repro.kernels.ops import aqua_paged_decode
+    from repro.serving import ContinuousBatchingEngine, poisson_trace
+
+    rows: List[Row] = []
+    b, kvh, s, d = 1, 2, 256, 64
+    ks_ = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks_[0], (b, 4, d))
+    khat = jax.random.normal(ks_[1], (b, kvh, s, d))
+    v = jax.random.normal(ks_[2], (b, kvh, s, d))
+    lengths = jnp.full((b,), s, jnp.int32)
+    ps = 128
+    npg = s // ps
+    perm = np.arange(npg, dtype=np.int32)[::-1].copy()
+    pages_k = khat[0].reshape(kvh, npg, ps, d).transpose(1, 0, 2, 3)
+    pages_v = v[0].reshape(kvh, npg, ps, d).transpose(1, 0, 2, 3)
+    table = jnp.asarray(perm)[None]
+
+    def quantize(pages, gran):
+        red = (2, 3) if gran == "page_head" else (1, 2, 3)
+        scale = (jnp.max(jnp.abs(pages), axis=red) / 127.0
+                 ).astype(jnp.float32)
+        if gran == "page":
+            scale = scale[:, None]                       # (P, 1)
+        safe = jnp.where(scale > 0, scale, 1.0)
+        ints = jnp.clip(jnp.round(pages / safe[..., None, None]),
+                        -127, 127)
+        return ints.astype(jnp.int8), scale
+
+    for gran in ("page_head", "page"):
+        qk, sk = quantize(pages_k, gran)
+        qv, sv = quantize(pages_v, gran)
+        scatter = lambda x: jnp.zeros_like(x).at[perm].set(x)  # noqa: E731
+        qk_pool, qv_pool = scatter(qk), scatter(qv)
+        sk_pool, sv_pool = scatter(sk), scatter(sv)
+        deq_k = qk_pool.astype(jnp.float32) * sk_pool[..., None, None]
+        deq_v = qv_pool.astype(jnp.float32) * sv_pool[..., None, None]
+        rt = float(jnp.max(jnp.abs(scatter(pages_k) - deq_k)))
+        rows.append((f"quant/int8_roundtrip_{gran}", 0.0,
+                     f"max_abs_err={rt:.2e}"))
+        for kr in (0.5, 0.75, 1.0):
+            out_q = aqua_paged_decode(q, qk_pool, qv_pool, table, lengths,
+                                      k_scale=sk_pool, v_scale=sv_pool,
+                                      k_ratio=kr, block_dims=8, seq_blk=ps)
+            out_f = aqua_paged_decode(q, deq_k, deq_v, table, lengths,
+                                      k_ratio=kr, block_dims=8, seq_blk=ps)
+            err = float(jnp.max(jnp.abs(out_q - out_f)))
+            assert err < 1e-4, \
+                f"scale-folded kernel diverged from dequantized pools: " \
+                f"{err} (k_ratio={kr}, {gran})"
+            rows.append((f"quant/int8_paged_decode_k{kr}_{gran}", 0.0,
+                         f"max_abs_err={err:.2e}"))
+
+    # greedy-token-identity sweep (k_ratio × quant mode)
+    cfg = dataclasses.replace(reduced("qwen3-0.6b"), remat=False,
+                              dtype="float32")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    ident = identity_projections(cfg.num_layers, cfg.attention.num_kv_heads,
+                                 cfg.attention.head_dim)
+    reqs = poisson_trace(8, mean_interarrival=2.0, prompt_lens=(8, 14),
+                         max_new_tokens=12, vocab_size=cfg.vocab_size,
+                         seed=0)
+    scfg = ServingConfig(max_lanes=4, max_seq=64, max_new_tokens=12,
+                         prompt_bucket=8,
+                         cache=CacheSpec(page_size=16, num_pages=16))
+    modes = (("int8", QuantSpec(kv_dtype="int8")),
+             ("int8-mixed", QuantSpec(kv_dtype="int8",
+                                      hot_resident_fraction=0.25)))
+    for kr in (0.5, 0.75):
+        c = dataclasses.replace(cfg, aqua=AquaConfig(k_ratio=kr,
+                                                     block_dims=8))
+        ref = ContinuousBatchingEngine(
+            c, params, ident, serving=scfg,
+            backend="aqua-block-sparse").run(reqs)
+        for mode, quant in modes:
+            eng = ContinuousBatchingEngine(
+                c, params, ident,
+                serving=dataclasses.replace(scfg, quant=quant),
+                backend="aqua-block-sparse")
+            out = eng.run(reqs)
+            total = match = 0
+            for uid, o in ref.items():
+                want, got = list(o.tokens), list(out[uid].tokens)
+                total += len(want)
+                match += sum(a == b_ for a, b_ in zip(want, got))
+            frac = match / total
+            rows.append((f"quant/greedy_identity_k{kr}_{mode}", 0.0,
+                         f"token_match={frac:.3f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # Serving: continuous-batching throughput + lane occupancy on a Poisson
 # mixed-traffic trace (no trained model; CI smoke). The rectangular-engine
 # row is the contrast: it serves the same trace one fixed batch at a time,
@@ -446,7 +561,8 @@ def serving_throughput() -> List[Row]:
     # prefill_saved (prompt tokens never re-prefilled thanks to prefix
     # sharing) are gated by benchmarks/compare.py: a paging regression
     # (page leak, sharing broken) moves them and fails the bench job.
-    pscfg = dataclasses.replace(scfg, page_size=16, num_pages=12)
+    pscfg = dataclasses.replace(scfg,
+                                cache=CacheSpec(page_size=16, num_pages=12))
 
     def paged_row(name, eng, reqs_override=None):
         dt, st = timed_drive(eng, trace=reqs_override)
@@ -465,6 +581,14 @@ def serving_throughput() -> List[Row]:
               ContinuousBatchingEngine(
                   dataclasses.replace(cfg, aqua=aqua8), params, ident,
                   serving=pscfg, backend="aqua-block-sparse"))
+    # int8-quantized page pools: same trace/geometry as the fp row above,
+    # so the pool_util/throughput trajectory isolates the quantization
+    # overhead (requant-on-growth inserts) while cache bytes drop ~4x
+    qscfg = dataclasses.replace(pscfg, quant=QuantSpec(kv_dtype="int8"))
+    paged_row("paged-aqua-int8",
+              ContinuousBatchingEngine(
+                  dataclasses.replace(cfg, aqua=aqua8), params, ident,
+                  serving=qscfg, backend="aqua-block-sparse"))
     # prefix-shared trace: every prompt opens with the same 16-token
     # (page-aligned) prefix, so all admissions after the first skip its
     # prefill and map the sharer's pages read-only
@@ -567,14 +691,31 @@ def serving_throughput() -> List[Row]:
             f"paged mesh2x2 bench row left the kernel path: {plan}"
         paged_row("paged-aqua-block-sparse@mesh2x2", eng)
         assert eng.mesh_fallback_events() == (), eng.mesh_fallback_events()
+
+        # int8 pools on the mesh: scale metadata shards with the pages
+        # over `model` and the scale-folded kernel path must stay
+        # shard_mapped (quantization is folded into the kernel's softmax
+        # scale, not a reason to fall back) — the plan assertion plus the
+        # zero-fallback check keep this row on the kernel path forever.
+        eng = ContinuousBatchingEngine(c8, params, ident, serving=qscfg,
+                                       backend="aqua-block-sparse",
+                                       mesh=make_serving_mesh((2, 2)))
+        plan = eng.dispatch_plan()
+        assert plan.mesh_native and plan.paged \
+            and plan.quantization == "int8", \
+            f"int8 paged mesh2x2 bench row left the kernel path: {plan}"
+        paged_row("paged-aqua-int8@mesh2x2", eng)
+        assert eng.mesh_fallback_events() == (), eng.mesh_fallback_events()
     else:
         rows.append(("serving/dense-jnp@mesh2x2", 0.0,
                      f"skipped=devices<4 ({jax.device_count()})"))
         for backend in ("aqua-block-sparse", "aqua-masked-dense"):
             rows.append((f"serving/{backend}@mesh2x2", 0.0,
                          f"skipped=devices<4 ({jax.device_count()})"))
-        rows.append(("serving/paged-aqua-block-sparse@mesh2x2", 0.0,
-                     f"skipped=devices<4 ({jax.device_count()})"))
+        for name in ("paged-aqua-block-sparse@mesh2x2",
+                     "paged-aqua-int8@mesh2x2"):
+            rows.append((f"serving/{name}", 0.0,
+                         f"skipped=devices<4 ({jax.device_count()})"))
 
     # rectangular contrast: one fixed batch per arrival "wave" — requests
     # cannot overlap across waves, so per-wave occupancy is 1 wave at a

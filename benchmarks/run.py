@@ -53,6 +53,7 @@ def main(argv=None) -> None:
         fidelity.breakeven,
         fidelity.prefill_backends,
         fidelity.kernel_bandwidth,
+        fidelity.quant_fidelity,
         fidelity.serving_throughput,
     ]
     full_benches = [

@@ -7,6 +7,7 @@ and can be used as jit static args.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field, replace
 from typing import Optional, Tuple
 
@@ -212,6 +213,141 @@ def reduce_config(cfg: ModelConfig, *, layers: int = 2, d_model: int = 64,
 
 
 @dataclass(frozen=True)
+class CacheSpec:
+    """KV-cache layout: the one non-deprecated way to configure the
+    serving cache (resolved once at engine construction, like
+    ``core.dispatch.DispatchPlan``).
+
+    ``page_size`` tokens per page turns the per-lane contiguous slot
+    stripes into a global page pool with per-lane page tables
+    (``repro.core.kvcache.PagedAttnCache``); None keeps the contiguous
+    layout. ``num_pages`` sizes the pool (None = lane-stripe parity:
+    ``max_lanes * slots / page_size``) — set it lower to realize the
+    memory win (admissions queue when the pool is full).
+    ``prefix_sharing`` maps identical page-aligned prompt prefixes into
+    multiple lanes (refcounted, copy-on-write; paged full-cache policy
+    only). ``eviction`` names the slot-eviction policy; ``"auto"``
+    derives it from the model config (H2O when ``AquaConfig.h2o_ratio``
+    < 1, ring when the attention is windowed, none otherwise) — the
+    explicit names exist for config introspection and forward-compat,
+    the engine rejects a name that contradicts the model policy.
+    """
+
+    page_size: Optional[int] = None
+    num_pages: Optional[int] = None
+    prefix_sharing: bool = True
+    eviction: str = "auto"        # auto | none | ring | h2o
+
+    @property
+    def paged(self) -> bool:
+        return self.page_size is not None
+
+    def validate(self) -> None:
+        assert self.eviction in ("auto", "none", "ring", "h2o"), self.eviction
+        if self.page_size is not None:
+            assert self.page_size >= 1
+            if self.num_pages is not None:
+                assert self.num_pages >= 1
+        elif self.num_pages is not None:
+            raise ValueError("CacheSpec.num_pages needs page_size (paged "
+                             "layout only)")
+
+
+@dataclass(frozen=True)
+class QuantSpec:
+    """KV-pool quantization (paged layout only).
+
+    ``kv_dtype``: pool storage dtype — ``"bf16"`` keeps full-precision
+    pools, ``"int8"`` stores per-page symmetric-quantized K̂/V with f32
+    scales living beside the page table (zero-point 0; scales ride the
+    Pallas decode kernel's scalar-prefetch ``index_map`` for
+    dequant-free, scale-folded score accumulation).
+    ``scale_granularity``: ``"page_head"`` keeps one scale per
+    (page, kv-head); ``"page"`` shares one scale across a page's heads
+    (half the metadata, coarser clipping).
+    ``hot_resident_fraction``: fraction of the pool kept as
+    full-precision *hot residents* — pages with the highest H2O
+    accumulated scores carry a write-through bf16 overlay beside their
+    (always-written) int8 twin, and readers prefer the overlay. 0
+    disables mixed precision (every page reads quantized).
+    """
+
+    kv_dtype: str = "bf16"              # bf16 | int8
+    scale_granularity: str = "page_head"  # page_head | page
+    hot_resident_fraction: float = 0.0
+
+    @property
+    def quantized(self) -> bool:
+        return self.kv_dtype != "bf16"
+
+    @property
+    def mode(self) -> str:
+        """Dispatch-plan label: none | int8 | int8-mixed."""
+        if not self.quantized:
+            return "none"
+        return (f"{self.kv_dtype}-mixed" if self.hot_resident_fraction > 0
+                else self.kv_dtype)
+
+    def validate(self) -> None:
+        assert self.kv_dtype in ("bf16", "int8"), self.kv_dtype
+        assert self.scale_granularity in ("page_head", "page"), \
+            self.scale_granularity
+        assert 0.0 <= self.hot_resident_fraction <= 1.0, \
+            self.hot_resident_fraction
+
+
+# ServingConfig fields shadowed by CacheSpec: (flat name, CacheSpec name,
+# deprecated-iff-not-this default). One-release DeprecationWarning shims
+# (the kernel_native shim pattern from PR 6, removed in PR 7).
+_LEGACY_CACHE_FIELDS = (("page_size", "page_size", None),
+                        ("num_pages", "num_pages", None),
+                        ("prefix_sharing", "prefix_sharing", True))
+
+
+def resolve_cache_specs(serving: "ServingConfig", *, warn: bool = True
+                        ) -> Tuple[CacheSpec, QuantSpec]:
+    """Resolve a ``ServingConfig``'s cache surface to (CacheSpec,
+    QuantSpec) — the single resolution point, called once per engine
+    (``warn=True``) and silently by ``validate()``/dispatch resolution
+    (``warn=False``).
+
+    The old flat fields (``page_size``/``num_pages``/``prefix_sharing``)
+    are one-release deprecated shims: set them and a DeprecationWarning
+    names the replacement; set them *and* ``cache=`` and resolution
+    fails loudly instead of silently preferring one side.
+    """
+    legacy = [flat for flat, _, default in _LEGACY_CACHE_FIELDS
+              if getattr(serving, flat) != default]
+    if legacy:
+        if serving.cache is not None:
+            raise ValueError(
+                f"ServingConfig sets both cache=CacheSpec(...) and the "
+                f"deprecated flat field(s) {legacy} — move the flat "
+                "values into the CacheSpec")
+        if warn:
+            warnings.warn(
+                f"ServingConfig.{'/'.join(legacy)} are deprecated; pass "
+                "cache=CacheSpec(page_size=..., num_pages=..., "
+                "prefix_sharing=...) instead (one-release shim)",
+                DeprecationWarning, stacklevel=3)
+    if serving.cache is not None:
+        cache = serving.cache
+    else:
+        cache = CacheSpec(page_size=serving.page_size,
+                          num_pages=serving.num_pages,
+                          prefix_sharing=serving.prefix_sharing)
+    quant = serving.quant if serving.quant is not None else QuantSpec()
+    cache.validate()
+    quant.validate()
+    if quant.quantized and not cache.paged:
+        raise ValueError(
+            f"QuantSpec(kv_dtype={quant.kv_dtype!r}) needs the paged "
+            "cache layout — quantization state is per-page metadata; "
+            "set CacheSpec.page_size")
+    return cache, quant
+
+
+@dataclass(frozen=True)
 class ServingConfig:
     """Continuous-batching engine knobs (repro.serving).
 
@@ -241,18 +377,13 @@ class ServingConfig:
     # the model axis per distributed.sharding's name+shape rules.
     mesh_shape: Optional[Tuple[int, ...]] = None
     mesh_axes: Tuple[str, ...] = ("data", "model")
-    # Block-paged KV cache: ``page_size`` tokens per page turns the
-    # per-lane contiguous slot stripes into a global page pool with
-    # per-lane page tables (repro.core.kvcache.PagedAttnCache). None keeps
-    # the contiguous layout. ``num_pages`` sizes the pool; None defaults
-    # to lane-stripe parity (max_lanes * slots / page_size) — set it lower
-    # to realize the memory win (admissions queue when the pool is full).
+    # DEPRECATED flat cache fields (one-release shims): use
+    # ``cache=CacheSpec(page_size=..., num_pages=..., prefix_sharing=...)``
+    # instead. Setting any of them emits a DeprecationWarning at engine
+    # construction; setting them alongside ``cache=`` is an error (see
+    # :func:`resolve_cache_specs`).
     page_size: Optional[int] = None
     num_pages: Optional[int] = None
-    # Map identical page-aligned prompt prefixes into multiple lanes
-    # (refcounted, copy-on-write at the divergence point): admissions of a
-    # shared prefix skip its prefill entirely. Paged full-cache policy
-    # only; ignored otherwise.
     prefix_sharing: bool = True
     # Chunked-prefill/decode interleaving: cap the prefill tokens advanced
     # per decode step. Prompts longer than the budget are admitted
@@ -269,25 +400,29 @@ class ServingConfig:
     # requests. 1 = strict FIFO (head-only, the pre-lookahead behavior).
     # Skipped-over requests keep their exact queue position.
     admission_lookahead: int = 4
+    # The unified cache-configuration surface (the only non-deprecated
+    # one): layout/geometry in ``cache``, pool quantization in ``quant``.
+    # None means defaults (contiguous layout, bf16 pools) — or, one
+    # release longer, whatever the deprecated flat fields above say.
+    cache: Optional[CacheSpec] = None
+    quant: Optional[QuantSpec] = None
 
     def validate(self) -> None:
         assert self.max_lanes >= 1
         assert self.max_new_tokens >= 1
         assert self.prompt_bucket >= 1
         assert self.admission_lookahead >= 1
+        cache, _ = resolve_cache_specs(self, warn=False)
         if self.prefill_budget_tokens is not None:
             assert self.prefill_budget_tokens >= 1
             assert self.prefill_budget_tokens % self.prompt_bucket == 0, \
                 (self.prefill_budget_tokens, self.prompt_bucket)
-            if self.page_size is not None:
-                assert self.prefill_budget_tokens % self.page_size == 0, \
-                    (self.prefill_budget_tokens, self.page_size)
-        if self.page_size is not None:
-            assert self.page_size >= 1
-            assert self.max_seq % self.page_size == 0, \
-                (self.max_seq, self.page_size)
-            if self.num_pages is not None:
-                assert self.num_pages >= 1
+            if cache.page_size is not None:
+                assert self.prefill_budget_tokens % cache.page_size == 0, \
+                    (self.prefill_budget_tokens, cache.page_size)
+        if cache.page_size is not None:
+            assert self.max_seq % cache.page_size == 0, \
+                (self.max_seq, cache.page_size)
         if self.mesh_shape is not None:
             assert len(self.mesh_shape) == len(self.mesh_axes), \
                 (self.mesh_shape, self.mesh_axes)

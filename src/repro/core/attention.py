@@ -65,7 +65,8 @@ from repro.core import kvcache as kv
 # exact strings and DispatchPlan.reasons carries the same constants, so
 # the plan's prediction and the trace-time warnings can never drift apart
 from repro.core.dispatch import (REASON_NONDIVISIBLE_MESH,
-                                 REASON_PAGE_GEOMETRY)
+                                 REASON_PAGE_GEOMETRY,
+                                 REASON_QUANT_RESIDENCY)
 
 NEG_INF = -1e30
 
@@ -474,22 +475,36 @@ def shard_mapped_paged_decode_kernel(mesh, backend, q, cache, *, cfg, aqua):
     b, kvh = q.shape[0], q.shape[1]
     batch_ax, kv_ax = _kernel_row_axes(mesh, b, kvh)
 
-    def core(qs, kp, vp, pp, ap, pt, cnt):
-        local = kv.PagedAttnCache(k_pool=kp, v_pool=vp, pos_pool=pp,
-                                  acc_pool=ap, page_table=pt, count=cnt)
-        return backend.paged_decode(qs, local, cfg=cfg, aqua=aqua)
-
     P = jax.sharding.PartitionSpec
     head4 = P(batch_ax, kv_ax, None, None)
     pool4 = P(None, kv_ax, None, None)
+    in_specs = [head4, pool4, pool4, P(None, None), P(None, kv_ax, None),
+                P(batch_ax, None), P(batch_ax)]
+    operands = [q, cache.k_pool, cache.v_pool, cache.pos_pool,
+                cache.acc_pool, cache.page_table, cache.count]
+    quant = cache.k_scale is not None
+    if quant:
+        # per-page quant scales partition with their pages' KV heads over
+        # `model` (page axis whole, like the pool); one-scale-per-page
+        # (SH=1) arrives replicated — the head slice is then a no-op.
+        sh = cache.k_scale.shape[1]
+        scale_spec = P(None, kv_ax if sh > 1 else None)
+        in_specs += [scale_spec, scale_spec]
+        operands += [cache.k_scale, cache.v_scale]
+
+    def core(qs, kp, vp, pp, ap, pt, cnt, *scales):
+        ks, vs = scales if quant else (None, None)
+        local = kv.PagedAttnCache(k_pool=kp, v_pool=vp, pos_pool=pp,
+                                  acc_pool=ap, page_table=pt, count=cnt,
+                                  k_scale=ks, v_scale=vs)
+        return backend.paged_decode(qs, local, cfg=cfg, aqua=aqua)
+
     return shard_map(
         core, mesh=mesh,
-        in_specs=(head4, pool4, pool4, P(None, None), P(None, kv_ax, None),
-                  P(batch_ax, None), P(batch_ax)),
+        in_specs=tuple(in_specs),
         out_specs=head4,
         check_rep=False,
-    )(q, cache.k_pool, cache.v_pool, cache.pos_pool, cache.acc_pool,
-      cache.page_table, cache.count)
+    )(*operands)
 
 
 # ---------------------------------------------------------------------------
@@ -781,6 +796,7 @@ def _aqua_block_sparse_paged_decode(q_hat, cache: kv.PagedAttnCache, *,
     lengths = jnp.minimum(cache.count, cache.num_slots)
     out = kops.aqua_paged_decode(qf, cache.k_pool, cache.v_pool,
                                  cache.page_table, lengths,
+                                 cache.k_scale, cache.v_scale,
                                  k_ratio=aqua.k_ratio,
                                  block_dims=aqua.block_dims,
                                  seq_blk=aqua.decode_seq_blk,
@@ -1212,6 +1228,13 @@ def _paged_decode_product(params, x_t: jax.Array, q: jax.Array,
     kernel_ok = (backend.paged_decode is not None and aqua_on and not h2o
                  and cfg.window is None and aqua.block_dims > 1
                  and q.shape[-1] % aqua.block_dims == 0)
+    if kernel_ok and cache.k_hot is not None:
+        # mixed-precision hot residents only exist in the reference
+        # path's dequantized lane view — the kernel reads raw int8 pages
+        if decode_mesh() is not None:
+            _log_mesh_kernel_fallback(backend.name, "decode",
+                                      REASON_QUANT_RESIDENCY)
+        kernel_ok = False
     kernel_mesh = None
     if kernel_ok and decode_mesh() is not None:
         from repro.distributed import sharding as dsh

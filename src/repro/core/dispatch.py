@@ -41,6 +41,13 @@ REASON_H2O = "H2O eviction needs the reference path's dense weights"
 REASON_NONDIVISIBLE_MESH = "axis extents don't divide the serving mesh"
 REASON_PAGE_GEOMETRY = (
     "page size doesn't tile into the kernel's 8-token sequence blocks")
+REASON_QUANT_RESIDENCY = (
+    "mixed-precision hot residents need the reference path's "
+    "dequantized lane view")
+REASON_QUANT_GEOMETRY = (
+    "quantized pages only decode through the paged kernel's scale-folded "
+    "path; this layout/backend combination dequantizes via the reference "
+    "lane view")
 # Chunked-prefill attribution (``DispatchPlan.chunked_prefill``): why an
 # engine keeps monolithic admission even though interleaving exists.
 REASON_NO_PREFILL_BUDGET = "no prefill_budget_tokens configured"
@@ -65,6 +72,10 @@ class DispatchPlan:
                     ``resolve_backend`` fallback policy), or ``"none"``
                     for attention-free families.
     cache_layout:   :data:`CACHE_CONTIGUOUS` or :data:`CACHE_PAGED`.
+    quantization:   resolved KV-pool precision mode — ``"none"`` (full
+                    precision), ``"int8"`` (per-page symmetric quantized
+                    pools), or ``"int8-mixed"`` (int8 plus H2O-hot
+                    full-precision residents); ``QuantSpec.mode``.
     mesh_native:    True when decode serves through the shard_mapped
                     Pallas kernel path (and the cache is laid out for
                     it) — the contract ``launch.serve
@@ -90,6 +101,7 @@ class DispatchPlan:
     reasons: Tuple[str, ...] = ()
     chunked_prefill: bool = False
     chunked_reasons: Tuple[str, ...] = ()
+    quantization: str = "none"
 
     @property
     def paged(self) -> bool:
@@ -117,12 +129,15 @@ def resolve_dispatch_plan(*, attention, aqua, serving, mesh,
     Imports are deferred: ``core.attention`` imports this module for the
     reason constants, so the reverse dependency must stay lazy.
     """
+    from repro.configs.base import resolve_cache_specs
     from repro.core.attention import resolve_backend
     from repro.core.h2o import h2o_budget
     from repro.distributed import sharding as dsh
 
-    paged = serving.page_size is not None
+    cache_spec, quant_spec = resolve_cache_specs(serving, warn=False)
+    paged = cache_spec.paged
     cache_layout = CACHE_PAGED if paged else CACHE_CONTIGUOUS
+    quant_mode = quant_spec.mode
     if batch is None:
         batch = serving.max_lanes
     reasons = []
@@ -147,14 +162,23 @@ def resolve_dispatch_plan(*, attention, aqua, serving, mesh,
             reasons.append(REASON_WINDOW)
         if aqua_on and h2o_budget(aqua, serving.max_seq) is not None:
             reasons.append(REASON_H2O)
+        if quant_spec.quantized and quant_spec.hot_resident_fraction > 0:
+            reasons.append(REASON_QUANT_RESIDENCY)
         if mesh is not None and not dsh.kernel_shardable(
                 mesh, attention, aqua, batch=batch,
-                page_size=serving.page_size):
-            if (serving.page_size is not None
-                    and serving.page_size % dsh.KERNEL_PAGE_MULTIPLE != 0):
+                page_size=cache_spec.page_size):
+            if (cache_spec.page_size is not None
+                    and cache_spec.page_size % dsh.KERNEL_PAGE_MULTIPLE != 0):
                 reasons.append(REASON_PAGE_GEOMETRY)
             else:
                 reasons.append(REASON_NONDIVISIBLE_MESH)
+    # Quantized pages have no dequantizing kernel outside the paged
+    # scale-folded path: attribute the extra cost whenever another
+    # predicate already forces the reference lane view.
+    if quant_mode != "none" and any(
+            r not in (REASON_NO_MESH, REASON_QUANT_RESIDENCY)
+            for r in reasons):
+        reasons.append(REASON_QUANT_GEOMETRY)
     mesh_native = mesh is not None and not reasons
 
     # Chunked-prefill interleaving: admissible only where splitting the
@@ -192,4 +216,5 @@ def resolve_dispatch_plan(*, attention, aqua, serving, mesh,
                         prefix_sharing=bool(prefix_sharing),
                         reasons=tuple(reasons),
                         chunked_prefill=not chunked_reasons,
-                        chunked_reasons=tuple(chunked_reasons))
+                        chunked_reasons=tuple(chunked_reasons),
+                        quantization=quant_mode)

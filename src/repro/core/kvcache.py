@@ -235,6 +235,22 @@ class PagedAttnCache:
        lives at ``(page_table[b, s // page_size], s % page_size)``.
     count: (B,) int32 — tokens processed so far (= next position).
 
+    Quantized pools (``QuantSpec.kv_dtype="int8"``): ``k_pool``/``v_pool``
+    hold per-page symmetric-quantized int8 values and the optional scale
+    leaves become live —
+
+    k_scale / v_scale: (P, SH) f32 per-page scales beside the page table
+       (``real = int * scale``; zero-point 0, scale 0 = unwritten page).
+       SH is the scale granularity encoded in the shape: ``num_kv`` for
+       per-(page, kv-head) scales, 1 for one shared scale per page.
+    k_hot / v_hot: (H, KV, page_size, D) full-precision *hot-resident*
+       overlay (mixed precision): the int8 pool stays authoritative and
+       always written, residents additionally carry an exact write-through
+       copy that readers prefer. ``hot_ids``: (H,) int32 physical page id
+       of each resident, -1 empty. Residency follows the H2O accumulated
+       scores: grafts promote the freshest page, evicting the
+       lowest-score resident; freed/recycled pages are demoted.
+
     The logical slot space (``pages_per_lane * page_size`` slots) matches
     the contiguous :class:`AttnCache` layout exactly, so every policy's
     slot arithmetic carries over through the indirection.
@@ -246,6 +262,15 @@ class PagedAttnCache:
     acc_pool: jax.Array
     page_table: jax.Array
     count: jax.Array
+    k_scale: Optional[jax.Array] = None
+    v_scale: Optional[jax.Array] = None
+    k_hot: Optional[jax.Array] = None
+    v_hot: Optional[jax.Array] = None
+    hot_ids: Optional[jax.Array] = None
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
 
     @property
     def num_pages(self) -> int:
@@ -275,17 +300,121 @@ def paged_pages(slots: int, page_size: int) -> int:
     return slots // page_size
 
 
+#: int8 symmetric quantization range (zero-point is always 0).
+QUANT_MAX = 127.0
+
+
 def init_paged_cache(batch: int, num_kv: int, num_pages: int,
                      pages_per_lane: int, page_size: int, dk: int, dv: int,
-                     dtype=jnp.bfloat16) -> PagedAttnCache:
+                     dtype=jnp.bfloat16, kv_dtype: Optional[str] = None,
+                     scale_granularity: str = "page_head",
+                     hot_pages: int = 0) -> PagedAttnCache:
+    """``kv_dtype`` None/"bf16" keeps full-precision pools; "int8" stores
+    per-page symmetric-quantized pools with f32 scale metadata (see
+    :class:`PagedAttnCache`). ``scale_granularity`` picks the scale shape
+    ("page_head" → one scale per (page, kv head), "page" → one per page)
+    and ``hot_pages`` > 0 allocates the mixed-precision hot-resident
+    overlay."""
+    quant = kv_dtype not in (None, "bf16")
+    if quant and kv_dtype != "int8":
+        raise ValueError(f"unsupported kv_dtype {kv_dtype!r}")
+    pool_dtype = jnp.int8 if quant else dtype
+    extra = {}
+    if quant:
+        sh = num_kv if scale_granularity == "page_head" else 1
+        extra = dict(
+            k_scale=jnp.zeros((num_pages, sh), jnp.float32),
+            v_scale=jnp.zeros((num_pages, sh), jnp.float32))
+        if hot_pages > 0:
+            extra.update(
+                k_hot=jnp.zeros((hot_pages, num_kv, page_size, dk), dtype),
+                v_hot=jnp.zeros((hot_pages, num_kv, page_size, dv), dtype),
+                hot_ids=jnp.full((hot_pages,), -1, jnp.int32))
     return PagedAttnCache(
-        k_pool=jnp.zeros((num_pages, num_kv, page_size, dk), dtype),
-        v_pool=jnp.zeros((num_pages, num_kv, page_size, dv), dtype),
+        k_pool=jnp.zeros((num_pages, num_kv, page_size, dk), pool_dtype),
+        v_pool=jnp.zeros((num_pages, num_kv, page_size, dv), pool_dtype),
         pos_pool=jnp.full((num_pages, page_size), -1, jnp.int32),
         acc_pool=jnp.zeros((num_pages, num_kv, page_size), jnp.float32),
         page_table=jnp.full((batch, pages_per_lane), -1, jnp.int32),
         count=jnp.zeros((batch,), jnp.int32),
+        **extra,
     )
+
+
+def dequant_pages(pool: jax.Array, scale: jax.Array,
+                  dtype=jnp.float32) -> jax.Array:
+    """int8 pages (..., KV, ps, D) × per-page scales (..., SH) -> dtype.
+    SH broadcasts over KV when the granularity is one-scale-per-page."""
+    return (pool.astype(jnp.float32)
+            * scale[..., :, None, None]).astype(dtype)
+
+
+def quantize_tokens(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """float tokens (..., D) / scales broadcastable to ``x[..., 0]`` ->
+    int8. Zero scale (unwritten page / all-zero content) quantizes to 0
+    instead of dividing by zero."""
+    s = jnp.where(scale > 0.0, scale, 1.0)
+    q = jnp.round(x.astype(jnp.float32) / s[..., None])
+    return jnp.clip(q, -QUANT_MAX, QUANT_MAX).astype(jnp.int8)
+
+
+def _page_scales(tok: jax.Array, ps: int, sh: int) -> jax.Array:
+    """Per-page scales for (T, KV, D) float tokens laid out from a page
+    boundary -> (ceil(T/ps), SH); the partial last page pads with zeros
+    (which never grow the amax)."""
+    t, kvh, d = tok.shape
+    npg = -(-t // ps)
+    x = jnp.abs(tok.astype(jnp.float32))
+    x = jnp.pad(x, ((0, npg * ps - t), (0, 0), (0, 0)))
+    amax = x.reshape(npg, ps, kvh, d).max(axis=(1, 3))   # (NPG, KV)
+    if sh == 1:
+        amax = amax.max(axis=-1, keepdims=True)
+    return amax / QUANT_MAX
+
+
+def _insert_quant_token(pool: jax.Array, scale: jax.Array, phys: jax.Array,
+                        off: jax.Array, x_new: jax.Array
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Quantized single-token insert with a per-page *running* scale:
+    grow the page's scale to cover the new token's amax (requantizing the
+    already-stored page ints when it grows — round-trip error stays one
+    rounding step per growth) and write the quantized token. ``phys``
+    (B,) already encodes suppressed rows as the out-of-bounds page."""
+    x = x_new.astype(jnp.float32)                        # (B, KV, D)
+    amax = jnp.abs(x).max(axis=-1)                       # (B, KV)
+    if scale.shape[1] == 1:
+        amax = amax.max(axis=-1, keepdims=True)          # (B, 1)
+    safe = jnp.minimum(phys, pool.shape[0] - 1)
+    s_old = scale[safe]                                  # (B, SH)
+    s_cand = jnp.maximum(s_old, amax / QUANT_MAX)
+    ratio = jnp.where(s_cand > 0.0, s_old / s_cand, 1.0)
+    page = pool[safe].astype(jnp.float32)                # (B, KV, ps, D)
+    requant = jnp.clip(jnp.round(page * ratio[:, :, None, None]),
+                       -QUANT_MAX, QUANT_MAX).astype(pool.dtype)
+    pool = pool.at[phys].set(requant, mode="drop")
+    pool = pool.at[phys, :, off].set(quantize_tokens(x, s_cand), mode="drop")
+    scale = scale.at[phys].set(s_cand, mode="drop")
+    return pool, scale
+
+
+def _demote_residents(hot_ids: jax.Array, freed_phys: jax.Array) -> jax.Array:
+    """Drop hot residents whose physical page appears in ``freed_phys``
+    (1-D, out-of-bounds entries never match): recycled pages must not
+    serve a stale full-precision overlay."""
+    stale = (hot_ids[:, None] == freed_phys[None, :]).any(axis=1)
+    return jnp.where(stale, -1, hot_ids)
+
+
+def _hot_overlay(vals: jax.Array, hot_pool: jax.Array, table: jax.Array,
+                 hot_ids: jax.Array) -> jax.Array:
+    """Overlay resident pages onto dequantized gathers: vals (B, NP, KV,
+    ps, D) with page table (B, NP); resident pages (table entry matching a
+    live ``hot_ids`` slot) read the exact ``hot_pool`` copy instead."""
+    m = (table[..., None] == hot_ids) & (hot_ids >= 0)   # (B, NP, H)
+    hit = m.any(axis=-1)
+    hidx = jnp.argmax(m, axis=-1)
+    hot = hot_pool.astype(vals.dtype)[hidx]              # (B, NP, KV, ps, D)
+    return jnp.where(hit[..., None, None, None], hot, vals)
 
 
 def _gather_pool(pool: jax.Array, table: jax.Array) -> jax.Array:
@@ -318,6 +447,12 @@ def paged_lane_view(cache: PagedAttnCache) -> AttnCache:
     s = cache.num_slots
     k = _gather_pool(cache.k_pool, cache.page_table)      # (B,NP,KV,ps,Dk)
     v = _gather_pool(cache.v_pool, cache.page_table)
+    if cache.k_scale is not None:
+        k = dequant_pages(k, _gather_pool(cache.k_scale, cache.page_table))
+        v = dequant_pages(v, _gather_pool(cache.v_scale, cache.page_table))
+        if cache.k_hot is not None:
+            k = _hot_overlay(k, cache.k_hot, cache.page_table, cache.hot_ids)
+            v = _hot_overlay(v, cache.v_hot, cache.page_table, cache.hot_ids)
     acc = _gather_pool(cache.acc_pool, cache.page_table)  # (B,NP,KV,ps)
     kvh = k.shape[2]
     k = k.transpose(0, 2, 1, 3, 4).reshape(b, kvh, s, k.shape[-1])
@@ -325,6 +460,38 @@ def paged_lane_view(cache: PagedAttnCache) -> AttnCache:
     acc = acc.transpose(0, 2, 1, 3).reshape(b, kvh, s)
     return AttnCache(k=k, v=v, positions=gather_positions(cache),
                      count=cache.count, acc_score=acc)
+
+
+def paged_lane_pages(cache: PagedAttnCache, lane: jax.Array,
+                     dtype=None) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Gather one lane's mapped pages as a contiguous (dequantized) view:
+    ``(k (1, KV, S_log, Dk), v (1, KV, S_log, Dv), positions (1, S_log))``.
+    The prefix-shared / chunked prefill path reads the already-written
+    prefix through this, so quantization stays a storage detail of the
+    pool. Unmapped pages read position -1 (masked by attention)."""
+    tbl = cache.page_table[lane]                         # (NP,)
+    phys = jnp.maximum(tbl, 0)
+    pk = cache.k_pool[phys]                              # (NP, KV, ps, Dk)
+    pv = cache.v_pool[phys]
+    if cache.k_scale is not None:
+        out_dt = jnp.float32 if dtype is None else dtype
+        pk = dequant_pages(pk, cache.k_scale[phys], out_dt)
+        pv = dequant_pages(pv, cache.v_scale[phys], out_dt)
+        if cache.k_hot is not None:
+            pk = _hot_overlay(pk[None], cache.k_hot, tbl[None],
+                              cache.hot_ids)[0]
+            pv = _hot_overlay(pv[None], cache.v_hot, tbl[None],
+                              cache.hot_ids)[0]
+    elif dtype is not None:
+        pk = pk.astype(dtype)
+        pv = pv.astype(dtype)
+    ppos = cache.pos_pool[phys]                          # (NP, ps)
+    ppos = jnp.where(tbl[:, None] >= 0, ppos, -1)
+    kvh = pk.shape[1]
+    s_log = cache.num_slots
+    pk = pk.transpose(1, 0, 2, 3).reshape(1, kvh, s_log, -1)
+    pv = pv.transpose(1, 0, 2, 3).reshape(1, kvh, s_log, -1)
+    return pk, pv, ppos.reshape(1, s_log)
 
 
 def paged_select_slot(cache: PagedAttnCache, *, window: Optional[int],
@@ -393,6 +560,7 @@ def paged_insert(cache: PagedAttnCache, slot: jax.Array, k_new: jax.Array,
     off = slot % ps
 
     pos_pool, acc_pool = cache.pos_pool, cache.acc_pool
+    extra = {}
     if evict_page is not None:
         ev_entry = cache.page_table[rows, jnp.maximum(evict_page, 0)]
         ev_ok = (evict_page >= 0) & (ev_entry >= 0)
@@ -401,17 +569,41 @@ def paged_insert(cache: PagedAttnCache, slot: jax.Array, k_new: jax.Array,
         ev_phys = jnp.where(ev_ok, ev_entry, oob)
         pos_pool = pos_pool.at[ev_phys].set(-1, mode="drop")
         acc_pool = acc_pool.at[ev_phys].set(0.0, mode="drop")
+        if cache.k_scale is not None:
+            extra["k_scale"] = cache.k_scale.at[ev_phys].set(0.0, mode="drop")
+            extra["v_scale"] = cache.v_scale.at[ev_phys].set(0.0, mode="drop")
+        if cache.hot_ids is not None:
+            extra["hot_ids"] = _demote_residents(cache.hot_ids, ev_phys)
 
-    k_pool = cache.k_pool.at[phys, :, off].set(
-        k_new.astype(cache.k_pool.dtype), mode="drop")
-    v_pool = cache.v_pool.at[phys, :, off].set(
-        v_new.astype(cache.v_pool.dtype), mode="drop")
+    if cache.k_scale is None:
+        k_pool = cache.k_pool.at[phys, :, off].set(
+            k_new.astype(cache.k_pool.dtype), mode="drop")
+        v_pool = cache.v_pool.at[phys, :, off].set(
+            v_new.astype(cache.v_pool.dtype), mode="drop")
+    else:
+        k_pool, extra["k_scale"] = _insert_quant_token(
+            cache.k_pool, extra.get("k_scale", cache.k_scale), phys, off,
+            k_new)
+        v_pool, extra["v_scale"] = _insert_quant_token(
+            cache.v_pool, extra.get("v_scale", cache.v_scale), phys, off,
+            v_new)
+        if cache.hot_ids is not None:
+            # write-through: resident pages also get the exact value, so
+            # the hot overlay never lags the authoritative int8 pool.
+            hot_ids = extra.get("hot_ids", cache.hot_ids)
+            hm = hot_ids[None, :] == phys[:, None]       # (B, H)
+            hslot = jnp.where(hm.any(axis=1), jnp.argmax(hm, axis=1),
+                              hot_ids.shape[0])
+            extra["k_hot"] = cache.k_hot.at[hslot, :, off].set(
+                k_new.astype(cache.k_hot.dtype), mode="drop")
+            extra["v_hot"] = cache.v_hot.at[hslot, :, off].set(
+                v_new.astype(cache.v_hot.dtype), mode="drop")
     pos_pool = pos_pool.at[phys, off].set(cache.count, mode="drop")
     acc_pool = acc_pool.at[phys, :, off].set(0.0, mode="drop")
     adv = jnp.int32(1) if write_mask is None else write_mask.astype(jnp.int32)
     return dataclasses.replace(cache, k_pool=k_pool, v_pool=v_pool,
                                pos_pool=pos_pool, acc_pool=acc_pool,
-                               count=cache.count + adv)
+                               count=cache.count + adv, **extra)
 
 
 def paged_accumulate_h2o(cache: PagedAttnCache, attn_weights: jax.Array,
@@ -465,19 +657,60 @@ def paged_graft(cache: PagedAttnCache, req: AttnCache, lane: jax.Array,
     entry = tbl[idx // ps]
     phys = jnp.where(entry >= 0, entry, oob)
     off = idx % ps
-    k_pool = cache.k_pool.at[phys, :, off].set(
-        req.k[0][:, idx].transpose(1, 0, 2).astype(cache.k_pool.dtype),
-        mode="drop")
-    v_pool = cache.v_pool.at[phys, :, off].set(
-        req.v[0][:, idx].transpose(1, 0, 2).astype(cache.v_pool.dtype),
-        mode="drop")
+    k_tok = req.k[0][:, idx].transpose(1, 0, 2)         # (T, KV, Dk)
+    v_tok = req.v[0][:, idx].transpose(1, 0, 2)
+    extra = {}
+    if cache.k_scale is None:
+        k_pool = cache.k_pool.at[phys, :, off].set(
+            k_tok.astype(cache.k_pool.dtype), mode="drop")
+        v_pool = cache.v_pool.at[phys, :, off].set(
+            v_tok.astype(cache.v_pool.dtype), mode="drop")
+    else:
+        # per-page scales over the grafted prompt, stale scales cleared
+        # for every recycled page the lane maps beyond the prompt
+        k_scale = cache.k_scale.at[all_phys].set(0.0, mode="drop")
+        v_scale = cache.v_scale.at[all_phys].set(0.0, mode="drop")
+        ks = _page_scales(k_tok, ps, k_scale.shape[1])  # (NPG, SH)
+        vs = _page_scales(v_tok, ps, v_scale.shape[1])
+        npg = ks.shape[0]
+        pg_phys = jnp.where(tbl[:npg] >= 0, tbl[:npg], oob)
+        extra["k_scale"] = k_scale.at[pg_phys].set(ks, mode="drop")
+        extra["v_scale"] = v_scale.at[pg_phys].set(vs, mode="drop")
+        k_pool = cache.k_pool.at[phys, :, off].set(
+            quantize_tokens(k_tok, ks[idx // ps]), mode="drop")
+        v_pool = cache.v_pool.at[phys, :, off].set(
+            quantize_tokens(v_tok, vs[idx // ps]), mode="drop")
+        if cache.hot_ids is not None:
+            # H2O precision policy: the lane's freshest page is the
+            # hottest (recency-protected by eviction); promote it to a
+            # full-precision residency, evicting the lowest accumulated
+            # score resident. Stale residents on recycled pages drop.
+            hot_ids = _demote_residents(cache.hot_ids, all_phys)
+            lp = (num_slots - 1) // ps
+            new_page = tbl[lp]
+            res_score = jnp.where(
+                hot_ids >= 0,
+                acc_pool[jnp.maximum(hot_ids, 0)].sum(axis=(1, 2)),
+                -jnp.inf)
+            victim = jnp.argmin(res_score).astype(jnp.int32)
+            vslot = jnp.where(new_page >= 0, victim, hot_ids.shape[0])
+            extra["hot_ids"] = hot_ids.at[vslot].set(new_page, mode="drop")
+            pad = (lp + 1) * ps - num_slots
+            k_seg = jnp.pad(req.k[0][:, lp * ps:num_slots],
+                            ((0, 0), (0, pad), (0, 0)))
+            v_seg = jnp.pad(req.v[0][:, lp * ps:num_slots],
+                            ((0, 0), (0, pad), (0, 0)))
+            extra["k_hot"] = cache.k_hot.at[vslot].set(
+                k_seg.astype(cache.k_hot.dtype), mode="drop")
+            extra["v_hot"] = cache.v_hot.at[vslot].set(
+                v_seg.astype(cache.v_hot.dtype), mode="drop")
     pos_pool = pos_pool.at[phys, off].set(req.positions[0, idx], mode="drop")
     acc_pool = acc_pool.at[phys, :, off].set(
         req.acc_score[0][:, idx].transpose(1, 0), mode="drop")
     count = cache.count.at[lane].set(req.count[0])
     return dataclasses.replace(cache, k_pool=k_pool, v_pool=v_pool,
                                pos_pool=pos_pool, acc_pool=acc_pool,
-                               count=count)
+                               count=count, **extra)
 
 
 def paged_write_tail(cache: PagedAttnCache, lane: jax.Array,
@@ -506,15 +739,37 @@ def paged_write_tail(cache: PagedAttnCache, lane: jax.Array,
     entry = tbl[idx // ps]
     phys = jnp.where(entry >= 0, entry, oob)
     off = idx % ps
-    k_pool = cache.k_pool.at[phys, :, off].set(
-        k_tail.astype(cache.k_pool.dtype), mode="drop")
-    v_pool = cache.v_pool.at[phys, :, off].set(
-        v_tail.astype(cache.v_pool.dtype), mode="drop")
+    extra = {}
+    if cache.k_scale is None:
+        k_pool = cache.k_pool.at[phys, :, off].set(
+            k_tail.astype(cache.k_pool.dtype), mode="drop")
+        v_pool = cache.v_pool.at[phys, :, off].set(
+            v_tail.astype(cache.v_pool.dtype), mode="drop")
+    else:
+        # the tail starts page-aligned, so per-page scales line up with
+        # tbl[start_page + i]; shared prefix pages (< start_page) keep
+        # the registrant's scales untouched.
+        k_scale = cache.k_scale.at[clear_phys].set(0.0, mode="drop")
+        v_scale = cache.v_scale.at[clear_phys].set(0.0, mode="drop")
+        ks = _page_scales(k_tail, ps, k_scale.shape[1])  # (NPG, SH)
+        vs = _page_scales(v_tail, ps, v_scale.shape[1])
+        npg = ks.shape[0]
+        pg_tbl = tbl[start_page + jnp.arange(npg)]
+        pg_phys = jnp.where(pg_tbl >= 0, pg_tbl, oob)
+        extra["k_scale"] = k_scale.at[pg_phys].set(ks, mode="drop")
+        extra["v_scale"] = v_scale.at[pg_phys].set(vs, mode="drop")
+        tpg = jnp.arange(t) // ps
+        k_pool = cache.k_pool.at[phys, :, off].set(
+            quantize_tokens(k_tail, ks[tpg]), mode="drop")
+        v_pool = cache.v_pool.at[phys, :, off].set(
+            quantize_tokens(v_tail, vs[tpg]), mode="drop")
+        if cache.hot_ids is not None:
+            extra["hot_ids"] = _demote_residents(cache.hot_ids, clear_phys)
     pos_pool = pos_pool.at[phys, off].set(positions, mode="drop")
     count = cache.count.at[lane].set(new_count)
     return dataclasses.replace(cache, k_pool=k_pool, v_pool=v_pool,
                                pos_pool=pos_pool, acc_pool=acc_pool,
-                               count=count)
+                               count=count, **extra)
 
 
 def paged_reset_lane(cache: PagedAttnCache, lane: jax.Array
@@ -525,12 +780,34 @@ def paged_reset_lane(cache: PagedAttnCache, lane: jax.Array
     oob = cache.num_pages
     tbl = cache.page_table[lane]
     phys = jnp.where(tbl >= 0, tbl, oob)
+    extra = {}
+    if cache.k_scale is not None:
+        extra["k_scale"] = cache.k_scale.at[phys].set(0.0, mode="drop")
+        extra["v_scale"] = cache.v_scale.at[phys].set(0.0, mode="drop")
+    if cache.hot_ids is not None:
+        extra["hot_ids"] = _demote_residents(cache.hot_ids, phys)
     return dataclasses.replace(
         cache,
         pos_pool=cache.pos_pool.at[phys].set(-1, mode="drop"),
         acc_pool=cache.acc_pool.at[phys].set(0.0, mode="drop"),
         page_table=cache.page_table.at[lane].set(-1),
-        count=cache.count.at[lane].set(0))
+        count=cache.count.at[lane].set(0), **extra)
+
+
+def paged_copy_page(cache: PagedAttnCache, src: jax.Array, dst: jax.Array
+                    ) -> PagedAttnCache:
+    """Device-side companion of the host allocator's copy-on-write
+    ``PagePool.make_private``: duplicate physical page ``src`` into the
+    freshly-reserved ``dst``. K/V content, positions, H2O scores and (for
+    quantized pools) the per-page scale metadata ride together, so a
+    privatized copy dequantizes bit-identically to the shared original."""
+    cp = lambda pool: pool.at[dst].set(pool[src])
+    extra = {}
+    if cache.k_scale is not None:
+        extra = dict(k_scale=cp(cache.k_scale), v_scale=cp(cache.v_scale))
+    return dataclasses.replace(
+        cache, k_pool=cp(cache.k_pool), v_pool=cp(cache.v_pool),
+        pos_pool=cp(cache.pos_pool), acc_pool=cp(cache.acc_pool), **extra)
 
 
 def tree_bytes(tree) -> int:

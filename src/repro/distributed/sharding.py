@@ -216,15 +216,25 @@ def decode_state_pspec(path, shape, mesh: Mesh, *,
     # trailing dim) shard over `model`, page tables ride the lane/batch
     # axis, positions replicate (tiny).
     paged = {"k_pool": 4, "v_pool": 4, "acc_pool": 3, "pos_pool": 2,
-             "page_table": 2}.get(name)
+             "page_table": 2, "k_scale": 2, "v_scale": 2,
+             "k_hot": 4, "v_hot": 4, "hot_ids": 1}.get(name)
     if paged is not None:
         pad = [None] * (nd - paged)
-        if name in ("k_pool", "v_pool"):       # ((L,) P, KV, ps, D)
+        if name in ("k_pool", "v_pool", "k_hot", "v_hot"):
+            # pools ((L,) P, KV, ps, D); hot overlay ((L,) H, KV, ps, D)
             spec = P(*pad, None, kv_ax, None, None)
         elif name == "acc_pool":               # ((L,) P, KV, ps)
             spec = P(*pad, None, kv_ax, None)
         elif name == "page_table":             # ((L,) B, NP)
             spec = P(*pad, batch_ax, None)
+        elif name in ("k_scale", "v_scale"):   # ((L,) P, SH)
+            # per-page quant scales partition with their pages' KV heads
+            # over `model` (page axis stays whole, like the pool); the
+            # one-scale-per-page granularity (SH=1) sanitizes to
+            # replicated.
+            spec = P(*pad, None, kv_ax)
+        elif name == "hot_ids":                # ((L,) H) — tiny, replicated
+            spec = P(*pad, None)
         else:                                  # pos_pool ((L,) P, ps)
             spec = P(*pad, None, None)
         return sanitize(spec, shape, mesh)

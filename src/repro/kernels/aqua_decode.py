@@ -104,11 +104,74 @@ def _paged_kernel(idx_ref, pt_ref, len_ref, *rest, **kw):
     _kernel(idx_ref, len_ref, *rest, **kw)
 
 
+def _paged_quant_kernel(idx_ref, pt_ref, len_ref, ks_ref, vs_ref,
+                        q_ref, k_ref, v_ref, o_ref,
+                        s_ref, m_ref, l_ref, acc_ref, *, scale: float,
+                        seq_blk: int, nb_sel: int, nsb: int, bpp: int,
+                        g: int, s_stride: int):
+    """int8 paged variant: dequant-free score accumulation.
+
+    The int8 K̂ tiles feed the same dot_general (upcast in-register); the
+    per-page key scale is *folded into the softmax scale* at finalize —
+    every sequence block lives inside exactly one physical page, so one
+    scalar multiply replaces a per-element dequant of the K tile. V tiles
+    dequantize once per (b, h, sb) with their page's scalar. The scales
+    ride scalar prefetch (SMEM) like the page table; ``s_stride`` is 1
+    for per-(page, head) scales and 0 for one-scale-per-page."""
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    sb = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when((sb == 0) & (j == 0))
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(j == 0)
+    def _reset_scores():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    q_blk = q_ref[0, 0].astype(jnp.float32)          # (1, bd)
+    k_blk = k_ref[0, 0, 0].astype(jnp.float32)       # (bd, S_blk) int->f32
+    s_ref[...] += jax.lax.dot_general(
+        q_blk, k_blk, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == nb_sel - 1)
+    def _finalize_block():
+        page = jnp.maximum(pt_ref[b, sb // bpp], 0)
+        kv = (h // g) * s_stride
+        s = s_ref[...] * (scale * ks_ref[page, kv])   # (1, S_blk)
+        pos = sb * seq_blk + jax.lax.broadcasted_iota(jnp.int32, (1, seq_blk),
+                                                      1)
+        valid = pos < len_ref[b]
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[0, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        p = jnp.exp(s - m_new)                        # (1, S_blk)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[0, 0] = l_ref[0, 0] * corr + jnp.sum(p)
+        v_blk = v_ref[0, 0].astype(jnp.float32) * vs_ref[page, kv]
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[0, 0] = m_new
+
+        @pl.when(sb == nsb - 1)
+        def _write():
+            o_ref[...] = (acc_ref[...] /
+                          jnp.maximum(l_ref[0, 0], 1e-30)
+                          ).astype(o_ref.dtype)[None]
+
+
 @functools.partial(jax.jit, static_argnames=("block_dims", "seq_blk",
                                              "scale", "interpret"))
 def aqua_paged_decode_attention(q_sel: jax.Array, khat_pages: jax.Array,
                                 v_pages: jax.Array, block_idx: jax.Array,
                                 page_table: jax.Array, lengths: jax.Array,
+                                k_scale=None, v_scale=None,
                                 *, block_dims: int = 8, seq_blk: int = 128,
                                 scale=None, interpret=None) -> jax.Array:
     """Block-sparse AQUA decode attention over a *paged* K/V pool.
@@ -123,6 +186,8 @@ def aqua_paged_decode_attention(q_sel: jax.Array, khat_pages: jax.Array,
                  -1 unmapped (clamped; masked off via ``lengths``)
     lengths:     (B,) int32 — valid cache length per row. Full-cache
                  policy only: logical slot == token position.
+    k_scale, v_scale: (P, SH) f32 per-page scales for int8 pools (SH ∈
+                 {KV, 1}); both None for full-precision pools.
     returns out: (B, H, Dv)
 
     The page table is the second scalar-prefetch operand: the K and V
@@ -131,6 +196,14 @@ def aqua_paged_decode_attention(q_sel: jax.Array, khat_pages: jax.Array,
     selection already uses, composed on the sequence axis. HBM traffic is
     unchanged vs the contiguous kernel (pages only redirect addressing);
     the pool itself is what shrinks (repro.core.kvcache.PagedAttnCache).
+
+    Quantized pools compose on the same machinery: the per-page scales
+    are scalar-prefetch operands 4/5, the int8 K̂ tile feeds the MXU
+    upcast in-register, and the key scale folds into the softmax scale at
+    finalize — no dequantized K/V page ever materializes
+    (:func:`_paged_quant_kernel`). HBM score-read traffic drops a further
+    4× vs bf16 pools (1 byte/elem), compounding with the ``k_ratio``
+    dim-sparsity term.
 
     Shard-local contract: under a serving mesh this runs inside
     ``shard_map`` with B the shard's lane-group extent and ``page_table``
@@ -154,23 +227,27 @@ def aqua_paged_decode_attention(q_sel: jax.Array, khat_pages: jax.Array,
     interpret = _rtf.resolve_interpret(interpret)
 
     grid = (b, h, nsb, nb_sel)
+    quant = k_scale is not None
+    nsp = 5 if quant else 3
 
-    def q_map(bi, hi, sbi, ji, idx_ref, pt_ref, len_ref):
+    # trailing scalar-prefetch refs: (idx, pt, len[, ks, vs]) — the maps
+    # only dereference idx/pt, so *refs covers both arities.
+    def q_map(bi, hi, sbi, ji, *refs):
         return (bi, hi, ji, 0)
 
-    def k_map(bi, hi, sbi, ji, idx_ref, pt_ref, len_ref):
-        page = jnp.maximum(pt_ref[bi, sbi // bpp], 0)
-        return (page, hi // g, idx_ref[bi, hi, ji], 0, sbi % bpp)
+    def k_map(bi, hi, sbi, ji, *refs):
+        page = jnp.maximum(refs[1][bi, sbi // bpp], 0)
+        return (page, hi // g, refs[0][bi, hi, ji], 0, sbi % bpp)
 
-    def v_map(bi, hi, sbi, ji, idx_ref, pt_ref, len_ref):
-        page = jnp.maximum(pt_ref[bi, sbi // bpp], 0)
+    def v_map(bi, hi, sbi, ji, *refs):
+        page = jnp.maximum(refs[1][bi, sbi // bpp], 0)
         return (page, hi // g, sbi % bpp, 0)
 
-    def o_map(bi, hi, sbi, ji, idx_ref, pt_ref, len_ref):
+    def o_map(bi, hi, sbi, ji, *refs):
         return (bi, hi, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
+        num_scalar_prefetch=nsp,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, 1, bd), q_map),
@@ -185,14 +262,28 @@ def aqua_paged_decode_attention(q_sel: jax.Array, khat_pages: jax.Array,
             pltpu.VMEM((1, dv), jnp.float32),        # output accumulator
         ],
     )
-    kernel = functools.partial(_paged_kernel, scale=scale, seq_blk=seq_blk,
-                               nb_sel=nb_sel, nsb=nsb)
+    if quant:
+        kernel = functools.partial(
+            _paged_quant_kernel, scale=scale, seq_blk=seq_blk,
+            nb_sel=nb_sel, nsb=nsb, bpp=bpp, g=g,
+            s_stride=1 if k_scale.shape[1] > 1 else 0)
+        # int8 pools can't carry the output dtype; accumulate/emit f32.
+        out_dtype = jnp.float32
+        operands = (block_idx, page_table, lengths,
+                    k_scale.astype(jnp.float32), v_scale.astype(jnp.float32),
+                    q_sel, khat_pages, v_pages)
+    else:
+        kernel = functools.partial(_paged_kernel, scale=scale,
+                                   seq_blk=seq_blk, nb_sel=nb_sel, nsb=nsb)
+        out_dtype = v_pages.dtype
+        operands = (block_idx, page_table, lengths, q_sel, khat_pages,
+                    v_pages)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, h, dv), v_pages.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, h, dv), out_dtype),
         interpret=interpret,
-    )(block_idx, page_table, lengths, q_sel, khat_pages, v_pages)
+    )(*operands)
 
 
 @functools.partial(jax.jit, static_argnames=("block_dims", "seq_blk",

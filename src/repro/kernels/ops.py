@@ -125,7 +125,9 @@ def aqua_decode(q_hat: jax.Array, khat: jax.Array, v: jax.Array,
                                              "seq_blk", "scale",
                                              "interpret"))
 def aqua_paged_decode(q_hat: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
-                      page_table: jax.Array, lengths: jax.Array, *,
+                      page_table: jax.Array, lengths: jax.Array,
+                      k_scale: Optional[jax.Array] = None,
+                      v_scale: Optional[jax.Array] = None, *,
                       k_ratio: float = 0.75, block_dims: int = 8,
                       seq_blk: int = 128, scale: Optional[float] = None,
                       interpret: Optional[bool] = None) -> jax.Array:
@@ -134,6 +136,10 @@ def aqua_paged_decode(q_hat: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     q_hat: (B, H, D) projected query; k_pool: (P, KV, ps, D) projected key
     page pool (seq-major per page); v_pool: (P, KV, ps, Dv);
     page_table: (B, NP_lane) int32 (-1 unmapped); lengths: (B,).
+    k_scale/v_scale: (P, SH) f32 per-page scales when the pools are int8
+    quantized (None for full precision) — threaded to the kernel as extra
+    scalar-prefetch operands, where the key scale folds into the softmax
+    scale (dequant-free score accumulation).
 
     Same magnitude selection as :func:`aqua_decode`; the physical page of
     each sequence block is resolved inside the kernel's scalar-prefetch
@@ -157,6 +163,7 @@ def aqua_paged_decode(q_hat: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     khat_pages = to_dim_major_blocks(k_pool, block_dims)  # (P,KV,NB,bd,ps)
     return aqua_paged_decode_attention(q_sel, khat_pages, v_pool, block_idx,
                                        page_table, lengths,
+                                       k_scale, v_scale,
                                        block_dims=block_dims,
                                        seq_blk=seq_blk, scale=scale,
                                        interpret=interpret)

@@ -24,7 +24,8 @@ import re
 
 from jax.sharding import AbstractMesh
 
-from repro.configs.base import AquaConfig, AttentionConfig, ServingConfig
+from repro.configs.base import (AquaConfig, AttentionConfig, CacheSpec,
+                                QuantSpec, ServingConfig)
 from repro.core.dispatch import resolve_dispatch_plan
 
 BEGIN = "<!-- dispatch-matrix:begin (repro.launch.matrix — do not edit) -->"
@@ -48,6 +49,8 @@ _ROWS = (
 
 def _cell(plan) -> str:
     if plan.mesh_native:
+        if plan.quantization != "none":
+            return "shard_mapped Pallas kernel (scale-folded int8)"
         return "shard_mapped Pallas kernel"
     # the structured reasons are the REASON_* constants; the first one is
     # the highest-priority explanation in check order
@@ -66,14 +69,20 @@ def generate_matrix() -> str:
     lines = [
         BEGIN,
         "| backend | contiguous cache @ mesh | paged cache @ mesh "
-        "| chunked prefill @ budget |",
-        "|---|---|---|---|",
+        "| int8 paged cache @ mesh | chunked prefill @ budget |",
+        "|---|---|---|---|---|",
     ]
+    layouts = (
+        (CacheSpec(), QuantSpec()),
+        (CacheSpec(page_size=8), QuantSpec()),
+        (CacheSpec(page_size=8), QuantSpec(kv_dtype="int8")),
+    )
     for label, backend, aqua in _ROWS:
         att = dataclasses.replace(_ATT, backend=backend)
         cells = []
-        for page_size in (None, 8):
-            serving = dataclasses.replace(_SERVING, page_size=page_size)
+        for cache, quant in layouts:
+            serving = dataclasses.replace(_SERVING, cache=cache,
+                                          quant=quant)
             plan = resolve_dispatch_plan(attention=att, aqua=aqua,
                                          serving=serving, mesh=mesh)
             cells.append(_cell(plan))
@@ -84,7 +93,8 @@ def generate_matrix() -> str:
         plan = resolve_dispatch_plan(attention=att, aqua=aqua,
                                      serving=serving, mesh=mesh)
         cells.append(_chunk_cell(plan))
-        lines.append(f"| `{label}` | {cells[0]} | {cells[1]} | {cells[2]} |")
+        lines.append(f"| `{label}` | {cells[0]} | {cells[1]} | {cells[2]} "
+                     f"| {cells[3]} |")
     lines.append(END)
     return "\n".join(lines)
 

@@ -33,7 +33,8 @@ import numpy as np
 import jax
 
 from repro.configs import get_config, reduced
-from repro.configs.base import AquaConfig, ServingConfig
+from repro.configs.base import (AquaConfig, CacheSpec, QuantSpec,
+                                ServingConfig)
 from repro.core.calibration import calibrate, identity_projections
 from repro.data.pipeline import DataConfig, add_frontend_inputs, \
     calibration_batches, make_batch
@@ -83,6 +84,20 @@ def main():
                          "free pages)")
     ap.add_argument("--no-prefix-share", action="store_true",
                     help="disable prompt prefix page sharing")
+    ap.add_argument("--kv-dtype", default="bf16", choices=("bf16", "int8"),
+                    help="paged K̂/V pool storage dtype: 'int8' stores "
+                         "per-page symmetric-quantized pools with f32 "
+                         "scale metadata beside the page table (requires "
+                         "--page-size); decode folds the scales into the "
+                         "Pallas kernel's softmax scale — no dequant pass")
+    ap.add_argument("--scale-granularity", default="page_head",
+                    choices=("page_head", "page"),
+                    help="int8 scale granularity: one scale per "
+                         "(page, kv head) or one per page")
+    ap.add_argument("--hot-frac", type=float, default=0.0,
+                    help="fraction of the pool kept as full-precision hot "
+                         "residents (H2O score policy; mixed precision "
+                         "serves on the reference path, not the kernel)")
     # chunked-prefill/decode interleaving
     ap.add_argument("--prefill-budget", type=int, default=None,
                     help="interleave admissions with decode: at most this "
@@ -156,10 +171,15 @@ def main():
     scfg = ServingConfig(max_lanes=args.lanes, max_seq=args.max_seq,
                          max_new_tokens=args.steps,
                          temperature=args.temperature,
-                         page_size=args.page_size,
-                         num_pages=args.pool_pages,
-                         prefix_sharing=not args.no_prefix_share,
-                         prefill_budget_tokens=args.prefill_budget)
+                         prefill_budget_tokens=args.prefill_budget,
+                         cache=CacheSpec(
+                             page_size=args.page_size,
+                             num_pages=args.pool_pages,
+                             prefix_sharing=not args.no_prefix_share),
+                         quant=QuantSpec(
+                             kv_dtype=args.kv_dtype,
+                             scale_granularity=args.scale_granularity,
+                             hot_resident_fraction=args.hot_frac))
     eng = ContinuousBatchingEngine(cfg, params, proj, serving=scfg,
                                    backend=args.backend, mesh=mesh)
     plan = eng.dispatch_plan()
@@ -264,6 +284,21 @@ def main():
                   f"{args.shared_prefix_len}-token prefix but no "
                   "admission reused shared prefix pages")
             raise SystemExit(1)
+        if eng.quant_spec.quantized:
+            from repro.models.base import PagingSpec
+            fp_model = build_model(cfg)
+            fp_model.enable_paging(PagingSpec(ps, num_pages))
+            fp_bytes = decode_state_bytes(fp_model, args.lanes,
+                                          args.max_seq)
+            qratio = eng.cache_bytes() / fp_bytes
+            print(f"[serve] quantized pool ({eng.quant_spec.kv_dtype}) "
+                  f"bytes vs full-precision paged: {eng.cache_bytes():,} "
+                  f"/ {fp_bytes:,} = {qratio:.2f}x")
+            if args.verify and qratio >= 0.60:
+                print("[serve] VERIFY FAILED: quantized pool does not "
+                      "realize the memory win (expected <= 0.60x the "
+                      "full-precision paged pool)")
+                raise SystemExit(1)
 
     if ((args.verify or args.expect_kernel_mesh) and mesh is not None
             and plan.mesh_native):
@@ -318,15 +353,21 @@ def main():
             # therefore verify against the single-device *paged* engine
             # instead: the same admission paths solo, so the mesh wrap —
             # which is what --verify pins here — must be token-exact.
+            # Quantized drives route the same way for a different reason:
+            # int8 pools round differently than a full-precision cache by
+            # construction, so only the single-device engine with the SAME
+            # quantization math is a token-exact reference.
             prefix_engaged = (plan.prefix_sharing and plan.mesh_native
                               and args.shared_prefix_len > 0)
-            if prefix_engaged:
-                where = "single-device paged"
+            if prefix_engaged or plan.quantization != "none":
+                where = ("single-device paged"
+                         if plan.quantization == "none"
+                         else f"single-device paged {plan.quantization}")
                 ref_scfg = scfg
             else:
                 where = "single-device contiguous"
-                ref_scfg = dataclasses.replace(scfg, page_size=None,
-                                               num_pages=None)
+                ref_scfg = dataclasses.replace(scfg, cache=CacheSpec(),
+                                               quant=QuantSpec())
             # the reference always admits monolithically: a chunked drive
             # is thereby pinned against the engine it replaces — chunking
             # must change *when* work happens, never *what* is computed

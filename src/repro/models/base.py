@@ -25,10 +25,19 @@ class PagingSpec:
     """Block-paged KV cache geometry installed on a model by the serving
     engine (``LM.enable_paging``): ``init_decode_state`` then allocates a
     global page pool + per-lane page tables instead of contiguous per-lane
-    slot stripes (repro.core.kvcache.PagedAttnCache)."""
+    slot stripes (repro.core.kvcache.PagedAttnCache).
+
+    ``kv_dtype``/``scale_granularity``/``hot_pages`` carry the engine's
+    resolved ``configs.base.QuantSpec``: ``"int8"`` pools store per-page
+    symmetric-quantized K̂/V with f32 scales beside the page table, and
+    ``hot_pages > 0`` adds a write-through full-precision overlay for
+    that many hot-resident pages (mixed precision)."""
 
     page_size: int
     num_pages: int
+    kv_dtype: str = "bf16"                # bf16 | int8
+    scale_granularity: str = "page_head"  # page_head | page
+    hot_pages: int = 0
 
 
 class LM:

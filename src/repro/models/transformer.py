@@ -201,7 +201,9 @@ class DenseLM(LM):
             npl = kv.paged_pages(slots, pg.page_size)
             one = lambda: kv.init_paged_cache(
                 batch_size, acfg.num_kv_heads, pg.num_pages, npl,
-                pg.page_size, dk, dv, self.dtype)
+                pg.page_size, dk, dv, self.dtype, kv_dtype=pg.kv_dtype,
+                scale_granularity=pg.scale_granularity,
+                hot_pages=pg.hot_pages)
         else:
             one = lambda: kv.init_attn_cache(batch_size, acfg.num_kv_heads,
                                              slots, dk, dv, self.dtype)
@@ -267,15 +269,11 @@ class DenseLM(LM):
             p_i, cache_i, proj_i = layer_in
             s_log = cache_i.num_slots
             if paged:
-                tbl = cache_i.page_table[lane]            # (NP,)
-                pk = cache_i.k_pool[jnp.maximum(tbl, 0)]  # (NP, KV, ps, Dk)
-                pv = cache_i.v_pool[jnp.maximum(tbl, 0)]
-                ppos = cache_i.pos_pool[jnp.maximum(tbl, 0)]
-                ppos = jnp.where(tbl[:, None] >= 0, ppos, -1)
-                kvh = pk.shape[1]
-                pk = pk.transpose(1, 0, 2, 3).reshape(1, kvh, s_log, -1)
-                pv = pv.transpose(1, 0, 2, 3).reshape(1, kvh, s_log, -1)
-                ppos = ppos.reshape(1, s_log)
+                # gathered + (for int8 pools) dequantized lane view of the
+                # already-written prefix — quantization never leaks past
+                # the pool boundary into the attention math
+                pk, pv, ppos = kv.paged_lane_pages(cache_i, lane,
+                                                   dtype=self.dtype)
             else:
                 pk = cache_i.k[lane][None]                # (1, KV, S, Dk)
                 pv = cache_i.v[lane][None]

@@ -50,7 +50,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig, ServingConfig
+from repro.configs.base import (ModelConfig, ServingConfig,
+                                resolve_cache_specs)
 from repro.core import kvcache as kvc
 from repro.core.calibration import AquaProjections
 from repro.core.dispatch import DispatchPlan, resolve_dispatch_plan
@@ -277,6 +278,11 @@ class ContinuousBatchingEngine:
         serving.validate()
         self.cfg = cfg
         self.scfg = serving
+        # the one resolution point of the cache/quant config surface:
+        # flat legacy fields warn here (once per engine), everywhere else
+        # resolves silently against the same specs
+        self.cache_spec, self.quant_spec = resolve_cache_specs(serving,
+                                                               warn=True)
         self.model = build_model(cfg)
         self.params = params
         self.proj = None
@@ -299,7 +305,8 @@ class ContinuousBatchingEngine:
         # replaces the contiguous per-lane slot stripes; the host-side
         # PagePool allocator (created per drive in serve()) hands finished
         # page-table rows to the jitted admission steps
-        self._paged = serving.page_size is not None
+        cache_spec, quant_spec = self.cache_spec, self.quant_spec
+        self._paged = cache_spec.paged
         self.page_pool: Optional[PagePool] = None
         if self._paged:
             if cfg.attention is None or not self.model.supports_paging:
@@ -309,25 +316,35 @@ class ContinuousBatchingEngine:
             from repro.core.kvcache import cache_slots
             slots = cache_slots(serving.max_seq, cfg.attention.window,
                                 h2o_budget(cfg.aqua, serving.max_seq))
-            if slots % serving.page_size != 0:
+            if slots % cache_spec.page_size != 0:
                 raise ValueError(
                     f"cache slots ({slots}: window/H2O budget) must be a "
-                    f"multiple of page_size={serving.page_size} so the "
+                    f"multiple of page_size={cache_spec.page_size} so the "
                     "ring/eviction slot arithmetic tiles into whole pages")
-            self._pages_per_lane = slots // serving.page_size
+            self._pages_per_lane = slots // cache_spec.page_size
             self._num_slots = slots
-            num_pages = serving.num_pages
+            num_pages = cache_spec.num_pages
             if num_pages is None:       # lane-stripe parity by default
                 num_pages = serving.max_lanes * self._pages_per_lane
-            self.model.enable_paging(PagingSpec(serving.page_size,
-                                                num_pages))
+            # hot residents: a fraction of the pool carries the
+            # full-precision write-through overlay (mixed precision)
+            hot_pages = 0
+            if quant_spec.quantized and quant_spec.hot_resident_fraction:
+                hot_pages = max(
+                    1, int(round(quant_spec.hot_resident_fraction
+                                 * num_pages)))
+            self.model.enable_paging(PagingSpec(
+                cache_spec.page_size, num_pages,
+                kv_dtype=quant_spec.kv_dtype,
+                scale_granularity=quant_spec.scale_granularity,
+                hot_pages=hot_pages))
             self._num_pages = num_pages
             # prefix sharing: identical page-aligned prompt prefixes map
             # the same physical pages. Needs position-pure token K/V
             # (causal, no modality frontend splice) and the full-cache
             # policy (shared pages are read-only; H2O statistics and ring
             # overwrites would write them)
-            self._prefix_ok = (serving.prefix_sharing
+            self._prefix_ok = (cache_spec.prefix_sharing
                                and self._supports_ragged
                                and cfg.frontend.kind == "none")
         else:
@@ -378,7 +395,7 @@ class ContinuousBatchingEngine:
         self._chunk_align = self.scfg.prompt_bucket
         if self._paged:
             self._chunk_align = math.lcm(self._chunk_align,
-                                         self.scfg.page_size)
+                                         self.cache_spec.page_size)
         # block-sparse kernel prefill: fresh-prompt chunks must reproduce
         # the kernel's per-tile dim-block selection, so cursors also stay
         # q_blk-aligned and the chunk step selects per tile
@@ -511,7 +528,7 @@ class ContinuousBatchingEngine:
         pool is smaller than the lane-stripe layout it replaces."""
         if not self._paged:
             return None
-        return (self._num_pages, self._pages_per_lane, self.scfg.page_size)
+        return (self._num_pages, self._pages_per_lane, self.cache_spec.page_size)
 
     # -- jitted bodies -------------------------------------------------
     def _finish_admit(self, logits, lanes: LaneState, lane, rng, max_new,
@@ -707,7 +724,7 @@ class ContinuousBatchingEngine:
         jitted steps never allocate), and which of them are shared prefix
         pages already in the pool. Returns (shared_pages, num_new) or None
         when the pool can't cover it yet (the request waits)."""
-        ps = self.scfg.page_size
+        ps = self.cache_spec.page_size
         shared: list = []
         if self._supports_ragged:
             if self._prefix_ok and not req.extra_inputs:
@@ -741,7 +758,7 @@ class ContinuousBatchingEngine:
             return False
         prefix_len = 0
         if self._paged and page_plan is not None:
-            prefix_len = len(page_plan[0]) * self.scfg.page_size
+            prefix_len = len(page_plan[0]) * self.cache_spec.page_size
         padded = self._padded_prompt_len(req.prompt_len - prefix_len,
                                          self.scfg.max_seq - prefix_len)
         return padded > self.scfg.prefill_budget_tokens
@@ -770,7 +787,7 @@ class ContinuousBatchingEngine:
             # admission, so a half-written prompt must stay unindexed
             job["register"] = self._prefix_ok and not req.extra_inputs
             if shared:
-                prefix_len = len(shared) * self.scfg.page_size
+                prefix_len = len(shared) * self.cache_spec.page_size
                 pool.prefix_hits += 1
                 pool.tokens_saved += prefix_len
                 sched.begin_prefill(lane, prefix_len, req.prompt_len)
@@ -824,7 +841,7 @@ class ContinuousBatchingEngine:
         row = np.full((self._pages_per_lane,), -1, np.int32)
         row[:len(pages)] = pages
         row = jnp.asarray(row)
-        ps = self.scfg.page_size
+        ps = self.cache_spec.page_size
         if shared:
             prefix_len = len(shared) * ps
             pool.prefix_hits += 1
@@ -881,7 +898,7 @@ class ContinuousBatchingEngine:
             use_top_k |= r.top_k > 0
             sched.submit(r)
         if self._paged:
-            self.page_pool = PagePool(self._num_pages, self.scfg.page_size,
+            self.page_pool = PagePool(self._num_pages, self.cache_spec.page_size,
                                       prefix_sharing=self._prefix_ok)
 
         rng = jax.random.fold_in(self._base_rng, self._serves)
@@ -955,9 +972,9 @@ class ContinuousBatchingEngine:
                     if skip > 0 and sched.num_active == 0:
                         raise RuntimeError(
                             f"page pool ({self._num_pages} pages of "
-                            f"{self.scfg.page_size}) cannot fit any of the "
-                            f"{skip} arrived request(s) even with every "
-                            "lane free — raise ServingConfig.num_pages")
+                            f"{self.cache_spec.page_size}) cannot fit any "
+                            f"of the {skip} arrived request(s) even with "
+                            "every lane free — raise CacheSpec.num_pages")
                     break
                 if self._should_chunk(req, page_plan):
                     lane, job = self._admit_chunked(sched, req, page_plan)

@@ -6,8 +6,11 @@ row is absent from either file the gate must be *skipped with a loud
 stderr note* — not silently fall back to absolute tok/s, which compares
 across machine speeds and fails (or passes) spuriously.
 """
+import json
 import os
 import sys
+
+import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
@@ -88,6 +91,48 @@ def test_anchor_present_rows_still_gate_deterministic_metrics():
     fresh = _table([("kernel/aqua_decode_k0.5", "hbm_bytes_ratio=0.900")])
     rows = {(n, m): ok for n, m, _, _, ok in _run(base, fresh)}
     assert rows[("kernel/aqua_decode_k0.5", "hbm_bytes_ratio")] is False
+
+
+def test_exit_summary_names_each_failed_gate(tmp_path, capsys):
+    """A red gate's exit summary must name WHICH row+metric failed — a
+    bare failure count forces re-scrolling the whole table in CI logs."""
+    base = [
+        {"name": "kernel/aqua_decode_k0.5", "us_per_call": 1.0,
+         "derived": "hbm_bytes_ratio=0.600 max_abs_err=1e-6"},
+        {"name": "kernel/healthy", "us_per_call": 1.0,
+         "derived": "max_abs_err=1e-6"},
+    ]
+    fresh = [
+        {"name": "kernel/aqua_decode_k0.5", "us_per_call": 1.0,
+         "derived": "hbm_bytes_ratio=0.900 max_abs_err=1e-6"},
+        {"name": "kernel/healthy", "us_per_call": 1.0,
+         "derived": "max_abs_err=1e-6"},
+    ]
+    bp, fp = tmp_path / "base.json", tmp_path / "fresh.json"
+    bp.write_text(json.dumps(base))
+    fp.write_text(json.dumps(fresh))
+    with pytest.raises(SystemExit) as exc:
+        cmp.main([str(bp), str(fp)])
+    assert exc.value.code == 1
+    out = capsys.readouterr().out
+    # the summary names the failed row AND its metric, with both values
+    assert "FAILED kernel/aqua_decode_k0.5: hbm_bytes_ratio" in out
+    assert "base=0.6" in out and "fresh=0.9" in out
+    # healthy rows stay out of the exit summary
+    assert "FAILED kernel/healthy" not in out
+    assert "1/3 checks beyond threshold" in out
+
+
+def test_exit_summary_green_path_exits_zero(tmp_path, capsys):
+    rows = [{"name": "kernel/healthy", "us_per_call": 1.0,
+             "derived": "max_abs_err=1e-6"}]
+    bp, fp = tmp_path / "base.json", tmp_path / "fresh.json"
+    bp.write_text(json.dumps(rows))
+    fp.write_text(json.dumps(rows))
+    cmp.main([str(bp), str(fp)])  # must not raise SystemExit
+    out = capsys.readouterr().out
+    assert "bench gate green" in out
+    assert "FAILED" not in out
 
 
 def test_interleave_gate_compares_within_fresh_dump():

@@ -19,7 +19,7 @@ import numpy as np
 import pytest
 
 from repro.configs import reduced
-from repro.configs.base import AquaConfig, ServingConfig
+from repro.configs.base import AquaConfig, CacheSpec, ServingConfig
 from repro.core.calibration import identity_projections
 from repro.models import build_model
 from repro.serving import ContinuousBatchingEngine, Request
@@ -45,7 +45,7 @@ def _trace(cfg, n=5, max_new=6, seed=3, lo=20, hi=60):
 
 SCFG = ServingConfig(max_lanes=4, max_seq=96, max_new_tokens=6,
                      prompt_bucket=8)
-PSCFG = dataclasses.replace(SCFG, page_size=8, num_pages=48)
+PSCFG = dataclasses.replace(SCFG, cache=CacheSpec(page_size=8, num_pages=48))
 
 # budget 16 < every padded prompt in the trace, so admissions really
 # chunk; prefill_q_blk=16 keeps the block-sparse kernel's selection
@@ -136,8 +136,9 @@ def test_hol_lookahead_admits_small_after_blocked_head(dense_model):
     old head-of-line blocking. Token outputs are identical either way."""
     cfg, _ = dense_model
     scfg = ServingConfig(max_lanes=3, max_seq=64, max_new_tokens=10,
-                         prompt_bucket=8, page_size=8, num_pages=9,
-                         prefix_sharing=False)
+                         prompt_bucket=8,
+                         cache=CacheSpec(page_size=8, num_pages=9,
+                                         prefix_sharing=False))
     rng = np.random.default_rng(11)
 
     def mk(uid, n, arrival, max_new=10):

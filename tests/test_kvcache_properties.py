@@ -265,5 +265,232 @@ def test_paged_reset_lane_clears_only_that_lane():
     assert int(reset.count[0]) == 0 and int(reset.count[1]) == 6
 
 
+# ---------------------------------------------------------------------------
+# Quantized pools (QuantSpec int8): round-trip error bound, frozen-lane
+# write masks, hot/cold precision policy, CoW scale metadata
+# ---------------------------------------------------------------------------
+
+
+def _paged_quant(batch, slots, page_size, gran="page_head", hot_pages=0,
+                 extra_pages=2):
+    npl = slots // page_size
+    num_pages = batch * npl + extra_pages
+    cache = kv.init_paged_cache(batch, KV_HEADS, num_pages, npl, page_size,
+                                DK, DV, jnp.float32, kv_dtype="int8",
+                                scale_granularity=gran, hot_pages=hot_pages)
+    table = np.stack(
+        [np.arange(b * npl, (b + 1) * npl) for b in range(batch)]
+    ).astype(np.int32)
+    return dataclasses.replace(cache, page_table=jnp.asarray(table))
+
+
+def _quant_bound(cache, inserts_per_page):
+    """Per-(page, kv-head, slot) round-trip bound: one half-scale rounding
+    per insert that could have regrown the page's running scale, plus the
+    token's own quantization step."""
+    ps = cache.page_size
+    s = np.asarray(cache.k_scale, np.float64)            # (P, SH)
+    n = inserts_per_page[:, None] + 1.0                  # (P, 1)
+    per_page = 0.5 * s * n + 1e-6                        # (P, SH)
+    return np.broadcast_to(per_page[:, :, None],
+                           (s.shape[0], KV_HEADS, ps))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**16),
+    page_size=st.sampled_from([4, 8]),
+    gran=st.sampled_from(["page_head", "page"]),
+    kv_dtype=st.sampled_from(["int8", "bf16"]),
+)
+def test_quant_roundtrip_error_bound(seed, page_size, gran, kv_dtype):
+    """dequant(quant(page)) error stays within the per-dtype bound: int8
+    pays at most half a (running) scale per insert that touched the page;
+    bf16 pools pay one bf16 rounding (2^-8 relative)."""
+    rng = np.random.default_rng(seed)
+    batch, slots = 2, 16
+    if kv_dtype == "int8":
+        paged = _paged_quant(batch, slots, page_size, gran=gran)
+    else:
+        npl = slots // page_size
+        paged = _paged_with_identity_table(batch, slots, page_size)
+        paged = dataclasses.replace(
+            paged, k_pool=paged.k_pool.astype(jnp.bfloat16),
+            v_pool=paged.v_pool.astype(jnp.bfloat16))
+    cont = kv.init_attn_cache(batch, KV_HEADS, slots, DK, DV, jnp.float32)
+    inserts = np.zeros(paged.num_pages)
+    for _ in range(slots):
+        k, v = _rand_kv(rng, batch)
+        slot = kv.select_slot(cont, window=None, h2o=False, recent_len=0)
+        pslot, _ = kv.paged_select_slot(paged, window=None, h2o=False,
+                                        recent_len=0)
+        phys = np.asarray(paged.page_table)[np.arange(batch),
+                                            np.asarray(pslot) // page_size]
+        inserts[phys[phys >= 0]] += 1
+        cont = kv.insert(cont, slot, k, v)
+        paged = kv.paged_insert(paged, pslot, k, v)
+    view = kv.paged_lane_view(paged)
+    err = np.abs(np.asarray(cont.k, np.float64)
+                 - np.asarray(view.k, np.float64))       # (B, KV, S, DK)
+    if kv_dtype == "int8":
+        bound = _quant_bound(paged, inserts)             # (P, KV, ps)
+        tbl = np.asarray(paged.page_table)               # (B, NP)
+        per_slot = bound[tbl].transpose(0, 2, 1, 3)      # (B, KV, NP, ps)
+        per_slot = per_slot.reshape(batch, KV_HEADS, slots)
+        assert (err <= per_slot[..., None]).all(), err.max()
+        # the v pool obeys its own scales
+        err_v = np.abs(np.asarray(cont.v, np.float64)
+                       - np.asarray(view.v, np.float64))
+        sv = np.asarray(paged.v_scale, np.float64)
+        bv = (0.5 * sv * (inserts[:, None] + 1) + 1e-6)[tbl]
+        bv = np.repeat(bv.transpose(0, 2, 1), page_size, axis=2) \
+            .reshape(batch, KV_HEADS, slots) if sv.shape[1] > 1 else None
+        if bv is not None:
+            assert (err_v <= bv[..., None]).all(), err_v.max()
+    else:
+        amax = np.abs(np.asarray(cont.k, np.float64))
+        assert (err <= amax * 2.0**-8 + 1e-6).all(), err.max()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**16),
+    page_size=st.sampled_from([4, 8]),
+    gran=st.sampled_from(["page_head", "page"]),
+    steps=st.integers(min_value=2, max_value=24),
+)
+def test_write_mask_never_touches_quantized_pages(seed, page_size, gran,
+                                                  steps):
+    """A frozen lane's int8 pages AND their scale metadata must be
+    bit-identical across a masked insert — requant-on-growth must not
+    leak into suppressed rows."""
+    rng = np.random.default_rng(seed)
+    batch, slots = 3, 16
+    paged = _paged_quant(batch, slots, page_size, gran=gran)
+    for _ in range(steps):
+        k, v = _rand_kv(rng, batch)
+        wm = rng.random(batch) < 0.5
+        pslot, _ = kv.paged_select_slot(paged, window=None, h2o=False,
+                                        recent_len=0)
+        before_k = np.asarray(paged.k_pool).copy()
+        before_s = np.asarray(paged.k_scale).copy()
+        before_sv = np.asarray(paged.v_scale).copy()
+        after = kv.paged_insert(paged, pslot, k, v,
+                                write_mask=jnp.asarray(wm))
+        tbl = np.asarray(paged.page_table)
+        frozen_pages = set()
+        for lane in range(batch):
+            if not wm[lane]:
+                frozen_pages.update(int(p) for p in tbl[lane] if p >= 0)
+        for p in frozen_pages:
+            np.testing.assert_array_equal(np.asarray(after.k_pool)[p],
+                                          before_k[p])
+            np.testing.assert_array_equal(np.asarray(after.k_scale)[p],
+                                          before_s[p])
+            np.testing.assert_array_equal(np.asarray(after.v_scale)[p],
+                                          before_sv[p])
+        paged = after
+    # at least the masked lanes' counts froze too
+    assert int(paged.count.max()) <= steps
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**16),
+    page_size=st.sampled_from([4]),
+    steps=st.integers(min_value=8, max_value=40),
+)
+def test_hot_cold_precision_policy_invariant(seed, page_size, steps):
+    """Mixed precision under random insert/evict interleavings: the int8
+    pool stays authoritative (cold pages within the quant bound of the
+    exact oracle), hot residents read exactly (write-through), and a
+    freed page is never served by a stale overlay."""
+    rng = np.random.default_rng(seed)
+    batch, slots = 1, 16
+    paged = _paged_quant(batch, slots, page_size, hot_pages=2)
+    # promote lane 0's first two (still-empty) pages as hot residents
+    paged = dataclasses.replace(paged,
+                                hot_ids=jnp.asarray([0, 1], jnp.int32))
+    npg = paged.num_pages
+    ek = np.zeros((npg, KV_HEADS, page_size, DK))        # exact fp oracle
+    ev_ = np.zeros((npg, KV_HEADS, page_size, DV))
+    inserts = np.zeros(npg)
+    for t in range(steps):
+        k, v = _rand_kv(rng, batch)
+        pslot, evict = kv.paged_select_slot(paged, window=None, h2o=True,
+                                            recent_len=2)
+        tbl = np.asarray(paged.page_table)
+        ev_np = np.asarray(evict)
+        freed = [int(tbl[b_, e]) for b_, e in enumerate(ev_np)
+                 if e >= 0 and tbl[b_, e] >= 0]
+        for p in freed:
+            ek[p] = 0.0
+            ev_[p] = 0.0
+            inserts[p] = 0
+        paged = kv.paged_insert(paged, pslot, k, v, evict_page=evict)
+        phys = tbl[np.arange(batch), np.asarray(pslot) // page_size]
+        off = np.asarray(pslot) % page_size
+        for b_ in range(batch):
+            if phys[b_] >= 0:
+                ek[phys[b_], :, off[b_]] = np.asarray(k)[b_]
+                ev_[phys[b_], :, off[b_]] = np.asarray(v)[b_]
+                inserts[phys[b_]] += 1
+        w = jnp.asarray(rng.random((batch, KV_HEADS, 2, slots)), jnp.float32)
+        paged = kv.paged_accumulate_h2o(paged, w)
+        hot = np.asarray(paged.hot_ids)
+        # freed pages must have been demoted this very step
+        assert not (set(hot[hot >= 0]) & set(freed)), (hot, freed)
+        # residents only ever reference currently-mapped pages
+        mapped = set(int(p) for p in np.asarray(paged.page_table).ravel()
+                     if p >= 0)
+        assert set(int(h) for h in hot if h >= 0) <= mapped
+        # hot overlay is exact; cold pages obey the int8 bound
+        valid = np.asarray(paged.pos_pool) >= 0          # (P, ps)
+        deq = np.asarray(kv.dequant_pages(paged.k_pool, paged.k_scale),
+                         np.float64)
+        bound = _quant_bound(paged, inserts)             # (P, KV, ps)
+        kh = np.asarray(paged.k_hot, np.float64)
+        for p in range(npg):
+            if not valid[p].any():
+                continue
+            m = valid[p]
+            hs = np.where(hot == p)[0]
+            if hs.size:
+                np.testing.assert_array_equal(kh[hs[0]][:, m], ek[p][:, m])
+            err = np.abs(deq[p] - ek[p])[:, m]
+            assert (err <= bound[p][:, m][..., None]).all(), (p, err.max())
+
+
+def test_copy_on_write_preserves_scale_metadata():
+    """paged_copy_page (the device half of PagePool.make_private) must
+    move the int8 ints AND the per-page scales together — a CoW split
+    that dropped the scales would dequantize the copy to garbage."""
+    rng = np.random.default_rng(0)
+    paged = _paged_quant(1, 16, 4)
+    for _ in range(9):
+        k, v = _rand_kv(rng, 1)
+        pslot, _ = kv.paged_select_slot(paged, window=None, h2o=False,
+                                        recent_len=0)
+        paged = kv.paged_insert(paged, pslot, k, v)
+    src, dst = 1, paged.num_pages - 1                     # dst is a free page
+    view_before = np.asarray(kv.paged_lane_view(paged).k)
+    copied = kv.paged_copy_page(paged, jnp.int32(src), jnp.int32(dst))
+    np.testing.assert_array_equal(np.asarray(copied.k_pool)[dst],
+                                  np.asarray(copied.k_pool)[src])
+    np.testing.assert_array_equal(np.asarray(copied.k_scale)[dst],
+                                  np.asarray(copied.k_scale)[src])
+    np.testing.assert_array_equal(np.asarray(copied.v_scale)[dst],
+                                  np.asarray(copied.v_scale)[src])
+    np.testing.assert_array_equal(np.asarray(copied.pos_pool)[dst],
+                                  np.asarray(copied.pos_pool)[src])
+    # remap the lane's page 1 to the copy: the dequantized view must be
+    # bit-identical (same ints × same scale)
+    tbl = np.asarray(copied.page_table).copy()
+    tbl[0, src] = dst
+    remapped = dataclasses.replace(copied, page_table=jnp.asarray(tbl))
+    np.testing.assert_array_equal(np.asarray(kv.paged_lane_view(remapped).k),
+                                  view_before)
+
+
 if __name__ == "__main__":
     pytest.main([__file__, "-q"])

@@ -21,7 +21,8 @@ import numpy as np
 import pytest
 
 from repro.configs import reduced
-from repro.configs.base import AquaConfig, ServingConfig
+from repro.configs.base import (AquaConfig, CacheSpec, QuantSpec,
+                                ServingConfig)
 from repro.core import attention as attn_mod
 from repro.core.calibration import identity_projections
 from repro.distributed import sharding as dsh
@@ -216,7 +217,8 @@ def test_shard_mapped_kernel_wrap_is_bitwise(kvh):
 
 
 PAGED_SCFG = ServingConfig(max_lanes=4, max_seq=64, max_new_tokens=6,
-                           prompt_bucket=8, page_size=8, num_pages=32)
+                           prompt_bucket=8,
+                           cache=CacheSpec(page_size=8, num_pages=32))
 
 
 def test_paged_kernel_mesh_token_identity(base_model):
@@ -236,7 +238,7 @@ def test_paged_kernel_mesh_token_identity(base_model):
     assert eng.mesh_fallback_events() == ()
     assert attn_mod.mesh_fallback_events() == ()
 
-    cscfg = dataclasses.replace(PAGED_SCFG, page_size=None, num_pages=None)
+    cscfg = dataclasses.replace(PAGED_SCFG, cache=CacheSpec())
     contig = ContinuousBatchingEngine(cfg, params, proj, serving=cscfg,
                                       backend="aqua-block-sparse", mesh=mesh)
     assert contig.dispatch_plan().mesh_native
@@ -339,8 +341,8 @@ def test_paged_nondivisible_batch_routes_to_jnp_once(base_model, caplog):
     from repro.core.dispatch import REASON_NONDIVISIBLE_MESH
 
     cfg, params, proj = _aqua_model(base_model, k_ratio=0.5)
-    scfg = dataclasses.replace(PAGED_SCFG, max_lanes=3, num_pages=24,
-                               max_new_tokens=4)
+    scfg = dataclasses.replace(PAGED_SCFG, max_lanes=3, max_new_tokens=4,
+                               cache=CacheSpec(page_size=8, num_pages=24))
     reqs = _trace(cfg, num_requests=3, max_new=4, seed=8)
     with caplog.at_level(logging.WARNING, logger="repro.core.attention"):
         eng = ContinuousBatchingEngine(cfg, params, proj, serving=scfg,
@@ -367,8 +369,8 @@ def test_paged_page_geometry_routes_to_jnp_with_reason(base_model, caplog):
     from repro.core.dispatch import REASON_PAGE_GEOMETRY
 
     cfg, params, proj = _aqua_model(base_model, k_ratio=0.5)
-    scfg = dataclasses.replace(PAGED_SCFG, page_size=4, num_pages=64,
-                               max_new_tokens=3)
+    scfg = dataclasses.replace(PAGED_SCFG, max_new_tokens=3,
+                               cache=CacheSpec(page_size=4, num_pages=64))
     reqs = _trace(cfg, num_requests=2, max_new=3, seed=9)
     with caplog.at_level(logging.WARNING, logger="repro.core.attention"):
         eng = ContinuousBatchingEngine(cfg, params, proj, serving=scfg,

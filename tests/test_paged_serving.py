@@ -10,7 +10,8 @@ import numpy as np
 import pytest
 
 from repro.configs import reduced
-from repro.configs.base import AquaConfig, ServingConfig
+from repro.configs.base import (AquaConfig, CacheSpec, QuantSpec,
+                                ServingConfig)
 from repro.core.calibration import identity_projections
 from repro.models import build_model
 from repro.serving import ContinuousBatchingEngine, Request
@@ -40,7 +41,8 @@ def _trace(cfg, n=5, max_new=6, seed=3, prefix=None):
 
 SCFG = ServingConfig(max_lanes=4, max_seq=64, max_new_tokens=6,
                      prompt_bucket=8)
-PSCFG = dataclasses.replace(SCFG, page_size=8, num_pages=24)
+PSCFG = dataclasses.replace(SCFG, cache=CacheSpec(page_size=8,
+                                                  num_pages=24))
 
 
 def _proj(cfg):
@@ -133,7 +135,9 @@ def test_prefix_sharing_zero_recompute(dense_model):
     assert pool.tokens_saved == pool.prefix_hits * 16
     noshare = _engine(
         dense_model, "dense-jnp",
-        dataclasses.replace(PSCFG, prefix_sharing=False))
+        dataclasses.replace(PSCFG, cache=CacheSpec(page_size=8,
+                                                   num_pages=24,
+                                                   prefix_sharing=False)))
     outs_n = noshare.run([dataclasses.replace(r) for r in reqs])
     assert noshare.page_pool.prefix_hits == 0
     for uid in outs_s:
@@ -192,12 +196,12 @@ def test_prefix_admission_ignores_stale_recycled_pages(dense_model):
         [pre, rng.integers(0, cfg.vocab_size, size=(14,), dtype=np.int32)]),
         max_new_tokens=8, arrival=3.0)
     scfg = dataclasses.replace(SCFG, max_lanes=2, max_new_tokens=8,
-                               page_size=8, num_pages=12)
+                               cache=CacheSpec(page_size=8, num_pages=12))
     eng = _engine((cfg, dense_model[1]), "dense-jnp", scfg)
     outs = eng.run([C, A, B])
     assert eng.page_pool.prefix_hits == 1   # B really shared the prefix
     ref = _engine((cfg, dense_model[1]), "dense-jnp",
-                  dataclasses.replace(scfg, page_size=None, num_pages=None))
+                  dataclasses.replace(scfg, cache=CacheSpec()))
     outs_r = ref.run([dataclasses.replace(r) for r in (C, A, B)])
     for uid in outs:
         assert outs[uid].tokens == outs_r[uid].tokens, uid
@@ -208,7 +212,8 @@ def test_pool_exhaustion_queues_requests(dense_model):
     of failing: every request still completes, and the allocator ends the
     drive with all pages free."""
     cfg, _ = dense_model
-    tight = dataclasses.replace(SCFG, page_size=8, num_pages=6)
+    tight = dataclasses.replace(SCFG, cache=CacheSpec(page_size=8,
+                                                      num_pages=6))
     eng = _engine(dense_model, "dense-jnp", tight)
     reqs = _trace(cfg, n=4, seed=9)
     outs = eng.run(reqs)
@@ -217,9 +222,38 @@ def test_pool_exhaustion_queues_requests(dense_model):
     assert eng.page_pool.peak_in_use <= 6
 
 
+def test_int8_paged_engine_serves_and_shrinks_cache(dense_model):
+    """QuantSpec(kv_dtype='int8') end to end: the drive completes, the
+    resolved specs surface on the engine, and the quantized pool
+    undercuts the full-precision paged pool by at least the CI gate."""
+    cfg, _ = dense_model
+    qscfg = dataclasses.replace(PSCFG, quant=QuantSpec(kv_dtype="int8"))
+    eng = _engine(dense_model, "aqua-block-sparse", qscfg)
+    assert eng.quant_spec.quantized and eng.cache_spec.paged
+    outs = eng.run(_trace(cfg, n=3, seed=4))
+    assert all(len(o.tokens) == 6 for o in outs.values())
+    fp = _engine(dense_model, "aqua-block-sparse", PSCFG)
+    assert eng.cache_bytes() <= 0.60 * fp.cache_bytes()
+
+
+def test_int8_mixed_precision_serves_on_reference_path(dense_model):
+    """hot_resident_fraction > 0 allocates the bf16 overlay and keeps the
+    engine off the kernel path (REASON_QUANT_RESIDENCY) — the drive still
+    completes through the dequantized lane view."""
+    cfg, _ = dense_model
+    qscfg = dataclasses.replace(
+        PSCFG, quant=QuantSpec(kv_dtype="int8",
+                               hot_resident_fraction=0.25))
+    eng = _engine(dense_model, "dense-jnp", qscfg)
+    assert eng.dispatch_plan().quantization == "int8-mixed"
+    outs = eng.run(_trace(cfg, n=3, seed=4))
+    assert all(len(o.tokens) == 6 for o in outs.values())
+
+
 def test_pool_too_small_raises(dense_model):
     cfg, _ = dense_model
-    tiny = dataclasses.replace(SCFG, page_size=8, num_pages=1)
+    tiny = dataclasses.replace(SCFG, cache=CacheSpec(page_size=8,
+                                                     num_pages=1))
     eng = _engine(dense_model, "dense-jnp", tiny)
     with pytest.raises(RuntimeError, match="page pool"):
         eng.run(_trace(cfg, n=1))
@@ -254,8 +288,9 @@ def test_cache_bytes_matches_eval_shape(dense_model, policy_aqua,
     # 6 pages sits below lane-stripe parity for every policy here (full:
     # 32 pages, H2O budget: 16, window: 8) so the undercut check is valid;
     # no drive runs in this test, only shape accounting
-    scfg = dataclasses.replace(SCFG, page_size=page_size,
-                               num_pages=6 if page_size else None)
+    scfg = dataclasses.replace(
+        SCFG, cache=CacheSpec(page_size=page_size,
+                              num_pages=6 if page_size else None))
     eng = ContinuousBatchingEngine(
         cfg, params, _proj(cfg) if aqua else None, serving=scfg,
         backend="aqua-masked-dense" if aqua else "dense-jnp")
