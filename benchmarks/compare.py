@@ -139,6 +139,32 @@ def compare(base, fresh, threshold):
             yield "serving/interleave-chunked", "tok_s_vs_mono", b, f, \
                 f >= b * (1 - threshold)
 
+    # hierarchical long-context contract — judged *within the fresh dump*
+    # (the byte rows are structural, so no machine-speed question, but the
+    # contract relates rows to each other): at every context length the
+    # hierarchical decode row must stream no more than keep_ratio × the
+    # paged row's bytes (2% slack covers the kept_pages ceil + pin floor),
+    # and sweeping the ratio down must monotonically shrink gated bytes.
+    hier_pat = re.compile(r"^lc/decode_hier@([0-9]+k)_r[0-9.]+$")
+    by_tag = {}
+    for name, (_, metrics) in fresh.items():
+        m = hier_pat.match(name)
+        if m and "keep_ratio" in metrics and "bytes_per_tok" in metrics:
+            by_tag.setdefault(m.group(1), []).append(
+                (name, metrics["keep_ratio"], metrics["bytes_per_tok"]))
+    for tag, hier_rows in sorted(by_tag.items()):
+        paged = fresh.get(f"lc/decode_paged@{tag}", ("", {}))[1]
+        pb = paged.get("bytes_per_tok")
+        if pb is None:
+            yield f"lc/decode_paged@{tag}", "present", 1.0, 0.0, False
+            continue
+        for name, ratio, bytes_tok in hier_rows:
+            yield name, "bytes_vs_paged", ratio * pb, bytes_tok, \
+                bytes_tok <= ratio * pb * 1.02
+        sweep = sorted(hier_rows, key=lambda r: -r[1])   # ratio descending
+        for (an, ar, ab), (bn, br, bb) in zip(sweep, sweep[1:]):
+            yield bn, f"monotone_vs_r{ar}", ab, bb, bb < ab
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)

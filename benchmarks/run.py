@@ -36,13 +36,17 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--fast", action="store_true",
-                    help="trained-model-free subset (CI smoke)")
-    ap.add_argument("--json", default=None, metavar="PATH",
-                    help="also write rows as JSON to PATH")
-    ap.add_argument("--baseline", action="store_true",
-                    help="refresh the committed BENCH_serving.json "
-                         "(implies --fast)")
+    ap.add_argument(
+        "--fast", action="store_true", help="trained-model-free subset (CI smoke)"
+    )
+    ap.add_argument(
+        "--json", default=None, metavar="PATH", help="also write rows as JSON to PATH"
+    )
+    ap.add_argument(
+        "--baseline",
+        action="store_true",
+        help="refresh the committed BENCH_serving.json (implies --fast)",
+    )
     args = ap.parse_args(argv)
     if args.baseline:
         args.fast = True
@@ -55,13 +59,14 @@ def main(argv=None) -> None:
         fidelity.kernel_bandwidth,
         fidelity.quant_fidelity,
         fidelity.serving_throughput,
+        fidelity.longcontext_bench,
     ]
     full_benches = [
         fidelity.fig2_info_retention,
         fidelity.table1_standalone,
         fidelity.table2_aqua_h2o,
         fidelity.table3_aqua_memory,
-    ] + fast_benches + [
+        *fast_benches,
         fidelity.block_granularity,
     ]
     benches = fast_benches if args.fast else full_benches
@@ -73,8 +78,7 @@ def main(argv=None) -> None:
         try:
             for name, us, derived in bench():
                 print(f"{name},{us:.1f},{derived}")
-                rows.append({"name": name, "us_per_call": us,
-                             "derived": derived})
+                rows.append({"name": name, "us_per_call": us, "derived": derived})
         except Exception:
             failures += 1
             print(f"{bench.__name__},ERROR,", file=sys.stderr)

@@ -7,6 +7,7 @@ and can be used as jit static args.
 """
 from __future__ import annotations
 
+import math
 import warnings
 from dataclasses import dataclass, field, replace
 from typing import Optional, Tuple
@@ -296,6 +297,74 @@ class QuantSpec:
             self.hot_resident_fraction
 
 
+@dataclass(frozen=True)
+class SparsitySpec:
+    """Two-stage hierarchical sparsity (paged layout only).
+
+    Sibling of :class:`CacheSpec`/:class:`QuantSpec` — the third leg of
+    the unified serving-config surface, resolved once at engine
+    construction (:func:`resolve_sparsity_spec`).
+
+    **Stage 1 (token sparsity, page-granular):** each decode step ranks a
+    lane's mapped pages by their H2O accumulated attention mass
+    (``PagedAttnCache.acc_pool`` — the statistic the pool already
+    maintains, a free block-ranking signal where HyperAttention uses LSH)
+    and only the top ``page_keep_ratio`` fraction *participates* in
+    attention at all; the last ``pin_recent_pages`` pages of the lane
+    (the tail holding the probe token and the local window) are always
+    kept, so recency is exact. Pages with no accumulated mass tie at
+    zero and resolve to the lowest page indices — the selection then
+    degrades gracefully to attention-sink + recent-tail behavior.
+
+    **Stage 2 (dim sparsity):** AQUA's per-query |q̂| dim-block top-k,
+    unchanged, applied only within participating pages.
+
+    The participating-page set rides the Pallas decode kernel's
+    scalar-prefetch ``index_map`` exactly like page ids and quant scales,
+    so non-participating pages cost zero HBM bytes — decode compute and
+    bandwidth scale with ``kept_pages``, not context length.
+    ``page_keep_ratio=1.0`` disables stage 1 (bit-identical to the plain
+    paged kernel: the participation table is the identity map).
+    """
+
+    page_keep_ratio: float = 1.0
+    # Recency pin: the trailing pages of each lane (by token count) are
+    # always in the participating set, independent of their scores.
+    pin_recent_pages: int = 2
+
+    @property
+    def hierarchical(self) -> bool:
+        return self.page_keep_ratio < 1.0
+
+    def kept_pages(self, pages_per_lane: int) -> int:
+        """Static participating-set size for a lane of
+        ``pages_per_lane`` logical pages (the kernel grid extent)."""
+        k = math.ceil(self.page_keep_ratio * pages_per_lane - 1e-9)
+        k = max(k, min(self.pin_recent_pages, pages_per_lane), 1)
+        return min(k, pages_per_lane)
+
+    def validate(self) -> None:
+        assert 0.0 < self.page_keep_ratio <= 1.0, self.page_keep_ratio
+        assert self.pin_recent_pages >= 1, self.pin_recent_pages
+
+
+def resolve_sparsity_spec(serving: "ServingConfig") -> "SparsitySpec":
+    """Resolve a ``ServingConfig``'s token-sparsity surface — the
+    :class:`SparsitySpec` twin of :func:`resolve_cache_specs` (no legacy
+    flat fields to shim; hierarchical mode cross-validates against the
+    cache layout the same way quantization does)."""
+    spec = serving.sparsity if serving.sparsity is not None else SparsitySpec()
+    spec.validate()
+    if spec.hierarchical:
+        cache, _ = resolve_cache_specs(serving, warn=False)
+        if not cache.paged:
+            raise ValueError(
+                f"SparsitySpec(page_keep_ratio={spec.page_keep_ratio}) "
+                "needs the paged cache layout — stage-1 selection is "
+                "page-granular; set CacheSpec.page_size")
+    return spec
+
+
 # ServingConfig fields shadowed by CacheSpec: (flat name, CacheSpec name,
 # deprecated-iff-not-this default). One-release DeprecationWarning shims
 # (the kernel_native shim pattern from PR 6, removed in PR 7).
@@ -406,6 +475,10 @@ class ServingConfig:
     # release longer, whatever the deprecated flat fields above say.
     cache: Optional[CacheSpec] = None
     quant: Optional[QuantSpec] = None
+    # Two-stage hierarchical sparsity (page-granular token sparsity ×
+    # AQUA dim-block sparsity). None means SparsitySpec() defaults: every
+    # page participates (no token sparsity).
+    sparsity: Optional[SparsitySpec] = None
 
     def validate(self) -> None:
         assert self.max_lanes >= 1
@@ -413,6 +486,7 @@ class ServingConfig:
         assert self.prompt_bucket >= 1
         assert self.admission_lookahead >= 1
         cache, _ = resolve_cache_specs(self, warn=False)
+        resolve_sparsity_spec(self)
         if self.prefill_budget_tokens is not None:
             assert self.prefill_budget_tokens >= 1
             assert self.prefill_budget_tokens % self.prompt_bucket == 0, \

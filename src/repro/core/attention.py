@@ -274,6 +274,36 @@ def use_decode_mesh(mesh, fallback_sink=None):
         _DECODE_MESH.reset(t_mesh)
 
 
+# Hierarchical token sparsity rides the same trace-time installation
+# pattern as the mesh: the engine resolves ``SparsitySpec.kept_pages``
+# once at construction and installs (kept_pages, pin_recent_pages) around
+# its jitted calls; the paged decode product picks it up and builds the
+# step's ``SelectionPlan``. Baked into compiled executables like the
+# mesh, so concurrent engines with different ratios coexist.
+_TOKEN_SPARSITY: contextvars.ContextVar = contextvars.ContextVar(
+    "aqua_token_sparsity", default=None)
+
+
+def token_sparsity():
+    """The installed (kept_pages, pin_recent_pages) tuple, or None."""
+    return _TOKEN_SPARSITY.get()
+
+
+@contextlib.contextmanager
+def use_token_sparsity(kept_pages, pin_recent_pages=2):
+    """Install stage-1 page participation for calls traced inside this
+    context (no-op when ``kept_pages`` is None — every page participates).
+    ``kept_pages`` is the per-lane participating-page count
+    (``SparsitySpec.kept_pages(pages_per_lane)``)."""
+    tok = _TOKEN_SPARSITY.set(
+        None if kept_pages is None else (int(kept_pages),
+                                         int(pin_recent_pages)))
+    try:
+        yield
+    finally:
+        _TOKEN_SPARSITY.reset(tok)
+
+
 # Process-wide aggregate of mesh-fallback events (in addition to any
 # per-engine sink), explicitly resettable by test fixtures so warning
 # assertions don't depend on suite execution order (the previous
@@ -454,7 +484,8 @@ def shard_mapped_decode_kernel(mesh, backend, q, cache, *, cfg, aqua):
     )(q, cache.k, cache.v, cache.positions, cache.count, cache.acc_score)
 
 
-def shard_mapped_paged_decode_kernel(mesh, backend, q, cache, *, cfg, aqua):
+def shard_mapped_paged_decode_kernel(mesh, backend, q, cache, *, cfg, aqua,
+                                     part_idx=None):
     """Paged twin of :func:`shard_mapped_decode_kernel`: the block-sparse
     paged decode kernel on shard-local pool + page-table leaves.
 
@@ -469,7 +500,17 @@ def shard_mapped_paged_decode_kernel(mesh, backend, q, cache, *, cfg, aqua):
     dereferences them against its full (KV-sharded) pool slice inside the
     ``index_map`` — zero collectives inside the mapped region, exactly like
     the contiguous kernel threads its dim-block indices. q (B, KV, G, Dk);
-    returns (B, KV, G, Dv)."""
+    returns (B, KV, G, Dv).
+
+    ``part_idx`` (B, KP): hierarchical stage-1 participating-page table.
+    It MUST be computed *outside* this wrapper (``core.selection`` on the
+    global arrays) — the acc_pool is KV-sharded over ``model``, so a
+    shard-local page ranking would give each model shard a different
+    participating set. The finished table partitions with its lanes over
+    the data axes exactly like the page table
+    (``distributed.sharding.page_rank_pspec``) and its entries are
+    per-lane logical indices, so each shard's kernel invocation
+    scalar-prefetches its own lane group's rows unchanged."""
     from jax.experimental.shard_map import shard_map
 
     b, kvh = q.shape[0], q.shape[1]
@@ -491,13 +532,22 @@ def shard_mapped_paged_decode_kernel(mesh, backend, q, cache, *, cfg, aqua):
         scale_spec = P(None, kv_ax if sh > 1 else None)
         in_specs += [scale_spec, scale_spec]
         operands += [cache.k_scale, cache.v_scale]
+    hier = part_idx is not None
+    if hier:
+        in_specs.append(P(batch_ax, None))
+        operands.append(part_idx)
 
-    def core(qs, kp, vp, pp, ap, pt, cnt, *scales):
-        ks, vs = scales if quant else (None, None)
+    def core(qs, kp, vp, pp, ap, pt, cnt, *rest):
+        rest = list(rest)
+        part = rest.pop() if hier else None
+        ks, vs = rest if quant else (None, None)
         local = kv.PagedAttnCache(k_pool=kp, v_pool=vp, pos_pool=pp,
                                   acc_pool=ap, page_table=pt, count=cnt,
                                   k_scale=ks, v_scale=vs)
-        return backend.paged_decode(qs, local, cfg=cfg, aqua=aqua)
+        if part is None:
+            return backend.paged_decode(qs, local, cfg=cfg, aqua=aqua)
+        return backend.paged_decode(qs, local, cfg=cfg, aqua=aqua,
+                                    part_idx=part)
 
     return shard_map(
         core, mesh=mesh,
@@ -785,18 +835,20 @@ def _aqua_block_sparse_decode(q_hat, cache, *, cfg, aqua):
 
 
 def _aqua_block_sparse_paged_decode(q_hat, cache: kv.PagedAttnCache, *,
-                                    cfg, aqua):
+                                    cfg, aqua, part_idx=None):
     """Paged AQUA block-sparse decode: the page table rides the same
     scalar-prefetch ``index_map`` machinery as the dim-block selection
     (kernels/aqua_decode.aqua_paged_decode_attention) — pool pages stream
-    HBM→VMEM directly, no gathered lane view is ever materialized."""
+    HBM→VMEM directly, no gathered lane view is ever materialized.
+    ``part_idx`` (B, KP) is the hierarchical stage-1 participating-page
+    table (``core.selection``), or None to walk every page."""
     from repro.kernels import ops as kops
     b, kvh, g, dk = q_hat.shape
     qf = q_hat.reshape(b, kvh * g, dk)
     lengths = jnp.minimum(cache.count, cache.num_slots)
     out = kops.aqua_paged_decode(qf, cache.k_pool, cache.v_pool,
                                  cache.page_table, lengths,
-                                 cache.k_scale, cache.v_scale,
+                                 cache.k_scale, cache.v_scale, part_idx,
                                  k_ratio=aqua.k_ratio,
                                  block_dims=aqua.block_dims,
                                  seq_blk=aqua.decode_seq_blk,
@@ -1220,11 +1272,32 @@ def _paged_decode_product(params, x_t: jax.Array, q: jax.Array,
     extents, pages that don't tile the kernel's sequence blocks — runs
     the masked-dense reference on the gathered lane view, which is
     slot-for-slot identical to the contiguous cache layout.
+
+    Hierarchical token sparsity (``use_token_sparsity`` installed by the
+    engine) resolves the step's stage-1 participating-page table here,
+    *before* any shard_map — the acc_pool is KV-sharded over ``model``
+    under a mesh, so ranking must see the global pool (see
+    :func:`shard_mapped_paged_decode_kernel`). The kernel path streams
+    only participating pages; the reference path masks the same slots
+    (positions < 0 are invalid in ``kv.valid_mask_from``), so both paths
+    attend exactly the plan's token set.
     """
     aqua_on = aqua is not None and aqua.enabled
     head_dim = cfg.head_dim
     b = q.shape[0]
     backend = resolve_backend(cfg.backend, aqua=aqua)
+    # stage-1 page participation: engages only where DispatchPlan's
+    # token-sparsity predicate says so (no window, no H2O eviction —
+    # REASON_TOKEN_*); a full keep (kept >= pages_per_lane) is a no-op.
+    tok = token_sparsity()
+    part_idx = None
+    if (tok is not None and not h2o and cfg.window is None
+            and tok[0] < cache.pages_per_lane):
+        from repro.core import selection
+        part_idx = selection.participating_pages(
+            cache.acc_pool, cache.page_table, cache.count,
+            page_size=cache.page_size, kept_pages=tok[0],
+            pin_recent_pages=tok[1])
     kernel_ok = (backend.paged_decode is not None and aqua_on and not h2o
                  and cfg.window is None and aqua.block_dims > 1
                  and q.shape[-1] % aqua.block_dims == 0)
@@ -1254,7 +1327,11 @@ def _paged_decode_product(params, x_t: jax.Array, q: jax.Array,
     if kernel_ok:
         if kernel_mesh is not None:
             out = shard_mapped_paged_decode_kernel(kernel_mesh, backend, q,
-                                                   cache, cfg=cfg, aqua=aqua)
+                                                   cache, cfg=cfg, aqua=aqua,
+                                                   part_idx=part_idx)
+        elif part_idx is not None:
+            out = backend.paged_decode(q, cache, cfg=cfg, aqua=aqua,
+                                       part_idx=part_idx)
         else:
             out = backend.paged_decode(q, cache, cfg=cfg, aqua=aqua)
         out = jnp.einsum("bkgd,kgdm->bm", out, params["wo"].astype(x_t.dtype))
@@ -1262,14 +1339,23 @@ def _paged_decode_product(params, x_t: jax.Array, q: jax.Array,
 
     qq = q * _aqua_mask(q, aqua, head_dim) if aqua_on else q
     view = kv.paged_lane_view(cache)
+    positions = view.positions
+    if part_idx is not None:
+        # reference twin of the kernel's participation: non-participating
+        # slots' positions drop to -1, which valid_mask_from masks off —
+        # the reference attends exactly the kernel path's token set.
+        from repro.core import selection
+        slot_ok = selection.participation_slot_mask(
+            part_idx, page_size=cache.page_size, num_slots=cache.num_slots)
+        positions = jnp.where(slot_ok, positions, -1)
     mesh = decode_mesh()
     if mesh is not None:
         out, weights = _shard_mapped_decode_core(
-            mesh, qq, view.k, view.v, view.positions, view.count,
+            mesh, qq, view.k, view.v, positions, view.count,
             head_dim=head_dim, window=cfg.window)
     else:
         out, weights = _masked_dense_decode_core(
-            qq, view.k, view.v, view.positions, view.count,
+            qq, view.k, view.v, positions, view.count,
             head_dim=head_dim, window=cfg.window)
     if h2o:
         cache = kv.paged_accumulate_h2o(cache, weights,

@@ -62,6 +62,16 @@ REASON_FAMILY_SURGERY = (
 REASON_CHUNK_GEOMETRY = (
     "prefill budget is not a multiple of the kernel's q-chunk tile — "
     "chunk boundaries would change the dim-block selection")
+# Hierarchical token-sparsity attribution (``DispatchPlan.token_sparsity``):
+# why an engine configured with ``page_keep_ratio < 1`` still attends
+# every page. (Hierarchical-without-paged is a *config* error —
+# ``configs.base.resolve_sparsity_spec`` rejects it before dispatch.)
+REASON_TOKEN_WINDOW = (
+    "sliding-window policy already bounds the token set; page-granular "
+    "participation would double-mask it")
+REASON_TOKEN_H2O = (
+    "H2O eviction reshapes the page set mid-flight; page participation "
+    "needs a stable table within a step")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +95,18 @@ class DispatchPlan:
     reasons:        why ``mesh_native`` is False — a tuple of the
                     REASON_* constants above, in check order; empty iff
                     ``mesh_native``.
+    token_sparsity: resolved hierarchical (two-stage) selection mode —
+                    ``"none"`` (every page participates) or
+                    ``"hierarchical"`` (stage-1 page-granular
+                    participation from ``SparsitySpec.page_keep_ratio``,
+                    stage-2 dim-block top-k within participants). Both
+                    the shard_mapped kernel path and the masked-dense
+                    reference honor the same participating-page set, so
+                    this is a *selection* mode, not a dispatch fork.
+    token_reasons:  why ``token_sparsity`` is ``"none"`` despite a
+                    hierarchical ``SparsitySpec`` — REASON_TOKEN_*
+                    constants in check order; empty when the config
+                    didn't ask for token sparsity at all.
     chunked_prefill: True when admissions longer than the configured
                     ``prefill_budget_tokens`` are split into page-aligned
                     chunks interleaved with decode steps (the PREFILLING
@@ -102,6 +124,8 @@ class DispatchPlan:
     chunked_prefill: bool = False
     chunked_reasons: Tuple[str, ...] = ()
     quantization: str = "none"
+    token_sparsity: str = "none"
+    token_reasons: Tuple[str, ...] = ()
 
     @property
     def paged(self) -> bool:
@@ -129,12 +153,13 @@ def resolve_dispatch_plan(*, attention, aqua, serving, mesh,
     Imports are deferred: ``core.attention`` imports this module for the
     reason constants, so the reverse dependency must stay lazy.
     """
-    from repro.configs.base import resolve_cache_specs
+    from repro.configs.base import resolve_cache_specs, resolve_sparsity_spec
     from repro.core.attention import resolve_backend
     from repro.core.h2o import h2o_budget
     from repro.distributed import sharding as dsh
 
     cache_spec, quant_spec = resolve_cache_specs(serving, warn=False)
+    sparsity_spec = resolve_sparsity_spec(serving)
     paged = cache_spec.paged
     cache_layout = CACHE_PAGED if paged else CACHE_CONTIGUOUS
     quant_mode = quant_spec.mode
@@ -211,10 +236,28 @@ def resolve_dispatch_plan(*, attention, aqua, serving, mesh,
                 and serving.prefill_budget_tokens % aqua.prefill_q_blk != 0):
             chunked_reasons.append(REASON_CHUNK_GEOMETRY)
 
+    # Hierarchical token sparsity: a selection mode, not a dispatch fork —
+    # the kernel streams only participating pages, the masked-dense
+    # reference masks the same set, so it engages independently of
+    # ``mesh_native``. Only policies that rewrite the token set mid-step
+    # (window masking, H2O eviction) veto it.
+    token_reasons = []
+    if sparsity_spec.hierarchical and attention is not None:
+        if attention.window is not None:
+            token_reasons.append(REASON_TOKEN_WINDOW)
+        if (aqua is not None and aqua.enabled
+                and h2o_budget(aqua, serving.max_seq) is not None):
+            token_reasons.append(REASON_TOKEN_H2O)
+    hierarchical = (sparsity_spec.hierarchical and attention is not None
+                    and not token_reasons)
+
     return DispatchPlan(backend=backend_name, cache_layout=cache_layout,
                         mesh_native=mesh_native,
                         prefix_sharing=bool(prefix_sharing),
                         reasons=tuple(reasons),
                         chunked_prefill=not chunked_reasons,
                         chunked_reasons=tuple(chunked_reasons),
-                        quantization=quant_mode)
+                        quantization=quant_mode,
+                        token_sparsity=("hierarchical" if hierarchical
+                                        else "none"),
+                        token_reasons=tuple(token_reasons))

@@ -370,6 +370,17 @@ def lane_pspec(mesh: Mesh, num_lanes: int) -> P:
     return sanitize(P(dp), (num_lanes,), mesh)
 
 
+def page_rank_pspec(mesh: Mesh, batch: int) -> P:
+    """(B, KP) hierarchical participating-page tables: lane-partitioned
+    over pod×data exactly like ``page_table`` rows (the entries are
+    logical per-lane page indices, meaningless across lanes), table
+    width whole per shard."""
+    dp = data_axes(mesh)
+    if not dp:
+        return P(None, None)
+    return sanitize(P(dp, None), (batch, 1), mesh)
+
+
 def make_lane_shardings(tree, mesh: Mesh):
     """NamedShardings for a pytree of (L,) / (L, ...) per-lane leaves
     (leading axis = lane). Non-lane trailing dims stay replicated."""

@@ -104,6 +104,121 @@ def _paged_kernel(idx_ref, pt_ref, len_ref, *rest, **kw):
     _kernel(idx_ref, len_ref, *rest, **kw)
 
 
+def _paged_part_kernel(idx_ref, pt_ref, part_ref, len_ref,
+                       q_ref, k_ref, v_ref, o_ref,
+                       s_ref, m_ref, l_ref, acc_ref, *, scale: float,
+                       seq_blk: int, nb_sel: int, nsb: int, bpp: int):
+    """Hierarchical (two-stage) twin of :func:`_paged_kernel`.
+
+    The grid's sequence-block axis runs over *participating* pages only
+    (``nsb = KP * bpp``); ``part_ref`` (B, KP) maps each grid step to its
+    logical page so the position validity test stays token-exact. Pages
+    the stage-1 ranking dropped are never touched — their HBM bytes are
+    simply not streamed (the BlockSpec ``index_map`` never emits them)."""
+    b = pl.program_id(0)
+    sb = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when((sb == 0) & (j == 0))
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(j == 0)
+    def _reset_scores():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    q_blk = q_ref[0, 0].astype(jnp.float32)          # (1, bd)
+    k_blk = k_ref[0, 0, 0].astype(jnp.float32)       # (bd, S_blk)
+    s_ref[...] += jax.lax.dot_general(
+        q_blk, k_blk, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == nb_sel - 1)
+    def _finalize_block():
+        s = s_ref[...] * scale                        # (1, S_blk)
+        lp = part_ref[b, sb // bpp]                   # logical page id
+        pos = (lp * bpp + sb % bpp) * seq_blk + jax.lax.broadcasted_iota(
+            jnp.int32, (1, seq_blk), 1)
+        valid = pos < len_ref[b]
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[0, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        p = jnp.exp(s - m_new)                        # (1, S_blk)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[0, 0] = l_ref[0, 0] * corr + jnp.sum(p)
+        v_blk = v_ref[0, 0].astype(jnp.float32)       # (S_blk, Dv)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[0, 0] = m_new
+
+        @pl.when(sb == nsb - 1)
+        def _write():
+            o_ref[...] = (acc_ref[...] /
+                          jnp.maximum(l_ref[0, 0], 1e-30)
+                          ).astype(o_ref.dtype)[None]
+
+
+def _paged_part_quant_kernel(idx_ref, pt_ref, part_ref, len_ref,
+                             ks_ref, vs_ref, q_ref, k_ref, v_ref, o_ref,
+                             s_ref, m_ref, l_ref, acc_ref, *, scale: float,
+                             seq_blk: int, nb_sel: int, nsb: int, bpp: int,
+                             g: int, s_stride: int):
+    """Hierarchical int8 variant: :func:`_paged_part_kernel`'s logical-page
+    remap composed with :func:`_paged_quant_kernel`'s scale folding — the
+    per-page scales are looked up through the participating page's table
+    entry, positions through its logical index."""
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    sb = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when((sb == 0) & (j == 0))
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(j == 0)
+    def _reset_scores():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    q_blk = q_ref[0, 0].astype(jnp.float32)          # (1, bd)
+    k_blk = k_ref[0, 0, 0].astype(jnp.float32)       # (bd, S_blk) int->f32
+    s_ref[...] += jax.lax.dot_general(
+        q_blk, k_blk, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == nb_sel - 1)
+    def _finalize_block():
+        lp = part_ref[b, sb // bpp]                   # logical page id
+        page = jnp.maximum(pt_ref[b, lp], 0)
+        kv = (h // g) * s_stride
+        s = s_ref[...] * (scale * ks_ref[page, kv])   # (1, S_blk)
+        pos = (lp * bpp + sb % bpp) * seq_blk + jax.lax.broadcasted_iota(
+            jnp.int32, (1, seq_blk), 1)
+        valid = pos < len_ref[b]
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[0, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        p = jnp.exp(s - m_new)                        # (1, S_blk)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[0, 0] = l_ref[0, 0] * corr + jnp.sum(p)
+        v_blk = v_ref[0, 0].astype(jnp.float32) * vs_ref[page, kv]
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[0, 0] = m_new
+
+        @pl.when(sb == nsb - 1)
+        def _write():
+            o_ref[...] = (acc_ref[...] /
+                          jnp.maximum(l_ref[0, 0], 1e-30)
+                          ).astype(o_ref.dtype)[None]
+
+
 def _paged_quant_kernel(idx_ref, pt_ref, len_ref, ks_ref, vs_ref,
                         q_ref, k_ref, v_ref, o_ref,
                         s_ref, m_ref, l_ref, acc_ref, *, scale: float,
@@ -171,7 +286,7 @@ def _paged_quant_kernel(idx_ref, pt_ref, len_ref, ks_ref, vs_ref,
 def aqua_paged_decode_attention(q_sel: jax.Array, khat_pages: jax.Array,
                                 v_pages: jax.Array, block_idx: jax.Array,
                                 page_table: jax.Array, lengths: jax.Array,
-                                k_scale=None, v_scale=None,
+                                k_scale=None, v_scale=None, part_idx=None,
                                 *, block_dims: int = 8, seq_blk: int = 128,
                                 scale=None, interpret=None) -> jax.Array:
     """Block-sparse AQUA decode attention over a *paged* K/V pool.
@@ -188,6 +303,14 @@ def aqua_paged_decode_attention(q_sel: jax.Array, khat_pages: jax.Array,
                  policy only: logical slot == token position.
     k_scale, v_scale: (P, SH) f32 per-page scales for int8 pools (SH ∈
                  {KV, 1}); both None for full-precision pools.
+    part_idx:    (B, KP) int32 — stage-1 *participating* logical page
+                 indices per lane, sorted ascending
+                 (``core.selection.participating_pages``), or None to
+                 attend every page. Entries must be valid logical indices
+                 in [0, NP_lane); pages past the lane's length contribute
+                 nothing (position masking). When given, the grid's
+                 sequence-block extent shrinks from NP_lane to KP — the
+                 dropped pages' K̂/V tiles are never streamed from HBM.
     returns out: (B, H, Dv)
 
     The page table is the second scalar-prefetch operand: the K and V
@@ -221,27 +344,41 @@ def aqua_paged_decode_attention(q_sel: jax.Array, khat_pages: jax.Array,
     g = h // kvh
     assert ps % seq_blk == 0, (ps, seq_blk)
     bpp = ps // seq_blk                       # sequence blocks per page
-    nsb = npl * bpp
+    hier = part_idx is not None
+    nsb = (part_idx.shape[1] if hier else npl) * bpp
     if scale is None:
         scale = 1.0 / ((nb_total * bd) ** 0.5)
     interpret = _rtf.resolve_interpret(interpret)
 
     grid = (b, h, nsb, nb_sel)
     quant = k_scale is not None
-    nsp = 5 if quant else 3
+    nsp = (3 if not quant else 5) + (1 if hier else 0)
 
-    # trailing scalar-prefetch refs: (idx, pt, len[, ks, vs]) — the maps
-    # only dereference idx/pt, so *refs covers both arities.
+    # trailing scalar-prefetch refs: (idx, pt[, part], len[, ks, vs]) —
+    # the maps only dereference idx/pt/part, so *refs covers all arities.
     def q_map(bi, hi, sbi, ji, *refs):
         return (bi, hi, ji, 0)
 
-    def k_map(bi, hi, sbi, ji, *refs):
-        page = jnp.maximum(refs[1][bi, sbi // bpp], 0)
-        return (page, hi // g, refs[0][bi, hi, ji], 0, sbi % bpp)
+    if hier:
+        # sequence-block axis walks participating pages only: grid step
+        # sbi -> logical page part[bi, sbi // bpp] -> physical page.
+        def k_map(bi, hi, sbi, ji, *refs):
+            lp = refs[2][bi, sbi // bpp]
+            page = jnp.maximum(refs[1][bi, lp], 0)
+            return (page, hi // g, refs[0][bi, hi, ji], 0, sbi % bpp)
 
-    def v_map(bi, hi, sbi, ji, *refs):
-        page = jnp.maximum(refs[1][bi, sbi // bpp], 0)
-        return (page, hi // g, sbi % bpp, 0)
+        def v_map(bi, hi, sbi, ji, *refs):
+            lp = refs[2][bi, sbi // bpp]
+            page = jnp.maximum(refs[1][bi, lp], 0)
+            return (page, hi // g, sbi % bpp, 0)
+    else:
+        def k_map(bi, hi, sbi, ji, *refs):
+            page = jnp.maximum(refs[1][bi, sbi // bpp], 0)
+            return (page, hi // g, refs[0][bi, hi, ji], 0, sbi % bpp)
+
+        def v_map(bi, hi, sbi, ji, *refs):
+            page = jnp.maximum(refs[1][bi, sbi // bpp], 0)
+            return (page, hi // g, sbi % bpp, 0)
 
     def o_map(bi, hi, sbi, ji, *refs):
         return (bi, hi, 0)
@@ -263,21 +400,34 @@ def aqua_paged_decode_attention(q_sel: jax.Array, khat_pages: jax.Array,
         ],
     )
     if quant:
-        kernel = functools.partial(
-            _paged_quant_kernel, scale=scale, seq_blk=seq_blk,
-            nb_sel=nb_sel, nsb=nsb, bpp=bpp, g=g,
-            s_stride=1 if k_scale.shape[1] > 1 else 0)
+        common = dict(scale=scale, seq_blk=seq_blk, nb_sel=nb_sel, nsb=nsb,
+                      bpp=bpp, g=g,
+                      s_stride=1 if k_scale.shape[1] > 1 else 0)
         # int8 pools can't carry the output dtype; accumulate/emit f32.
         out_dtype = jnp.float32
-        operands = (block_idx, page_table, lengths,
-                    k_scale.astype(jnp.float32), v_scale.astype(jnp.float32),
-                    q_sel, khat_pages, v_pages)
+        scales = (k_scale.astype(jnp.float32), v_scale.astype(jnp.float32))
+        if hier:
+            kernel = functools.partial(_paged_part_quant_kernel, **common)
+            operands = (block_idx, page_table, part_idx, lengths, *scales,
+                        q_sel, khat_pages, v_pages)
+        else:
+            kernel = functools.partial(_paged_quant_kernel, **common)
+            operands = (block_idx, page_table, lengths, *scales,
+                        q_sel, khat_pages, v_pages)
     else:
-        kernel = functools.partial(_paged_kernel, scale=scale,
-                                   seq_blk=seq_blk, nb_sel=nb_sel, nsb=nsb)
         out_dtype = v_pages.dtype
-        operands = (block_idx, page_table, lengths, q_sel, khat_pages,
-                    v_pages)
+        if hier:
+            kernel = functools.partial(_paged_part_kernel, scale=scale,
+                                       seq_blk=seq_blk, nb_sel=nb_sel,
+                                       nsb=nsb, bpp=bpp)
+            operands = (block_idx, page_table, part_idx, lengths, q_sel,
+                        khat_pages, v_pages)
+        else:
+            kernel = functools.partial(_paged_kernel, scale=scale,
+                                       seq_blk=seq_blk, nb_sel=nb_sel,
+                                       nsb=nsb)
+            operands = (block_idx, page_table, lengths, q_sel, khat_pages,
+                        v_pages)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,

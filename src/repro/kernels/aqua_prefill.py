@@ -126,12 +126,87 @@ def _kernel(idx_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
                       )[None, None].astype(o_ref.dtype)
 
 
+def _part_kernel(idx_ref, part_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                 s_ref, m_ref, l_ref, acc_ref, *, scale: float, q_blk: int,
+                 k_blk: int, nb_sel: int, kt: int, causal: bool,
+                 window: Optional[int], q_offset: int):
+    """Hierarchical twin of :func:`_kernel` — the grid's key-chunk axis
+    runs over *participating* k-tiles only; ``part_ref`` (B, NQC, KT)
+    maps each grid step to its logical key chunk (per q-tile, sorted
+    ascending, diagonal tiles pinned —
+    ``core.selection.chunk_participating_tiles``). Dropped tiles' K̂/V
+    bytes are never streamed. Causal/window masking uses the logical
+    chunk, so the math on surviving tiles is identical to :func:`_kernel`
+    visiting the same tiles."""
+    bi = pl.program_id(0)
+    qc = pl.program_id(2)
+    kci = pl.program_id(3)
+    j = pl.program_id(4)
+    kc = part_ref[bi, qc, kci]                       # logical key chunk
+
+    @pl.when((kci == 0) & (j == 0))
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    live = kc >= 0
+    if causal:
+        live &= kc * k_blk <= q_offset + qc * q_blk + (q_blk - 1)
+    if window is not None:
+        live &= kc * k_blk + (k_blk - 1) > q_offset + qc * q_blk - window
+
+    @pl.when(live & (j == 0))
+    def _reset_scores():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    @pl.when(live)
+    def _accumulate():
+        q_blkj = q_ref[0, 0, 0, 0].astype(jnp.float32)
+        k_blkj = k_ref[0, 0, 0].astype(jnp.float32)
+        s_ref[...] += jax.lax.dot_general(
+            q_blkj, k_blkj, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(live & (j == nb_sel - 1))
+    def _finalize_tile():
+        s = s_ref[...] * scale                       # (q_blk, k_blk)
+        qpos = q_offset + qc * q_blk + jax.lax.broadcasted_iota(
+            jnp.int32, (q_blk, k_blk), 0)
+        kpos = kc * k_blk + jax.lax.broadcasted_iota(
+            jnp.int32, (q_blk, k_blk), 1)
+        mask = kpos < len_ref[bi]
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]                          # (q_blk, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+        v_blk = v_ref[0, 0].astype(jnp.float32)      # (k_blk, Dv)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when((kci == kt - 1) & (j == nb_sel - 1))
+    def _write():
+        o_ref[...] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-30)
+                      )[None, None].astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("block_dims", "q_blk", "k_blk",
                                              "causal", "window", "scale",
                                              "interpret", "q_offset"))
 def aqua_prefill_attention(q_sel: jax.Array, khat_blocks: jax.Array,
                            v: jax.Array, block_idx: jax.Array,
-                           lengths: jax.Array, *, block_dims: int = 8,
+                           lengths: jax.Array,
+                           kc_part: Optional[jax.Array] = None,
+                           *, block_dims: int = 8,
                            q_blk: int = 128, k_blk: int = 128,
                            causal: bool = True,
                            window: Optional[int] = None,
@@ -147,6 +222,13 @@ def aqua_prefill_attention(q_sel: jax.Array, khat_blocks: jax.Array,
     block_idx:   (B, H, NQC, NB_sel) int32 — selected dim-block ids (sorted)
     lengths:     (B,) int32 — valid sequence length per row (keys beyond are
                  masked; query rows beyond produce don't-care output)
+    kc_part:     (B, NQC, KT) int32 — per-q-tile *participating* key-chunk
+                 indices (sorted ascending, diagonal pinned —
+                 ``core.selection.chunk_participating_tiles``), or None to
+                 visit every key chunk. When given, the grid's key-chunk
+                 extent shrinks from NKC to KT; dropped tiles' key/value
+                 bytes are never streamed (hierarchical AQUA's q-tile
+                 token-sparsity stage for chunked long prefills).
     scale:       score scale; default 1/sqrt(NB_total * bd). AQUA
                  approximates *full* head-dim scores, so pass
                  1/sqrt(head_dim) when k̂ is statically sliced.
@@ -172,22 +254,54 @@ def aqua_prefill_attention(q_sel: jax.Array, khat_blocks: jax.Array,
         scale = 1.0 / ((nb_total * bd) ** 0.5)
     interpret = _rtf.resolve_interpret(interpret)
 
-    grid = (b, h, nqc, nkc, nb_sel)
+    hier = kc_part is not None
+    kt = kc_part.shape[2] if hier else nkc
+    grid = (b, h, nqc, kt, nb_sel)
 
-    def q_map(bi, hi, qi, ki, ji, idx_ref, len_ref):
-        return (bi, hi, qi, ji, 0, 0)
+    if hier:
+        # key-chunk axis walks participating tiles only: grid step kci ->
+        # logical chunk kc_part[bi, qi, kci] (scalar-prefetch operand 1).
+        def q_map(bi, hi, qi, ki, ji, *refs):
+            return (bi, hi, qi, ji, 0, 0)
 
-    def k_map(bi, hi, qi, ki, ji, idx_ref, len_ref):
-        return (bi, hi // g, idx_ref[bi, hi, qi, ji], 0, ki)
+        def k_map(bi, hi, qi, ki, ji, *refs):
+            return (bi, hi // g, refs[0][bi, hi, qi, ji], 0,
+                    refs[1][bi, qi, ki])
 
-    def v_map(bi, hi, qi, ki, ji, idx_ref, len_ref):
-        return (bi, hi // g, ki, 0)
+        def v_map(bi, hi, qi, ki, ji, *refs):
+            return (bi, hi // g, refs[1][bi, qi, ki], 0)
 
-    def o_map(bi, hi, qi, ki, ji, idx_ref, len_ref):
-        return (bi, hi, qi, 0)
+        def o_map(bi, hi, qi, ki, ji, *refs):
+            return (bi, hi, qi, 0)
+
+        nsp = 3
+        kernel = functools.partial(_part_kernel, scale=scale, q_blk=q_blk,
+                                   k_blk=k_blk, nb_sel=nb_sel, kt=kt,
+                                   causal=causal, window=window,
+                                   q_offset=q_offset)
+        prefetch = (block_idx, kc_part, lengths)
+    else:
+        def q_map(bi, hi, qi, ki, ji, idx_ref, len_ref):
+            return (bi, hi, qi, ji, 0, 0)
+
+        def k_map(bi, hi, qi, ki, ji, idx_ref, len_ref):
+            return (bi, hi // g, idx_ref[bi, hi, qi, ji], 0, ki)
+
+        def v_map(bi, hi, qi, ki, ji, idx_ref, len_ref):
+            return (bi, hi // g, ki, 0)
+
+        def o_map(bi, hi, qi, ki, ji, idx_ref, len_ref):
+            return (bi, hi, qi, 0)
+
+        nsp = 2
+        kernel = functools.partial(_kernel, scale=scale, q_blk=q_blk,
+                                   k_blk=k_blk, nb_sel=nb_sel, nkc=nkc,
+                                   causal=causal, window=window,
+                                   q_offset=q_offset)
+        prefetch = (block_idx, lengths)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=nsp,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, 1, 1, q_blk, bd), q_map),
@@ -202,13 +316,9 @@ def aqua_prefill_attention(q_sel: jax.Array, khat_blocks: jax.Array,
             pltpu.VMEM((q_blk, dv), jnp.float32),     # output accumulator
         ],
     )
-    kernel = functools.partial(_kernel, scale=scale, q_blk=q_blk,
-                               k_blk=k_blk, nb_sel=nb_sel, nkc=nkc,
-                               causal=causal, window=window,
-                               q_offset=q_offset)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, h, nqc * q_blk, dv), v.dtype),
         interpret=interpret,
-    )(block_idx, lengths, q_sel, khat_blocks, v)
+    )(*prefetch, q_sel, khat_blocks, v)

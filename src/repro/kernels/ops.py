@@ -127,7 +127,9 @@ def aqua_decode(q_hat: jax.Array, khat: jax.Array, v: jax.Array,
 def aqua_paged_decode(q_hat: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                       page_table: jax.Array, lengths: jax.Array,
                       k_scale: Optional[jax.Array] = None,
-                      v_scale: Optional[jax.Array] = None, *,
+                      v_scale: Optional[jax.Array] = None,
+                      part_idx: Optional[jax.Array] = None,
+                      block_idx: Optional[jax.Array] = None, *,
                       k_ratio: float = 0.75, block_dims: int = 8,
                       seq_blk: int = 128, scale: Optional[float] = None,
                       interpret: Optional[bool] = None) -> jax.Array:
@@ -140,6 +142,12 @@ def aqua_paged_decode(q_hat: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     quantized (None for full precision) — threaded to the kernel as extra
     scalar-prefetch operands, where the key scale folds into the softmax
     scale (dequant-free score accumulation).
+    part_idx: (B, KP) int32 stage-1 participating logical pages per lane
+    (``core.selection.participating_pages``), or None for all pages —
+    hierarchical AQUA's token-sparsity table, also scalar-prefetched;
+    the kernel walks only those KP pages. block_idx: precomputed (B, H,
+    NB_sel) stage-2 dim-block selection (a ``SelectionPlan``'s), or None
+    to select here from ``q_hat`` magnitudes.
 
     Same magnitude selection as :func:`aqua_decode`; the physical page of
     each sequence block is resolved inside the kernel's scalar-prefetch
@@ -153,7 +161,8 @@ def aqua_paged_decode(q_hat: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     nb = d // block_dims
     k_dims = round_k_dims(d, k_ratio, block_dims)
 
-    block_idx = aqua_lib.topk_block_indices(q_hat, k_dims, block_dims)
+    if block_idx is None:
+        block_idx = aqua_lib.topk_block_indices(q_hat, k_dims, block_dims)
     qb = q_hat.reshape(b, h, nb, block_dims)
     q_sel = jnp.take_along_axis(qb, block_idx[..., None], axis=2)
 
@@ -163,7 +172,7 @@ def aqua_paged_decode(q_hat: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     khat_pages = to_dim_major_blocks(k_pool, block_dims)  # (P,KV,NB,bd,ps)
     return aqua_paged_decode_attention(q_sel, khat_pages, v_pool, block_idx,
                                        page_table, lengths,
-                                       k_scale, v_scale,
+                                       k_scale, v_scale, part_idx,
                                        block_dims=block_dims,
                                        seq_blk=seq_blk, scale=scale,
                                        interpret=interpret)

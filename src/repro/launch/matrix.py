@@ -25,7 +25,7 @@ import re
 from jax.sharding import AbstractMesh
 
 from repro.configs.base import (AquaConfig, AttentionConfig, CacheSpec,
-                                QuantSpec, ServingConfig)
+                                QuantSpec, ServingConfig, SparsitySpec)
 from repro.core.dispatch import resolve_dispatch_plan
 
 BEGIN = "<!-- dispatch-matrix:begin (repro.launch.matrix — do not edit) -->"
@@ -63,14 +63,21 @@ def _chunk_cell(plan) -> str:
     return f"monolithic admit ({plan.chunked_reasons[0]})"
 
 
+def _token_cell(plan) -> str:
+    if plan.token_sparsity == "hierarchical":
+        return "hierarchical (page-granular stage 1)"
+    return f"none ({plan.token_reasons[0]})"
+
+
 def generate_matrix() -> str:
     """The README table (markdown, BEGIN/END markers included)."""
     mesh = AbstractMesh((("data", 2), ("model", 2)))
     lines = [
         BEGIN,
         "| backend | contiguous cache @ mesh | paged cache @ mesh "
-        "| int8 paged cache @ mesh | chunked prefill @ budget |",
-        "|---|---|---|---|---|",
+        "| int8 paged cache @ mesh | chunked prefill @ budget "
+        "| token sparsity @ keep 0.5 |",
+        "|---|---|---|---|---|---|",
     ]
     layouts = (
         (CacheSpec(), QuantSpec()),
@@ -93,8 +100,17 @@ def generate_matrix() -> str:
         plan = resolve_dispatch_plan(attention=att, aqua=aqua,
                                      serving=serving, mesh=mesh)
         cells.append(_chunk_cell(plan))
+        # stage-1 token sparsity needs a paged pool; every backend honors
+        # it (a *selection* mode: kernel and reference paths stream/mask
+        # the same participating-page set, so it is not a dispatch fork)
+        serving = dataclasses.replace(
+            _SERVING, cache=CacheSpec(page_size=8),
+            sparsity=SparsitySpec(page_keep_ratio=0.5))
+        plan = resolve_dispatch_plan(attention=att, aqua=aqua,
+                                     serving=serving, mesh=mesh)
+        cells.append(_token_cell(plan))
         lines.append(f"| `{label}` | {cells[0]} | {cells[1]} | {cells[2]} "
-                     f"| {cells[3]} |")
+                     f"| {cells[3]} | {cells[4]} |")
     lines.append(END)
     return "\n".join(lines)
 

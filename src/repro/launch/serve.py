@@ -34,7 +34,7 @@ import jax
 
 from repro.configs import get_config, reduced
 from repro.configs.base import (AquaConfig, CacheSpec, QuantSpec,
-                                ServingConfig)
+                                ServingConfig, SparsitySpec)
 from repro.core.calibration import calibrate, identity_projections
 from repro.data.pipeline import DataConfig, add_frontend_inputs, \
     calibration_batches, make_batch
@@ -98,6 +98,18 @@ def main():
                     help="fraction of the pool kept as full-precision hot "
                          "residents (H2O score policy; mixed precision "
                          "serves on the reference path, not the kernel)")
+    # hierarchical (two-stage) token sparsity
+    ap.add_argument("--page-keep-ratio", type=float, default=1.0,
+                    help="hierarchical AQUA: fraction of each lane's pages "
+                         "participating in decode attention (stage-1 "
+                         "page-granular token sparsity ranked by H2O page "
+                         "mass; stage 2 is the |q̂| dim-block top-k). "
+                         "Requires --page-size; 1.0 = every page (exactly "
+                         "the plain paged kernel)")
+    ap.add_argument("--pin-recent-pages", type=int, default=2,
+                    help="hierarchical: trailing pages per lane always "
+                         "participating (probe token + local window stay "
+                         "exact)")
     # chunked-prefill/decode interleaving
     ap.add_argument("--prefill-budget", type=int, default=None,
                     help="interleave admissions with decode: at most this "
@@ -179,7 +191,10 @@ def main():
                          quant=QuantSpec(
                              kv_dtype=args.kv_dtype,
                              scale_granularity=args.scale_granularity,
-                             hot_resident_fraction=args.hot_frac))
+                             hot_resident_fraction=args.hot_frac),
+                         sparsity=SparsitySpec(
+                             page_keep_ratio=args.page_keep_ratio,
+                             pin_recent_pages=args.pin_recent_pages))
     eng = ContinuousBatchingEngine(cfg, params, proj, serving=scfg,
                                    backend=args.backend, mesh=mesh)
     plan = eng.dispatch_plan()
@@ -191,6 +206,15 @@ def main():
             # regression silently serving monolithic must fail loudly
             print("[serve] VERIFY FAILED: --prefill-budget requested but "
                   "the engine planned monolithic admission")
+            raise SystemExit(1)
+    if args.page_keep_ratio < 1.0 and plan.token_sparsity != "hierarchical":
+        print("[serve] hierarchical token sparsity OFF (all pages "
+              f"participate): {'; '.join(plan.token_reasons)}")
+        if args.verify:
+            # CI pins the hierarchical path with a ratio; a predicate
+            # regression silently attending every page must fail loudly
+            print("[serve] VERIFY FAILED: --page-keep-ratio requested but "
+                  "the engine planned full page participation")
             raise SystemExit(1)
     if args.expect_kernel_mesh and not plan.mesh_native:
         # independent of the engine's own dispatch decision: the caller
@@ -284,6 +308,55 @@ def main():
                   f"{args.shared_prefix_len}-token prefix but no "
                   "admission reused shared prefix pages")
             raise SystemExit(1)
+        if eng.kept_pages is not None:
+            kp, npl = eng.kept_pages, per_lane
+            print(f"[serve] hierarchical: {kp}/{npl} pages per lane "
+                  f"participate in decode (keep ratio "
+                  f"{args.page_keep_ratio:g}, {args.pin_recent_pages} "
+                  "recent pinned)")
+            # numpy page-ranking oracle vs the jit stage-1 selection on
+            # the terminal engine state — --verify pins that the table the
+            # kernels scalar-prefetched is the one the reference ranking
+            # math produces
+            if args.verify:
+                import jax as _jax
+                from repro.core import kvcache as kvc
+                from repro.core import selection
+                stacked = [x for x in _jax.tree_util.tree_leaves(
+                    eng.last_state,
+                    is_leaf=lambda t: isinstance(t, kvc.PagedAttnCache))
+                    if isinstance(x, kvc.PagedAttnCache)]
+                # model decode state stacks layers into one cache (leading
+                # L axis on every leaf); unstack to per-layer views
+                caches = []
+                for c in stacked:
+                    if c.page_table.ndim == 2:
+                        caches.append(c)
+                        continue
+                    for li in range(c.page_table.shape[0]):
+                        caches.append((c.acc_pool[li], c.page_table[li],
+                                       c.count[li]))
+                bad_oracle = 0
+                for c in caches:
+                    acc, table, count = (
+                        (c.acc_pool, c.page_table, c.count)
+                        if isinstance(c, kvc.PagedAttnCache) else c)
+                    got = np.asarray(selection.participating_pages(
+                        acc, table, count,
+                        page_size=ps, kept_pages=kp,
+                        pin_recent_pages=args.pin_recent_pages))
+                    want = selection.reference_participating_pages(
+                        acc, table, count,
+                        page_size=ps, kept_pages=kp,
+                        pin_recent_pages=args.pin_recent_pages)
+                    bad_oracle += int(not np.array_equal(got, want))
+                if bad_oracle:
+                    print(f"[serve] VERIFY FAILED: jit page ranking "
+                          f"diverges from the numpy oracle on "
+                          f"{bad_oracle}/{len(caches)} layer caches")
+                    raise SystemExit(1)
+                print(f"[serve] verify: page-ranking oracle agrees on all "
+                      f"{len(caches)} layer caches")
         if eng.quant_spec.quantized:
             from repro.models.base import PagingSpec
             fp_model = build_model(cfg)
@@ -357,12 +430,19 @@ def main():
             # int8 pools round differently than a full-precision cache by
             # construction, so only the single-device engine with the SAME
             # quantization math is a token-exact reference.
+            # Hierarchical drives route like quantized ones: dropping
+            # pages changes outputs vs exact attention by construction, so
+            # only the single-device engine with the SAME page-ranking
+            # math (scfg carries the SparsitySpec) is token-exact.
             prefix_engaged = (plan.prefix_sharing and plan.mesh_native
                               and args.shared_prefix_len > 0)
-            if prefix_engaged or plan.quantization != "none":
+            if (prefix_engaged or plan.quantization != "none"
+                    or plan.token_sparsity != "none"):
                 where = ("single-device paged"
                          if plan.quantization == "none"
                          else f"single-device paged {plan.quantization}")
+                if plan.token_sparsity != "none":
+                    where += " hierarchical"
                 ref_scfg = scfg
             else:
                 where = "single-device contiguous"

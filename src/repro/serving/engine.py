@@ -40,6 +40,7 @@ when no mesh is configured.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 import time
@@ -51,7 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import (ModelConfig, ServingConfig,
-                                resolve_cache_specs)
+                                resolve_cache_specs, resolve_sparsity_spec)
 from repro.core import kvcache as kvc
 from repro.core.calibration import AquaProjections
 from repro.core.dispatch import DispatchPlan, resolve_dispatch_plan
@@ -283,6 +284,7 @@ class ContinuousBatchingEngine:
         # resolves silently against the same specs
         self.cache_spec, self.quant_spec = resolve_cache_specs(serving,
                                                                warn=True)
+        self.sparsity_spec = resolve_sparsity_spec(serving)
         self.model = build_model(cfg)
         self.params = params
         self.proj = None
@@ -371,6 +373,15 @@ class ContinuousBatchingEngine:
             mesh=self.mesh, prefix_sharing=self._prefix_ok,
             family=cfg.family, frontend=cfg.frontend.kind)
         self._kernel_native = self._plan.mesh_native
+        # hierarchical token sparsity: resolve the per-lane participating
+        # page count once (SparsitySpec is static config; the *table* is
+        # per-step). None = every page participates — either the config
+        # keeps everything or the plan vetoed it (REASON_TOKEN_*).
+        self._kept_pages = None
+        if self._paged and self._plan.token_sparsity == "hierarchical":
+            kp = self.sparsity_spec.kept_pages(self._pages_per_lane)
+            if kp < self._pages_per_lane:
+                self._kept_pages = kp
         # per-engine mesh-fallback record: filled (and warning-deduped) by
         # the attention dispatch while this engine's steps trace, so each
         # engine owns its fallback report regardless of other engines in
@@ -494,10 +505,17 @@ class ContinuousBatchingEngine:
 
     def _use_mesh(self):
         """Trace-time context: installs (or clears) the decode mesh — and
-        this engine's fallback sink — for the shard_map attention cores
-        while this engine's steps trace."""
-        from repro.core.attention import use_decode_mesh
-        return use_decode_mesh(self.mesh, fallback_sink=self._mesh_fallback)
+        this engine's fallback sink — plus the hierarchical token-sparsity
+        participation for the attention cores while this engine's steps
+        trace. Both ride ContextVars and bake into the compiled
+        executables, so concurrent engines stay independent."""
+        from repro.core.attention import use_decode_mesh, use_token_sparsity
+        stack = contextlib.ExitStack()
+        stack.enter_context(use_decode_mesh(
+            self.mesh, fallback_sink=self._mesh_fallback))
+        stack.enter_context(use_token_sparsity(
+            self._kept_pages, self.sparsity_spec.pin_recent_pages))
+        return stack
 
     def mesh_fallback_events(self):
         """(backend, mode, reason) mesh-kernel fallbacks traced by THIS
@@ -520,6 +538,14 @@ class ContinuousBatchingEngine:
     def paged(self) -> bool:
         """True when this engine serves from a block-paged KV pool."""
         return self._paged
+
+    @property
+    def kept_pages(self):
+        """Per-lane participating-page count when hierarchical token
+        sparsity engaged (``dispatch_plan().token_sparsity ==
+        'hierarchical'`` and the resolved keep is a strict subset), else
+        None — every page participates."""
+        return self._kept_pages
 
     @property
     def pool_geometry(self):

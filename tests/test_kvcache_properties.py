@@ -494,3 +494,113 @@ def test_copy_on_write_preserves_scale_metadata():
 
 if __name__ == "__main__":
     pytest.main([__file__, "-q"])
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical stage-1 selection (SparsitySpec): the jit ranking equals
+# the numpy --verify oracle, the recency pin is an invariant, and shared
+# (CoW / prefix) physical pages are ranked per-lane
+# ---------------------------------------------------------------------------
+
+
+def _int_acc_pool(rng, num_pages, page_size):
+    """Integer-valued float32 mass: the jit path and the numpy oracle sum
+    in different orders, so exactness (not tolerance) requires sums that
+    float32 represents exactly."""
+    return jnp.asarray(
+        rng.integers(0, 8, size=(num_pages, KV_HEADS, page_size)),
+        jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**16),
+    batch=st.integers(min_value=1, max_value=3),
+    page_size=st.sampled_from([4, 8]),
+    npl=st.sampled_from([4, 8]),
+    pin=st.integers(min_value=1, max_value=3),
+)
+def test_participating_pages_matches_numpy_oracle(seed, batch, page_size,
+                                                  npl, pin):
+    from repro.core import selection
+    rng = np.random.default_rng(seed)
+    num_pages = batch * npl + 2
+    acc = _int_acc_pool(rng, num_pages, page_size)
+    # per-lane tables: a random physical permutation with a random mapped
+    # prefix (the unmapped tail is -1, exactly like a growing lane)
+    table = np.full((batch, npl), -1, np.int32)
+    count = np.zeros((batch,), np.int32)
+    perm = rng.permutation(num_pages)
+    nxt = 0
+    for i in range(batch):
+        mapped = int(rng.integers(1, npl + 1))
+        table[i, :mapped] = perm[nxt:nxt + mapped]
+        nxt += mapped
+        count[i] = int(rng.integers(1, mapped * page_size + 1))
+    kept = int(rng.integers(pin, npl + 1))
+    got = selection.participating_pages(
+        acc, jnp.asarray(table), jnp.asarray(count), page_size=page_size,
+        kept_pages=kept, pin_recent_pages=pin)
+    ref = selection.reference_participating_pages(
+        acc, table, count, page_size=page_size, kept_pages=kept,
+        pin_recent_pages=pin)
+    np.testing.assert_array_equal(np.asarray(got), ref)
+    # output is always sorted ascending with in-range logical indices
+    g = np.asarray(got)
+    assert (np.sort(g, axis=1) == g).all()
+    assert (g >= 0).all() and (g < npl).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**16),
+    page_size=st.sampled_from([4, 8]),
+    pin=st.integers(min_value=1, max_value=3),
+)
+def test_recency_pin_is_invariant(seed, page_size, pin):
+    """However adversarial the mass distribution, the pages holding the
+    most recent tokens are always in the participating set."""
+    from repro.core import selection
+    rng = np.random.default_rng(seed)
+    npl = 8
+    acc = _int_acc_pool(rng, npl + 2, page_size) * 1000.0  # huge elsewhere
+    table = jnp.arange(npl, dtype=jnp.int32)[None]
+    cnt = int(rng.integers(1, npl * page_size + 1))
+    kept = int(rng.integers(pin, npl + 1))
+    part = np.asarray(selection.participating_pages(
+        acc, table, jnp.asarray([cnt], jnp.int32), page_size=page_size,
+        kept_pages=kept, pin_recent_pages=pin))[0]
+    tail = max((cnt - 1) // page_size, 0)
+    pinned = set(range(max(tail - pin + 1, 0), tail + 1))
+    missing = pinned - set(part.tolist())
+    assert len(pinned) <= kept and not missing, (cnt, part, pinned)
+
+
+def test_shared_pages_rank_per_lane():
+    """A CoW/prefix-shared physical page contributes its mass to every
+    lane that maps it, at each lane's own logical position — ranking
+    gathers through the table, never through pool order."""
+    from repro.core import selection
+    ps, npl = 4, 4
+    acc = jnp.zeros((6, KV_HEADS, ps), jnp.float32).at[5].set(9.0)
+    # both lanes map hot physical page 5, at logical 0 vs logical 2
+    table = jnp.asarray([[5, 0, 1, 2],
+                         [3, 4, 5, 2]], jnp.int32)
+    count = jnp.full((2,), npl * ps, jnp.int32)
+    part = np.asarray(selection.participating_pages(
+        acc, table, count, page_size=ps, kept_pages=2,
+        pin_recent_pages=1))
+    np.testing.assert_array_equal(part[0], [0, 3])   # hot page + pin
+    np.testing.assert_array_equal(part[1], [2, 3])   # same page, lane 1
+
+
+def test_full_keep_is_identity_regardless_of_mass():
+    from repro.core import selection
+    rng = np.random.default_rng(0)
+    ps, npl = 4, 8
+    acc = _int_acc_pool(rng, npl, ps)
+    table = jnp.arange(npl, dtype=jnp.int32)[None]
+    part = np.asarray(selection.participating_pages(
+        acc, table, jnp.asarray([npl * ps], jnp.int32), page_size=ps,
+        kept_pages=npl, pin_recent_pages=2))
+    np.testing.assert_array_equal(part[0], np.arange(npl))
