@@ -118,6 +118,17 @@ def compare(base, fresh, threshold):
         b, f = metrics.get("token_match"), f_metrics.get("token_match")
         if b is not None and f is not None:
             yield name, "token_match", b, f, f >= b - 0.05
+        # teacher-forced perplexity (quality benches): upward drift beyond
+        # the threshold means the approximation quality regressed — lower
+        # is always better, so only the increase direction gates
+        b, f = metrics.get("ppl"), f_metrics.get("ppl")
+        if b is not None and f is not None:
+            yield name, "ppl", b, f, f <= b * (1 + threshold)
+        # greedy next-token accuracy is a fraction in [0, 1]: absolute
+        # drift bound, like token_match
+        b, f = metrics.get("acc"), f_metrics.get("acc")
+        if b is not None and f is not None:
+            yield name, "acc", b, f, f >= b - 0.05
 
     # interleaving contract — judged *within the fresh dump* so machine
     # speed cancels: the chunked-prefill row must cut the tail inter-token

@@ -5,8 +5,10 @@ the jitted callable where meaningful, 0.0 for pure-metric rows; derived
 carries the paper metric). Roofline terms come from the dry-run artifacts
 via benchmarks.roofline, not from CPU timing.
 
-``--fast`` runs only the trained-model-free benches (seconds, used by the
-CI smoke); ``--json PATH`` additionally writes the rows as a JSON list of
+``--fast`` runs the CI-smoke subset: the trained-model-free benches plus
+the quality sweeps (which reuse one cached trained model, see
+benchmarks.common); ``--json PATH`` additionally writes the rows as a
+JSON list of
 ``{"name", "us_per_call", "derived"}`` objects (uploaded as a CI
 artifact).
 
@@ -52,7 +54,7 @@ def main(argv=None) -> None:
         args.fast = True
         args.json = os.path.join(_ROOT, "BENCH_serving.json")
 
-    from benchmarks import fidelity
+    from benchmarks import fidelity, quality
     fast_benches = [
         fidelity.breakeven,
         fidelity.prefill_backends,
@@ -60,6 +62,8 @@ def main(argv=None) -> None:
         fidelity.quant_fidelity,
         fidelity.serving_throughput,
         fidelity.longcontext_bench,
+        quality.quality_sweep,
+        quality.hf_ingest_quality,
     ]
     full_benches = [
         fidelity.fig2_info_retention,

@@ -1,0 +1,205 @@
+"""Synthetic HF-checkpoint fixture generator (CI has no network).
+
+Writes a tiny random qwen3-geometry checkpoint in *genuine* HF layout —
+``config.json`` plus safetensors file(s) with transformers tensor names
+and HF-side shapes (``q_proj.weight`` as ``(H*D, hidden)`` etc.) — so
+the whole real-weights path (``checkpoint/hf.py`` ingestion -> corpus
+calibration -> paged/mesh serving -> quality bench) exercises offline.
+The tensor name list and shapes below are written against the HF
+llama/qwen3 state-dict format directly, independent of
+``hf.mapping_specs``, so a mapping bug cannot hide behind a fixture
+generated from the same table.
+
+Variants:
+
+* ``variant="single"`` — one ``model.safetensors``.
+* ``variant="sharded"`` — two shard files plus a
+  ``model.safetensors.index.json`` weight map (the multi-file layout
+  real >2GB checkpoints ship in).
+* ``tied=True`` — ``tie_word_embeddings`` with no ``lm_head.weight``.
+* ``dtype="bfloat16"`` — stores bf16 tensors (the common HF distribution
+  dtype); ingestion casts on load.
+
+CLI (CI acceptance drive)::
+
+    PYTHONPATH=src python -m repro.checkpoint.fixtures /tmp/hf_fixture \\
+        --variant sharded --seed 0
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, Optional
+
+import ml_dtypes
+import numpy as np
+
+# Tiny qwen3 geometry: GQA (kv < heads), qk-norm, tied-embedding-capable.
+# head_dim=16 admits block_dims=8 dim-block kernels; vocab 256 makes the
+# byte-level calibration corpus an exact fit.
+QWEN3_TINY: Dict[str, object] = {
+    "model_type": "qwen3",
+    "hidden_size": 64,
+    "num_hidden_layers": 2,
+    "num_attention_heads": 4,
+    "num_key_value_heads": 2,
+    "head_dim": 16,
+    "intermediate_size": 128,
+    "vocab_size": 256,
+    "rms_norm_eps": 1e-6,
+    "rope_theta": 1000000.0,
+    "tie_word_embeddings": False,
+    "torch_dtype": "float32",
+}
+
+
+def fixture_state_dict(
+    config: Dict[str, object], *, seed: int = 0
+) -> Dict[str, np.ndarray]:
+    """Random float32 tensors under HF transformers names/shapes."""
+    rng = np.random.default_rng(seed)
+    hidden = int(config["hidden_size"])
+    layers = int(config["num_hidden_layers"])
+    heads = int(config["num_attention_heads"])
+    kv = int(config.get("num_key_value_heads", heads))
+    d = int(config.get("head_dim", hidden // heads))
+    ff = int(config["intermediate_size"])
+    vocab = int(config["vocab_size"])
+    qk_norm = config.get("model_type") == "qwen3"
+    bias = bool(config.get("attention_bias", False))
+    tied = bool(config.get("tie_word_embeddings", False))
+
+    def w(*shape: int) -> np.ndarray:
+        scale = 1.0 / np.sqrt(shape[-1]) if len(shape) > 1 else 0.02
+        return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+    sd: Dict[str, np.ndarray] = {
+        "model.embed_tokens.weight": w(vocab, hidden),
+        "model.norm.weight": np.ones((hidden,), np.float32),
+    }
+    if not tied:
+        sd["lm_head.weight"] = w(vocab, hidden)
+    for i in range(layers):
+        pre = f"model.layers.{i}."
+        attn = pre + "self_attn."
+        sd[pre + "input_layernorm.weight"] = np.ones((hidden,), np.float32)
+        sd[pre + "post_attention_layernorm.weight"] = np.ones(
+            (hidden,), np.float32
+        )
+        sd[attn + "q_proj.weight"] = w(heads * d, hidden)
+        sd[attn + "k_proj.weight"] = w(kv * d, hidden)
+        sd[attn + "v_proj.weight"] = w(kv * d, hidden)
+        sd[attn + "o_proj.weight"] = w(hidden, heads * d)
+        if qk_norm:
+            sd[attn + "q_norm.weight"] = np.ones((d,), np.float32)
+            sd[attn + "k_norm.weight"] = np.ones((d,), np.float32)
+        if bias:
+            sd[attn + "q_proj.bias"] = w(heads * d)
+            sd[attn + "k_proj.bias"] = w(kv * d)
+            sd[attn + "v_proj.bias"] = w(kv * d)
+        sd[pre + "mlp.gate_proj.weight"] = w(ff, hidden)
+        sd[pre + "mlp.up_proj.weight"] = w(ff, hidden)
+        sd[pre + "mlp.down_proj.weight"] = w(hidden, ff)
+    return sd
+
+
+def write_hf_fixture(
+    outdir: str,
+    *,
+    seed: int = 0,
+    variant: str = "single",
+    tied: bool = False,
+    bias: bool = False,
+    dtype: str = "float32",
+    config_overrides: Optional[Dict[str, object]] = None,
+    extra_tensors: bool = False,
+) -> Dict[str, np.ndarray]:
+    """Write a synthetic HF checkpoint to ``outdir``; returns the raw
+    (float32, HF-layout) state dict the files were written from, so tests
+    can oracle against the exact source arrays.
+
+    ``extra_tensors`` adds a non-parameter ``rotary_emb.inv_freq`` entry
+    (present in older HF exports) that ingestion must ignore.
+    """
+    from safetensors.numpy import save_file
+
+    config = dict(QWEN3_TINY)
+    config["tie_word_embeddings"] = tied
+    if bias:
+        config["attention_bias"] = True
+    config["torch_dtype"] = dtype
+    if config_overrides:
+        config.update(config_overrides)
+    sd = fixture_state_dict(config, seed=seed)
+
+    os.makedirs(outdir, exist_ok=True)
+    with open(os.path.join(outdir, "config.json"), "w") as f:
+        json.dump(config, f, indent=2)
+
+    stored = sd
+    if dtype == "bfloat16":
+        stored = {k: v.astype(ml_dtypes.bfloat16) for k, v in sd.items()}
+    elif dtype != "float32":
+        raise ValueError(f"unsupported fixture dtype {dtype!r}")
+
+    if extra_tensors:
+        stored = dict(stored)
+        stored["model.layers.0.self_attn.rotary_emb.inv_freq"] = np.ones(
+            (int(config["head_dim"]) // 2,), np.float32
+        )
+
+    if variant == "single":
+        save_file(stored, os.path.join(outdir, "model.safetensors"))
+    elif variant == "sharded":
+        names = sorted(stored)
+        half = len(names) // 2
+        shards = {
+            "model-00001-of-00002.safetensors": names[:half],
+            "model-00002-of-00002.safetensors": names[half:],
+        }
+        weight_map = {}
+        for fname, keys in shards.items():
+            save_file(
+                {k: stored[k] for k in keys}, os.path.join(outdir, fname)
+            )
+            weight_map.update({k: fname for k in keys})
+        index = {
+            "metadata": {
+                "total_size": sum(v.nbytes for v in stored.values())
+            },
+            "weight_map": weight_map,
+        }
+        with open(os.path.join(outdir, "model.safetensors.index.json"), "w") as f:
+            json.dump(index, f, indent=2)
+    else:
+        raise ValueError(f"unknown fixture variant {variant!r}")
+    return sd
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("outdir")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--variant", default="single", choices=("single", "sharded"))
+    ap.add_argument("--tied", action="store_true")
+    ap.add_argument("--bias", action="store_true")
+    ap.add_argument("--dtype", default="float32", choices=("float32", "bfloat16"))
+    args = ap.parse_args(argv)
+    sd = write_hf_fixture(
+        args.outdir,
+        seed=args.seed,
+        variant=args.variant,
+        tied=args.tied,
+        bias=args.bias,
+        dtype=args.dtype,
+    )
+    print(
+        f"[fixtures] wrote {len(sd)} tensors ({args.variant}, "
+        f"{args.dtype}) to {args.outdir}"
+    )
+
+
+if __name__ == "__main__":
+    main()

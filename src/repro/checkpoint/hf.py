@@ -1,0 +1,378 @@
+"""HF-format safetensors ingestion: real checkpoint -> repro param tree.
+
+Maps Hugging Face transformers state dicts (llama / qwen2 / qwen3
+families) onto the repro parameter tree with *explicit per-tensor
+mapping specs* (:func:`mapping_specs`): every repro leaf names the HF
+tensor it comes from, the transform that reshapes it, and the exact
+shape it must produce, so the mapping is testable tensor-by-tensor
+against a numpy oracle rather than "the load didn't crash".
+
+Layout differences handled here:
+
+* HF ``nn.Linear`` stores ``(out_features, in_features)``; the repro
+  einsums contract ``(in, out)`` — every projection transposes.
+* GQA head packing: HF ``q_proj`` rows are ``[head0 | head1 | ...]``
+  with query head ``h`` reading KV head ``h // group_size`` (the
+  ``repeat_kv`` convention). The repro layout ``(d_model, KV, G, D)``
+  is exactly that grouping, so a reshape after the transpose is the
+  whole transform — verified against an einsum oracle in
+  ``tests/test_hf_loader.py``.
+* ``o_proj`` ``(d_model, H*D)`` transposes then reshapes to the repro
+  ``(KV, G, D, d_model)``.
+* RMSNorm placement: ``input_layernorm`` -> ``ln1`` (pre-attention),
+  ``post_attention_layernorm`` -> ``ln2`` (pre-MLP); qwen3's per-head
+  ``q_norm``/``k_norm`` land inside the attention params.
+* Gated MLP: ``gate_proj`` -> ``w1``, ``up_proj`` -> ``w3``,
+  ``down_proj`` -> ``w2`` (see ``models.layers.mlp``).
+* Tied embeddings (``tie_word_embeddings``) omit ``lm_head.weight``;
+  the repro tree then has no ``unembed`` entry.
+* Sharded checkpoints resolve through ``model.safetensors.index.json``
+  (tensors are fetched lazily per shard file — an 8B checkpoint never
+  materializes twice).
+
+Per-layer tensors stack into the repro convention of a leading
+``num_layers`` axis on every ``layers/...`` leaf (the ``lax.scan``
+layout produced by ``jax.vmap`` at init time).
+
+RoPE has no parameters on either side (same rotate-half convention);
+non-parameter extras like ``rotary_emb.inv_freq`` are ignored.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import AttentionConfig, ModelConfig
+
+INDEX_NAME = "model.safetensors.index.json"
+SINGLE_NAME = "model.safetensors"
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorSpec:
+    """One repro-tree leaf: where it comes from and how it gets there."""
+
+    hf_name: str
+    # path inside the repro param tree, e.g. ("layers", "attn", "wq");
+    # per-layer specs carry their layer index separately and stack.
+    path: Tuple[str, ...]
+    transform: str
+    # repro-side shape this spec must produce (per layer, without the
+    # stacked leading L axis)
+    shape: Tuple[int, ...]
+    layer: Optional[int] = None
+
+
+def _t_identity(arr: np.ndarray, acfg: AttentionConfig, d_model: int):
+    return arr
+
+
+def _t_linear(arr: np.ndarray, acfg: AttentionConfig, d_model: int):
+    """HF Linear (out, in) -> repro (in, out)."""
+    return arr.T
+
+
+def _t_q_proj(arr: np.ndarray, acfg: AttentionConfig, d_model: int):
+    """(H*D, d_model) -> (d_model, KV, G, D)."""
+    kv, g, d = acfg.num_kv_heads, acfg.group_size, acfg.head_dim
+    return arr.T.reshape(d_model, kv, g, d)
+
+
+def _t_kv_proj(arr: np.ndarray, acfg: AttentionConfig, d_model: int):
+    """(KV*D, d_model) -> (d_model, KV, D)."""
+    kv, d = acfg.num_kv_heads, acfg.head_dim
+    return arr.T.reshape(d_model, kv, d)
+
+
+def _t_o_proj(arr: np.ndarray, acfg: AttentionConfig, d_model: int):
+    """(d_model, H*D) -> (KV, G, D, d_model)."""
+    kv, g, d = acfg.num_kv_heads, acfg.group_size, acfg.head_dim
+    return arr.T.reshape(kv, g, d, d_model)
+
+
+def _t_q_bias(arr: np.ndarray, acfg: AttentionConfig, d_model: int):
+    """(H*D,) -> (KV, G, D)."""
+    kv, g, d = acfg.num_kv_heads, acfg.group_size, acfg.head_dim
+    return arr.reshape(kv, g, d)
+
+
+def _t_kv_bias(arr: np.ndarray, acfg: AttentionConfig, d_model: int):
+    """(KV*D,) -> (KV, D)."""
+    return arr.reshape(acfg.num_kv_heads, acfg.head_dim)
+
+
+TRANSFORMS: Dict[str, Callable[..., np.ndarray]] = {
+    "identity": _t_identity,
+    "linear_t": _t_linear,
+    "q_proj": _t_q_proj,
+    "kv_proj": _t_kv_proj,
+    "o_proj": _t_o_proj,
+    "q_bias": _t_q_bias,
+    "kv_bias": _t_kv_bias,
+}
+
+
+def mapping_specs(cfg: ModelConfig) -> List[TensorSpec]:
+    """The full, explicit tensor mapping for ``cfg`` (dense llama/qwen
+    geometry). Every leaf of the repro param tree appears exactly once."""
+    acfg = cfg.attention
+    assert acfg is not None, "HF ingestion covers attention models"
+    m, f, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    kv, g, d = acfg.num_kv_heads, acfg.group_size, acfg.head_dim
+    specs = [
+        TensorSpec(
+            "model.embed_tokens.weight", ("embed", "table"), "identity", (v, m)
+        ),
+        TensorSpec("model.norm.weight", ("ln_f",), "identity", (m,)),
+    ]
+    if not cfg.tie_embeddings:
+        specs.append(
+            TensorSpec("lm_head.weight", ("unembed", "table"), "identity", (v, m))
+        )
+    for i in range(cfg.num_layers):
+        pre = f"model.layers.{i}."
+        attn = pre + "self_attn."
+        layer = [
+            TensorSpec(
+                pre + "input_layernorm.weight", ("layers", "ln1"), "identity", (m,)
+            ),
+            TensorSpec(
+                pre + "post_attention_layernorm.weight",
+                ("layers", "ln2"),
+                "identity",
+                (m,),
+            ),
+            TensorSpec(
+                attn + "q_proj.weight",
+                ("layers", "attn", "wq"),
+                "q_proj",
+                (m, kv, g, d),
+            ),
+            TensorSpec(
+                attn + "k_proj.weight", ("layers", "attn", "wk"), "kv_proj", (m, kv, d)
+            ),
+            TensorSpec(
+                attn + "v_proj.weight", ("layers", "attn", "wv"), "kv_proj", (m, kv, d)
+            ),
+            TensorSpec(
+                attn + "o_proj.weight",
+                ("layers", "attn", "wo"),
+                "o_proj",
+                (kv, g, d, m),
+            ),
+            TensorSpec(
+                pre + "mlp.gate_proj.weight",
+                ("layers", "ffn", "w1"),
+                "linear_t",
+                (m, f),
+            ),
+            TensorSpec(
+                pre + "mlp.up_proj.weight", ("layers", "ffn", "w3"), "linear_t", (m, f)
+            ),
+            TensorSpec(
+                pre + "mlp.down_proj.weight",
+                ("layers", "ffn", "w2"),
+                "linear_t",
+                (f, m),
+            ),
+        ]
+        if acfg.qk_norm:
+            layer += [
+                TensorSpec(
+                    attn + "q_norm.weight",
+                    ("layers", "attn", "q_norm"),
+                    "identity",
+                    (d,),
+                ),
+                TensorSpec(
+                    attn + "k_norm.weight",
+                    ("layers", "attn", "k_norm"),
+                    "identity",
+                    (d,),
+                ),
+            ]
+        if acfg.qkv_bias:
+            layer += [
+                TensorSpec(
+                    attn + "q_proj.bias", ("layers", "attn", "bq"), "q_bias", (kv, g, d)
+                ),
+                TensorSpec(
+                    attn + "k_proj.bias", ("layers", "attn", "bk"), "kv_bias", (kv, d)
+                ),
+                TensorSpec(
+                    attn + "v_proj.bias", ("layers", "attn", "bv"), "kv_bias", (kv, d)
+                ),
+            ]
+        specs.extend(dataclasses.replace(s, layer=i) for s in layer)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# File resolution + tensor fetch
+# ---------------------------------------------------------------------------
+
+
+def resolve_tensor_files(path: str) -> Dict[str, str]:
+    """{tensor name: absolute safetensors file} for a checkpoint at
+    ``path`` — a directory in HF layout (single ``model.safetensors`` or a
+    sharded ``model.safetensors.index.json``) or a direct ``.safetensors``
+    file."""
+    from safetensors import safe_open
+
+    def names_in(fname: str) -> Dict[str, str]:
+        with safe_open(fname, framework="numpy") as f:
+            return {name: fname for name in f.keys()}
+
+    if os.path.isfile(path):
+        return names_in(path)
+    index = os.path.join(path, INDEX_NAME)
+    if os.path.exists(index):
+        with open(index) as f:
+            weight_map = json.load(f)["weight_map"]
+        return {
+            name: os.path.join(path, shard) for name, shard in weight_map.items()
+        }
+    single = os.path.join(path, SINGLE_NAME)
+    if os.path.exists(single):
+        return names_in(single)
+    cands = (
+        sorted(n for n in os.listdir(path) if n.endswith(".safetensors"))
+        if os.path.isdir(path)
+        else []
+    )
+    if len(cands) == 1:
+        return names_in(os.path.join(path, cands[0]))
+    raise FileNotFoundError(
+        f"no HF safetensors checkpoint at {path!r} (expected {SINGLE_NAME}, "
+        f"{INDEX_NAME}, or a single .safetensors file)"
+    )
+
+
+def load_hf_checkpoint(path: str, cfg: ModelConfig, *, dtype=None) -> dict:
+    """Load an HF safetensors checkpoint into the repro param tree.
+
+    ``dtype`` defaults to ``cfg.param_dtype``; stored bf16 tensors are
+    cast on load (the bf16->f32 widening is exact). Missing tensors raise
+    ``KeyError`` naming the tensor and the repro leaf it was meant to
+    fill; a tensor whose transform produces the wrong shape raises
+    ``ValueError`` (geometry mismatch between ``cfg`` and the files).
+    Returns the same nested-dict tree ``model.init`` would produce, with
+    every ``layers/...`` leaf stacked over the leading layer axis.
+    """
+    from safetensors import safe_open
+
+    acfg = cfg.attention
+    out_dtype = np.dtype(dtype if dtype is not None else cfg.param_dtype)
+    locations = resolve_tensor_files(path)
+    specs = mapping_specs(cfg)
+
+    # fetch shard-by-shard so multi-file checkpoints stream one file at a
+    # time instead of opening per tensor
+    by_file: Dict[str, List[TensorSpec]] = {}
+    for spec in specs:
+        fname = locations.get(spec.hf_name)
+        if fname is None:
+            leaf = "/".join(spec.path) + (
+                f"[{spec.layer}]" if spec.layer is not None else ""
+            )
+            raise KeyError(
+                f"HF checkpoint at {path!r} is missing tensor "
+                f"{spec.hf_name!r} (needed for repro leaf {leaf!r}; "
+                f"{len(locations)} tensors present)"
+            )
+        by_file.setdefault(fname, []).append(spec)
+
+    raw: Dict[str, np.ndarray] = {}
+    for fname, file_specs in sorted(by_file.items()):
+        with safe_open(fname, framework="numpy") as f:
+            for spec in file_specs:
+                raw[spec.hf_name] = f.get_tensor(spec.hf_name)
+
+    # group per-layer specs by tree path, apply transforms, stack L
+    singles: Dict[Tuple[str, ...], np.ndarray] = {}
+    stacked: Dict[Tuple[str, ...], Dict[int, np.ndarray]] = {}
+    for spec in specs:
+        arr = TRANSFORMS[spec.transform](raw[spec.hf_name], acfg, cfg.d_model)
+        if tuple(arr.shape) != tuple(spec.shape):
+            raise ValueError(
+                f"tensor {spec.hf_name!r} maps to shape {tuple(arr.shape)}, "
+                f"expected {tuple(spec.shape)} for repro leaf "
+                f"{'/'.join(spec.path)!r} — checkpoint geometry does not "
+                f"match config {cfg.name!r}"
+            )
+        arr = np.ascontiguousarray(arr).astype(out_dtype)
+        if spec.layer is None:
+            singles[spec.path] = arr
+        else:
+            stacked.setdefault(spec.path, {})[spec.layer] = arr
+
+    tree: Dict[str, Any] = {}
+
+    def place(tpath: Tuple[str, ...], value: np.ndarray) -> None:
+        node = tree
+        for key in tpath[:-1]:
+            node = node.setdefault(key, {})
+        node[tpath[-1]] = jnp.asarray(value)
+
+    for tpath, arr in singles.items():
+        place(tpath, arr)
+    for tpath, per_layer in stacked.items():
+        place(tpath, np.stack([per_layer[i] for i in range(cfg.num_layers)]))
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# HF config.json -> ModelConfig
+# ---------------------------------------------------------------------------
+
+# model_type values this ingestion path understands (all dense
+# llama-geometry decoders)
+SUPPORTED_MODEL_TYPES = ("llama", "qwen2", "qwen3")
+
+
+def config_from_hf(path: str, *, name: Optional[str] = None) -> ModelConfig:
+    """Build a repro ``ModelConfig`` from an HF ``config.json``.
+
+    Serving-oriented defaults: float32 params/activations and
+    ``remat=False`` (the repro engine recomputes nothing at inference;
+    override with ``dataclasses.replace`` for training-style use).
+    """
+    cfg_path = path if os.path.isfile(path) else os.path.join(path, "config.json")
+    with open(cfg_path) as f:
+        hf = json.load(f)
+    model_type = hf.get("model_type", "llama")
+    if model_type not in SUPPORTED_MODEL_TYPES:
+        raise ValueError(
+            f"unsupported model_type {model_type!r} in {cfg_path!r} "
+            f"(supported: {SUPPORTED_MODEL_TYPES})"
+        )
+    heads = int(hf["num_attention_heads"])
+    hidden = int(hf["hidden_size"])
+    attention = AttentionConfig(
+        num_heads=heads,
+        num_kv_heads=int(hf.get("num_key_value_heads", heads)),
+        head_dim=int(hf.get("head_dim", hidden // heads)),
+        qk_norm=model_type == "qwen3",
+        qkv_bias=bool(hf.get("attention_bias", model_type == "qwen2")),
+        rope_theta=float(hf.get("rope_theta", 10000.0)),
+    )
+    return ModelConfig(
+        name=name or hf.get("_name_or_path", model_type),
+        family="dense",
+        num_layers=int(hf["num_hidden_layers"]),
+        d_model=hidden,
+        d_ff=int(hf["intermediate_size"]),
+        vocab_size=int(hf["vocab_size"]),
+        attention=attention,
+        norm_eps=float(hf.get("rms_norm_eps", 1e-6)),
+        tie_embeddings=bool(hf.get("tie_word_embeddings", False)),
+        dtype="float32",
+        param_dtype="float32",
+        remat=False,
+    )

@@ -13,7 +13,15 @@ Properties required at 1000-node scale and implemented here:
     unchanged. ``restore(..., shardings=...)`` does reshard-on-load.
   * **self-describing** — a JSON manifest records the step, pytree
     structure and array metadata for validation.
+
+Real-weights ingestion rides the same storage: ``import_hf`` maps an
+HF-format safetensors checkpoint (``checkpoint.hf``) into the repro tree
+and saves it as a native step, and AQUA projection artifacts
+(``core.calibration``) live *beside* the checkpoints as an
+``aqua_projections.npz`` sidecar in the same directory, so one manifest
+location carries both the weights and their calibration.
 """
+
 from __future__ import annotations
 
 import json
@@ -34,6 +42,8 @@ _VIEW_CODEC = {
     "float8_e5m2": (np.uint8, ml_dtypes.float8_e5m2),
 }
 
+PROJECTIONS_NAME = "aqua_projections.npz"
+
 
 def _encode(arr: np.ndarray) -> np.ndarray:
     codec = _VIEW_CODEC.get(str(arr.dtype))
@@ -49,8 +59,7 @@ def _flatten(tree) -> dict:
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
     for path, leaf in flat:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path)
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
         out[key] = np.asarray(jax.device_get(leaf))
     return out
 
@@ -91,7 +100,8 @@ class CheckpointManager:
         else:
             self.wait()
             self._thread = threading.Thread(
-                target=self._write, args=(step, host), daemon=True)
+                target=self._write, args=(step, host), daemon=True
+            )
             self._thread.start()
 
     def wait(self) -> None:
@@ -105,13 +115,17 @@ class CheckpointManager:
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
-        np.savez(os.path.join(tmp, "arrays.npz"),
-                 **{k: _encode(v) for k, v in host.items()})
+        np.savez(
+            os.path.join(tmp, "arrays.npz"),
+            **{k: _encode(v) for k, v in host.items()},
+        )
         manifest = {
             "step": step,
             "time": time.time(),
-            "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
-                       for k, v in host.items()},
+            "arrays": {
+                k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                for k, v in host.items()
+            },
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
@@ -122,7 +136,7 @@ class CheckpointManager:
 
     def _gc(self) -> None:
         steps = self.all_steps()
-        for s in steps[:-self.keep]:
+        for s in steps[: -self.keep]:
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
 
     # -- restore ---------------------------------------------------------
@@ -140,19 +154,51 @@ class CheckpointManager:
         assert manifest["step"] == step
         data = np.load(os.path.join(path, "arrays.npz"))
         flat, treedef = jax.tree_util.tree_flatten_with_path(target)
-        shard_flat = (None if shardings is None
-                      else treedef.flatten_up_to(shardings))
+        shard_flat = None if shardings is None else treedef.flatten_up_to(shardings)
         leaves = []
         for i, (p, leaf) in enumerate(flat):
-            key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
-                           for q in p)
+            key = "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
             arr = _decode(data[key], manifest["arrays"][key]["dtype"])
             expect = tuple(leaf.shape)
             if tuple(arr.shape) != expect:
-                raise ValueError(f"shape mismatch for {key}: "
-                                 f"{arr.shape} vs {expect}")
+                raise ValueError(
+                    f"shape mismatch for {key}: {arr.shape} vs {expect}"
+                )
             if shard_flat is not None and shard_flat[i] is not None:
                 leaves.append(jax.device_put(arr, shard_flat[i]))
             else:
                 leaves.append(jax.device_put(arr.astype(leaf.dtype)))
         return treedef.unflatten(leaves), step
+
+    # -- HF ingestion + AQUA projection sidecar ---------------------------
+    def import_hf(self, hf_path: str, cfg, *, step: int = 0):
+        """Ingest an HF safetensors checkpoint (``checkpoint.hf``) and save
+        it as native step ``step``. Returns the loaded param tree, so the
+        caller can serve from it immediately without a restore pass."""
+        from repro.checkpoint.hf import load_hf_checkpoint
+
+        params = load_hf_checkpoint(hf_path, cfg)
+        self.save(step, params)
+        return params
+
+    @property
+    def projections_path(self) -> str:
+        """The AQUA projection sidecar beside the checkpoint steps."""
+        return os.path.join(self.directory, PROJECTIONS_NAME)
+
+    def save_aqua_projections(self, proj) -> None:
+        """Save an ``AquaProjections`` artifact beside the checkpoints
+        (atomic: tmp + rename, like the step dirs)."""
+        from repro.core.calibration import save_projections
+
+        tmp = self.projections_path + ".tmp"
+        save_projections(tmp, proj)
+        os.replace(tmp, self.projections_path)
+
+    def load_aqua_projections(self):
+        """Load the projection sidecar, or None when absent."""
+        from repro.core.calibration import load_projections
+
+        if not os.path.exists(self.projections_path):
+            return None
+        return load_projections(self.projections_path)

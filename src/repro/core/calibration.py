@@ -4,13 +4,18 @@ activations per layer and GQA group, and compute the per-group SVD
 projection matrices P.
 
 Output artifact: ``AquaProjections`` — array (num_layers, num_kv_heads,
-d_head, d_head), saved/loaded as .npz alongside checkpoints. Layers without
-a QK dot product (SSM blocks, cross-attention) get identity entries.
+d_head, d_head), saved/loaded as .npz alongside checkpoints (see
+``checkpoint.manager.CheckpointManager.save_aqua_projections`` for the
+beside-the-checkpoint sidecar). Layers without a QK dot product (SSM
+blocks, cross-attention) get identity entries: a capture path reports
+them as ``None`` in ``aux["qk"]`` and :func:`calibrate` passes identity
+through, so the projection array stays index-aligned with the stack.
 """
+
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Iterable, List, Optional
+from typing import Callable, Iterable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,30 +35,39 @@ class AquaProjections:
         return self.p[i]
 
 
-def identity_projections(num_layers: int, num_kv: int, d: int
-                         ) -> AquaProjections:
+def identity_projections(num_layers: int, num_kv: int, d: int) -> AquaProjections:
     eye = jnp.broadcast_to(jnp.eye(d), (num_layers, num_kv, d, d))
     return AquaProjections(p=eye)
 
 
-def calibrate(forward_with_capture: Callable, params, batches: Iterable,
-              cfg: ModelConfig, max_vectors: int = 16384) -> AquaProjections:
+def calibrate(
+    forward_with_capture: Callable,
+    params,
+    batches: Iterable,
+    cfg: ModelConfig,
+    max_vectors: int = 16384,
+) -> AquaProjections:
     """Compute projections from captured activations.
 
     ``forward_with_capture(params, tokens) -> aux`` must return
-    ``aux["qk"]``: list over attention layers of (q, k) with
-    q: (B, S, KV, G, D), k: (B, S, KV, D) — post-RoPE, exactly the vectors
-    the online phase projects (paper §6.1 step 2).
+    ``aux["qk"]``: list over layers of (q, k) with q: (B, S, KV, G, D),
+    k: (B, S, KV, D) — post-RoPE, exactly the vectors the online phase
+    projects (paper §6.1 step 2). An entry may be ``None`` for a layer
+    with no QK dot product (SSM block, cross-attention): that layer gets
+    an identity projection, keeping the array index-aligned.
 
     Accumulates Gram matrices streamingly (no giant concat) — equivalent to
     SVD right-singular-vectors of the stacked D_calib (appendix A.3 path 1).
+    The accumulation runs in float64 and the eigendecomposition is
+    deterministic, so the same corpus and seed produce bit-identical
+    projections.
     """
     acfg = cfg.attention
     assert acfg is not None, "calibration needs an attention model"
     d = acfg.head_dim
     kvh = acfg.num_kv_heads
-    grams: Optional[np.ndarray] = None   # (L, KV, D, D)
-    layer_ids: Optional[List[int]] = None
+    grams: Optional[np.ndarray] = None  # (L, KV, D, D)
+    touched: Optional[np.ndarray] = None  # (L,) any activations seen
     seen = 0
     for tokens in batches:
         if seen >= max_vectors:
@@ -62,8 +76,12 @@ def calibrate(forward_with_capture: Callable, params, batches: Iterable,
         qks = aux["qk"]
         if grams is None:
             grams = np.zeros((len(qks), kvh, d, d), np.float64)
-            layer_ids = list(range(len(qks)))
-        for li, (q, k) in enumerate(qks):
+            touched = np.zeros(len(qks), bool)
+        batch_vectors = 0
+        for li, entry in enumerate(qks):
+            if entry is None:
+                continue  # no QK product in this layer -> identity below
+            q, k = entry
             b, s = q.shape[0], q.shape[1]
             # D_calib^GQA per group: queries of the group + the shared key.
             qm = np.asarray(q, np.float64).reshape(b * s, kvh, -1, d)
@@ -72,11 +90,16 @@ def calibrate(forward_with_capture: Callable, params, batches: Iterable,
                 dq = qm[:, h].reshape(-1, d)
                 dmat = np.concatenate([dq, km[:, h]], axis=0)
                 grams[li, h] += dmat.T @ dmat
-        seen += int(np.prod(q.shape[:2]))
+            touched[li] = True
+            batch_vectors = b * s
+        seen += batch_vectors
     assert grams is not None, "no calibration batches supplied"
     num_layers = grams.shape[0]
     p = np.zeros((num_layers, kvh, d, d), np.float32)
     for li in range(num_layers):
+        if not touched[li]:
+            p[li] = np.eye(d, dtype=np.float32)
+            continue
         for h in range(kvh):
             eigval, eigvec = np.linalg.eigh(grams[li, h])
             p[li, h] = eigvec[:, ::-1]  # descending variance
@@ -84,7 +107,10 @@ def calibrate(forward_with_capture: Callable, params, batches: Iterable,
 
 
 def save_projections(path: str, proj: AquaProjections) -> None:
-    np.savez(path, p=np.asarray(proj.p))
+    # write through a file object so the exact path is honored
+    # (np.savez appends ".npz" to bare string paths)
+    with open(path, "wb") as f:
+        np.savez(f, p=np.asarray(proj.p))
 
 
 def load_projections(path: str) -> AquaProjections:

@@ -1,4 +1,4 @@
-"""Deterministic, stateless-indexed synthetic data pipeline.
+"""Deterministic, stateless-indexed data pipeline.
 
 Every batch is a pure function of (seed, step) — no iterator state, no
 coordination. This is the straggler/elasticity story: a restarted or
@@ -6,19 +6,35 @@ re-sharded worker recomputes exactly its slice of any step's batch from
 the index alone, and data-parallel groups slice the same global batch by
 shard id. Checkpoint resume needs only the step counter.
 
-Two generators:
+Synthetic generators:
   * ``lcg_batch`` — a learnable synthetic language (affine next-token rule
     per sequence) used by convergence tests and the e2e example; a model
     that attends properly drives loss to ~0.
   * ``uniform_batch`` — i.i.d. tokens for throughput/benchmark runs.
+  * ``copy_batch`` — prefix-repeat language whose quality depends on
+    long-range attention.
+
+Real-text source:
+  * ``corpus_batch`` — windows from a tokenized file
+    (``DataConfig.corpus_path``): a ``.npy``/``.npz`` array of token ids,
+    or a ``.txt``/``.text`` file tokenized byte-level (UTF-8 bytes; ids
+    fold into the vocab). Window starts hash from (seed, step, row), so
+    the same stateless-index contract holds — this is the calibration
+    corpus source for the real-weights SVD step (paper §6.1 step 1;
+    ``corpora/calibration.txt`` ships a small real-text sample for
+    network-free CI).
 """
+
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+import functools
+import os
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 
@@ -29,7 +45,8 @@ class DataConfig:
     seq_len: int
     global_batch: int
     seed: int = 0
-    kind: str = "lcg"          # lcg | uniform
+    kind: str = "lcg"  # lcg | uniform | copy | corpus
+    corpus_path: Optional[str] = None  # required for kind="corpus"
 
 
 def _keys(cfg: DataConfig, step: int) -> jax.Array:
@@ -48,10 +65,13 @@ def lcg_batch(cfg: DataConfig, step: int) -> Dict[str, jax.Array]:
     def step_fn(x, _):
         nxt = (a[:, 0] * x + c[:, 0]) % v
         return nxt, nxt
+
     _, seq = jax.lax.scan(step_fn, x0[:, 0], None, length=s)
-    tokens = jnp.concatenate([x0, seq.T], axis=1)[:, :s + 1]
-    return {"tokens": tokens[:, :-1].astype(jnp.int32),
-            "labels": tokens[:, 1:].astype(jnp.int32)}
+    tokens = jnp.concatenate([x0, seq.T], axis=1)[:, : s + 1]
+    return {
+        "tokens": tokens[:, :-1].astype(jnp.int32),
+        "labels": tokens[:, 1:].astype(jnp.int32),
+    }
 
 
 def copy_batch(cfg: DataConfig, step: int) -> Dict[str, jax.Array]:
@@ -64,11 +84,14 @@ def copy_batch(cfg: DataConfig, step: int) -> Dict[str, jax.Array]:
     b, s, v = cfg.global_batch, cfg.seq_len, cfg.vocab_size
     half = (s + 1) // 2 + 1
     prefix = jax.random.randint(key, (b, half), 0, v, jnp.int32)
-    seq = jnp.concatenate([prefix, prefix], axis=1)[:, :s + 1]
+    seq = jnp.concatenate([prefix, prefix], axis=1)[:, : s + 1]
     pos = jnp.arange(s)
     mask = (pos[None, :] >= half - 1).astype(jnp.float32)
-    return {"tokens": seq[:, :-1], "labels": seq[:, 1:],
-            "loss_mask": jnp.broadcast_to(mask, (b, s))}
+    return {
+        "tokens": seq[:, :-1],
+        "labels": seq[:, 1:],
+        "loss_mask": jnp.broadcast_to(mask, (b, s)),
+    }
 
 
 def uniform_batch(cfg: DataConfig, step: int) -> Dict[str, jax.Array]:
@@ -78,33 +101,117 @@ def uniform_batch(cfg: DataConfig, step: int) -> Dict[str, jax.Array]:
     return {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
 
 
+# ---------------------------------------------------------------------------
+# Tokenized-file corpus source
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=8)
+def load_token_corpus(path: str, vocab_size: int) -> np.ndarray:
+    """1-D int32 token ids from a corpus file, folded into ``vocab_size``.
+
+    ``.npy``/``.npz`` files hold pre-tokenized ids (any integer dtype; an
+    ``.npz`` uses its first array). ``.txt``/``.text`` files tokenize
+    byte-level: each UTF-8 byte is one token — crude, but real text with
+    real statistics, which is all the calibration Gram accumulation needs
+    (and exactly reproducible with zero tokenizer dependencies)."""
+    ext = os.path.splitext(path)[1].lower()
+    if ext in (".npy", ".npz"):
+        loaded = np.load(path)
+        arr = loaded[loaded.files[0]] if hasattr(loaded, "files") else loaded
+        ids = np.asarray(arr).reshape(-1)
+        if not np.issubdtype(ids.dtype, np.integer):
+            raise ValueError(f"token corpus {path!r} must hold integer ids")
+    elif ext in (".txt", ".text"):
+        with open(path, "rb") as f:
+            ids = np.frombuffer(f.read(), dtype=np.uint8)
+    else:
+        raise ValueError(
+            f"unsupported corpus format {ext!r} for {path!r} "
+            "(expected .npy/.npz token ids or .txt byte-level text)"
+        )
+    return (ids.astype(np.int64) % vocab_size).astype(np.int32)
+
+
+def corpus_batch(cfg: DataConfig, step: int) -> Dict[str, jax.Array]:
+    """Deterministic windows over a tokenized corpus file.
+
+    Window starts are a pure hash of (seed, step, row) — a Weyl-style
+    multiplicative hash over the valid start range — so any worker can
+    recompute any step's batch from the index alone, matching the
+    synthetic generators' contract."""
+    assert cfg.corpus_path is not None, 'kind="corpus" needs corpus_path'
+    tokens = load_token_corpus(cfg.corpus_path, cfg.vocab_size)
+    b, s = cfg.global_batch, cfg.seq_len
+    n = tokens.size - (s + 1)
+    if n <= 0:
+        raise ValueError(
+            f"corpus {cfg.corpus_path!r} has {tokens.size} tokens; "
+            f"need > seq_len + 1 = {s + 2}"
+        )
+    row = np.arange(b, dtype=np.int64)
+    mix = (cfg.seed * 1_000_003 + step * b + row) * 2_654_435_761
+    starts = (mix % n).astype(np.int64)
+    windows = tokens[starts[:, None] + np.arange(s + 1)[None, :]]
+    return {
+        "tokens": jnp.asarray(windows[:, :-1], jnp.int32),
+        "labels": jnp.asarray(windows[:, 1:], jnp.int32),
+    }
+
+
+_GENERATORS = {
+    "lcg": lcg_batch,
+    "uniform": uniform_batch,
+    "copy": copy_batch,
+    "corpus": corpus_batch,
+}
+
+
 def make_batch(cfg: DataConfig, step: int) -> Dict[str, jax.Array]:
-    fn = {"lcg": lcg_batch, "uniform": uniform_batch,
-          "copy": copy_batch}[cfg.kind]
-    return fn(cfg, step)
+    return _GENERATORS[cfg.kind](cfg, step)
 
 
-def add_frontend_inputs(batch: Dict[str, jax.Array], mcfg: ModelConfig,
-                        step: int = 0) -> Dict[str, jax.Array]:
+def add_frontend_inputs(
+    batch: Dict[str, jax.Array], mcfg: ModelConfig, step: int = 0
+) -> Dict[str, jax.Array]:
     """Stub modality frontends: precomputed frame/patch embeddings."""
     b = batch["tokens"].shape[0]
     fe = mcfg.frontend
     key = jax.random.PRNGKey(step + 7)
     if fe.kind == "vision_patches":
         batch["patches"] = jax.random.normal(
-            key, (b, fe.num_embeds, fe.embed_dim), jnp.float32)
+            key, (b, fe.num_embeds, fe.embed_dim), jnp.float32
+        )
     elif fe.kind == "audio_frames":
         batch["frames"] = jax.random.normal(
-            key, (b, fe.num_embeds, mcfg.d_model), jnp.float32)
+            key, (b, fe.num_embeds, mcfg.d_model), jnp.float32
+        )
     return batch
 
 
-def calibration_batches(mcfg: ModelConfig, *, num_batches: int = 4,
-                        batch: int = 2, seq: int = 128, seed: int = 1234):
-    """Calibration corpus iterator for ``repro.core.calibration`` (stands in
-    for BookCorpus, paper §6.1 step 1)."""
-    dcfg = DataConfig(vocab_size=mcfg.vocab_size, seq_len=seq,
-                      global_batch=batch, seed=seed)
+def calibration_batches(
+    mcfg: ModelConfig,
+    *,
+    num_batches: int = 4,
+    batch: int = 2,
+    seq: int = 128,
+    seed: int = 1234,
+    corpus_path: Optional[str] = None,
+):
+    """Calibration corpus iterator for ``repro.core.calibration``.
+
+    With ``corpus_path`` the batches are real-text windows from that file
+    (the paper's BookCorpus role, §6.1 step 1); otherwise the synthetic
+    LCG language stands in."""
+    kind = "corpus" if corpus_path is not None else "lcg"
+    dcfg = DataConfig(
+        vocab_size=mcfg.vocab_size,
+        seq_len=seq,
+        global_batch=batch,
+        seed=seed,
+        kind=kind,
+        corpus_path=corpus_path,
+    )
     for i in range(num_batches):
         b = make_batch(dcfg, i)
         yield add_frontend_inputs({"tokens": b["tokens"]}, mcfg, i)

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 import time
 
 import numpy as np
@@ -47,6 +48,21 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--hf-checkpoint", default=None,
+                    help="serve real weights: path to an HF-format "
+                         "safetensors checkpoint dir (config.json + "
+                         "model.safetensors[.index.json]); overrides "
+                         "--arch/--reduced — the architecture is read "
+                         "from config.json (see checkpoint.hf)")
+    ap.add_argument("--calibration-corpus", default=None,
+                    help="tokenized corpus file for the offline SVD "
+                         "calibration (.npy/.npz ids or .txt byte-level; "
+                         "see data.pipeline.load_token_corpus); default "
+                         "is the synthetic LCG language")
+    ap.add_argument("--projections", default=None,
+                    help="AquaProjections .npz artifact path: load it if "
+                         "it exists, else calibrate and save there "
+                         "(skip recalibration across serve runs)")
     ap.add_argument("--k-ratio", type=float, default=0.75)
     ap.add_argument("--s-ratio", type=float, default=0.0)
     ap.add_argument("--h2o-ratio", type=float, default=1.0)
@@ -138,7 +154,13 @@ def main():
                          "regression silently serving the jnp reference)")
     args = ap.parse_args()
 
-    cfg = reduced(args.arch) if args.reduced else get_config(args.arch)
+    if args.hf_checkpoint is not None:
+        from repro.checkpoint.hf import config_from_hf, load_hf_checkpoint
+        cfg = config_from_hf(args.hf_checkpoint)
+        print(f"[serve] HF checkpoint {args.hf_checkpoint}: "
+              f"{cfg.name} ({cfg.num_layers}L d{cfg.d_model})")
+    else:
+        cfg = reduced(args.arch) if args.reduced else get_config(args.arch)
     aqua = None
     if not args.no_aqua and cfg.attention is not None:
         aqua = AquaConfig(k_ratio=args.k_ratio, s_ratio=args.s_ratio,
@@ -150,11 +172,21 @@ def main():
     cfg = dataclasses.replace(cfg, aqua=aqua)
 
     model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+    if args.hf_checkpoint is not None:
+        params = load_hf_checkpoint(args.hf_checkpoint, cfg)
+    else:
+        params = model.init(jax.random.PRNGKey(0))
 
     proj = None
-    if aqua is not None:
-        print(f"[serve] offline AQUA calibration for {args.arch} ...")
+    if aqua is not None and args.projections is not None \
+            and os.path.exists(args.projections):
+        from repro.core.calibration import load_projections
+        proj = load_projections(args.projections)
+        print(f"[serve] loaded AQUA projections from {args.projections}")
+    elif aqua is not None:
+        src = args.calibration_corpus or "synthetic LCG"
+        print(f"[serve] offline AQUA calibration for {cfg.name} "
+              f"(corpus: {src}) ...")
         if cfg.family == "hybrid":
             # capture path collects only attention layers
             n_attn = model.num_attn_layers
@@ -165,9 +197,15 @@ def main():
             _, aux = model.forward(p, batch, capture=True)
             return aux
         proj = calibrate(fwd_cap, params,
-                         calibration_batches(cfg, num_batches=2, batch=2,
-                                             seq=32), cfg) \
+                         calibration_batches(
+                             cfg, num_batches=2, batch=2, seq=32,
+                             corpus_path=args.calibration_corpus),
+                         cfg) \
             if cfg.family != "hybrid" else proj
+        if args.projections is not None:
+            from repro.core.calibration import save_projections
+            save_projections(args.projections, proj)
+            print(f"[serve] saved AQUA projections to {args.projections}")
 
     if args.rectangular:
         _drive_rectangular(cfg, params, proj, args)

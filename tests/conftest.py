@@ -12,5 +12,6 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 _flags = os.environ.get("XLA_FLAGS", "")
 if "xla_force_host_platform_device_count" not in _flags:
     os.environ["XLA_FLAGS"] = (
-        _flags + " --xla_force_host_platform_device_count=8").strip()
+        _flags + " --xla_force_host_platform_device_count=8"
+    ).strip()
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,24 @@
+"""Synthetic-HF-checkpoint fixtures for the loader/calibration/quality
+suites.
+
+The generator itself lives in ``repro.checkpoint.fixtures`` (so the
+quality bench can import it without reaching into tests/); this module
+is the pytest-facing surface: re-exports plus tmp-dir conveniences for
+the variants the oracle suite covers (single-file, sharded 2-file
+index, tied-embedding, attention-bias, bf16-stored).
+"""
+
+from repro.checkpoint.fixtures import (  # noqa: F401
+    QWEN3_TINY,
+    fixture_state_dict,
+    write_hf_fixture,
+)
+from repro.checkpoint.hf import config_from_hf
+
+
+def make_fixture(tmp_path, **kw):
+    """Write a fixture checkpoint under ``tmp_path``; returns
+    (checkpoint dir, repro ModelConfig, raw HF-layout state dict)."""
+    outdir = str(tmp_path / "hf_ckpt")
+    sd = write_hf_fixture(outdir, **kw)
+    return outdir, config_from_hf(outdir), sd

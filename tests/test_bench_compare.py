@@ -93,6 +93,50 @@ def test_anchor_present_rows_still_gate_deterministic_metrics():
     assert rows[("kernel/aqua_decode_k0.5", "hbm_bytes_ratio")] is False
 
 
+def test_ppl_gate_bounds_upward_drift():
+    """Perplexity gates one-sided: fresh <= base * (1 + threshold).
+    Getting *better* (lower) never fails; drifting above the band does."""
+    base = _table([("quality/hf_ppl_k0.5", "ppl=100.0")])
+    ok_fresh = _table([("quality/hf_ppl_k0.5", "ppl=115.0")])
+    rows = {(n, m): ok for n, m, _, _, ok in _run(base, ok_fresh)}
+    assert rows[("quality/hf_ppl_k0.5", "ppl")] is True
+    bad_fresh = _table([("quality/hf_ppl_k0.5", "ppl=125.0")])
+    rows = {(n, m): ok for n, m, _, _, ok in _run(base, bad_fresh)}
+    assert rows[("quality/hf_ppl_k0.5", "ppl")] is False
+    better = _table([("quality/hf_ppl_k0.5", "ppl=10.0")])
+    rows = {(n, m): ok for n, m, _, _, ok in _run(base, better)}
+    assert rows[("quality/hf_ppl_k0.5", "ppl")] is True
+
+
+def test_ppl_gate_threshold_scales():
+    base = _table([("quality/aqua_k0.5", "ppl=2.0")])
+    fresh = _table([("quality/aqua_k0.5", "ppl=2.5")])
+    rows = {(n, m): ok for n, m, _, _, ok in _run(base, fresh, 0.2)}
+    assert rows[("quality/aqua_k0.5", "ppl")] is False
+    rows = {(n, m): ok for n, m, _, _, ok in _run(base, fresh, 0.5)}
+    assert rows[("quality/aqua_k0.5", "ppl")] is True
+
+
+def test_acc_and_token_match_gate_absolute_drift():
+    base = _table(
+        [("quality/aqua_k0.5", "ppl=2.0 acc=0.90 token_match=0.95")])
+    fresh = _table(
+        [("quality/aqua_k0.5", "ppl=2.0 acc=0.86 token_match=0.89")])
+    rows = {(n, m): ok for n, m, _, _, ok in _run(base, fresh)}
+    assert rows[("quality/aqua_k0.5", "acc")] is True      # within 0.05
+    assert rows[("quality/aqua_k0.5", "token_match")] is False
+
+
+def test_skipped_quality_row_fails_presence_gate():
+    """A baseline quality row that comes back as a skipped sentinel (e.g.
+    the bench ran without enough devices) must fail, exactly like the
+    mesh serving rows — the canonical row set is part of the contract."""
+    base = _table([("quality/hf_match_k0.5@mesh2x2", "token_match=0.9")])
+    fresh = _table([("quality/hf_match_k0.5@mesh2x2", "skipped=devices<4 (1)")])
+    rows = {(n, m): ok for n, m, _, _, ok in _run(base, fresh)}
+    assert rows[("quality/hf_match_k0.5@mesh2x2", "present")] is False
+
+
 def test_exit_summary_names_each_failed_gate(tmp_path, capsys):
     """A red gate's exit summary must name WHICH row+metric failed — a
     bare failure count forces re-scrolling the whole table in CI logs."""

@@ -98,5 +98,29 @@ def test_roofline_render_golden(tmp_path):
     assert "skipped" in lines[3] and "ERROR" in lines[4]
 
 
+@pytest.mark.slow
+def test_quality_sweep_rows_golden():
+    """Golden shape/finiteness for the k_ratio quality sweep (needs the
+    cached trained bench model — nightly-slow; the HF-ingestion quality
+    rows have a fast equivalent in tests/test_quality.py)."""
+    from benchmarks.quality import quality_sweep
+
+    metrics = _assert_rows(quality_sweep(), "quality/")
+    exact = metrics["quality/exact"]
+    assert exact["ppl"] >= 1.0 and 0.0 <= exact["acc"] <= 1.0
+    for k in ("1", "0.75", "0.5"):
+        row = metrics[f"quality/aqua_k{k}"]
+        assert row["ppl"] >= exact["ppl"] * (1 - 1e-4), (k, row)
+        assert 0.0 <= row["token_match"] <= 1.0
+    # full-kept rotation: same quality, same greedy tokens
+    assert metrics["quality/aqua_k1"]["ppl"] == \
+        pytest.approx(exact["ppl"], rel=1e-3)
+    assert metrics["quality/aqua_k1"]["token_match"] == 1.0
+    # composition rows (int8 pools / hierarchical pages) exist and carry
+    # the greedy-agreement contract metric
+    assert "token_match" in metrics["quality/aqua_k0.5+int8"]
+    assert "token_match" in metrics["quality/aqua_k0.5+hier"]
+
+
 if __name__ == "__main__":
     pytest.main([__file__, "-q"])

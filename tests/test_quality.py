@@ -1,0 +1,139 @@
+"""Oracle tests for the quality bench (benchmarks/quality.py): the
+teacher-forced perplexity helper pinned against a hand-rolled numpy CE,
+ppl monotone (nondecreasing) as k_ratio shrinks on a trained model, and
+golden-shape/finiteness checks for the HF-ingestion quality rows."""
+
+import dataclasses
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from benchmarks.compare import _metrics
+from benchmarks.quality import (hf_ingest_quality, match_fraction,
+                                ppl_and_accuracy, teacher_forced_ppl)
+from hf_fixtures import make_fixture
+from repro.checkpoint.hf import load_hf_checkpoint
+from repro.configs import reduced
+from repro.configs.base import AquaConfig, TrainConfig
+from repro.core.calibration import calibrate
+from repro.data.pipeline import DataConfig, calibration_batches, make_batch
+from repro.launch.train import Trainer
+from repro.models import build_model
+
+
+def test_ppl_matches_numpy_ce_oracle(tmp_path):
+    """teacher_forced_ppl == exp(mean -log softmax[label]), hand-rolled
+    token by token from the model's own logits, to 1e-5 relative."""
+    outdir, cfg, _ = make_fixture(tmp_path)
+    params = load_hf_checkpoint(outdir, cfg)
+    model = build_model(cfg)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=12, global_batch=2,
+                      seed=3, kind="uniform")
+    batches = [make_batch(dcfg, i) for i in range(2)]
+    got = teacher_forced_ppl(cfg, params, None, batches)
+
+    nlls = []
+    for b in batches:
+        logits = np.asarray(
+            model.forward(params, {"tokens": b["tokens"]}), np.float64)
+        labels = np.asarray(b["labels"])
+        for bi in range(labels.shape[0]):
+            for t in range(labels.shape[1]):
+                row = logits[bi, t]
+                prob = np.exp(row - row.max())
+                prob /= prob.sum()
+                nlls.append(-math.log(prob[labels[bi, t]]))
+    want = math.exp(float(np.mean(nlls)))
+    assert got == pytest.approx(want, rel=1e-5)
+    assert math.isfinite(got) and got > 0
+
+
+def test_ppl_respects_loss_mask(tmp_path):
+    outdir, cfg, _ = make_fixture(tmp_path)
+    params = load_hf_checkpoint(outdir, cfg)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=2,
+                      seed=1, kind="copy")
+    b = make_batch(dcfg, 0)                # carries a loss_mask
+    masked, _ = ppl_and_accuracy(cfg, params, None, [b])
+    unmasked, _ = ppl_and_accuracy(
+        cfg, params, None, [{"tokens": b["tokens"], "labels": b["labels"]}])
+    assert masked != pytest.approx(unmasked, rel=1e-9)
+
+
+@pytest.fixture(scope="module")
+def trained_lcg():
+    """Small qwen3-family model trained on the learnable LCG language —
+    partially converged (60 steps), so the AQUA approximation level is
+    visible in the teacher-forced ppl."""
+    cfg = dataclasses.replace(reduced("qwen3-0.6b", vocab=64), remat=False)
+    tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=5, total_steps=60)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=16)
+    trainer = Trainer(cfg, tcfg, dcfg, donate=False)
+    state, _ = trainer.run(60, log_every=1000)
+    model = build_model(cfg)
+
+    def fwd_cap(p, batch):
+        _, aux = model.forward(p, batch, capture=True)
+        return aux
+
+    proj = calibrate(fwd_cap, state.params,
+                     calibration_batches(cfg, num_batches=2, batch=2,
+                                         seq=32), cfg)
+    return cfg, state.params, proj, dcfg
+
+
+def test_ppl_monotone_nondecreasing_in_k_ratio(trained_lcg):
+    cfg, params, proj, dcfg = trained_lcg
+    held = [make_batch(dcfg, 40_000 + i) for i in range(3)]
+    ppls = []
+    for k in (1.0, 0.75, 0.5, 0.25):
+        ck = dataclasses.replace(cfg, aqua=AquaConfig(k_ratio=k))
+        ppl, acc = ppl_and_accuracy(ck, params, proj, held)
+        assert math.isfinite(ppl) and 0.0 <= acc <= 1.0
+        ppls.append(ppl)
+    exact, _ = ppl_and_accuracy(
+        dataclasses.replace(cfg, aqua=None), params, None, held)
+    # k=1.0 is a pure rotation: ppl identical to exact up to float ulps
+    assert ppls[0] == pytest.approx(exact, rel=1e-4)
+    # dropping more dims can only lose information (tiny slack for the
+    # float reduction-order noise between adjacent operating points)
+    for hi, lo in zip(ppls, ppls[1:]):
+        assert lo >= hi * (1 - 1e-4), ppls
+
+
+def test_match_fraction_counts_positions():
+    class Out:
+        def __init__(self, toks):
+            self.tokens = toks
+
+    ref = {0: Out([1, 2, 3, 4]), 1: Out([5, 6])}
+    same = {0: Out([1, 2, 3, 4]), 1: Out([5, 6])}
+    assert match_fraction(same, ref) == 1.0
+    half = {0: Out([1, 2, 9, 9]), 1: Out([5, 6])}
+    assert match_fraction(half, ref) == pytest.approx(4 / 6)
+    short = {0: Out([1, 2]), 1: Out([5, 6])}   # missing tail = mismatch
+    assert match_fraction(short, ref) == pytest.approx(4 / 6)
+
+
+def test_hf_ingest_quality_rows_golden():
+    rows = hf_ingest_quality()
+    names = [r[0] for r in rows]
+    for k in ("1", "0.75", "0.5"):
+        assert f"quality/hf_ppl_k{k}" in names
+        assert f"quality/hf_match_k{k}@mesh2x2" in names
+    metrics = {}
+    for name, us, derived in rows:
+        assert us == 0.0
+        for m, v in _metrics(derived).items():
+            assert math.isfinite(v), (name, m)
+        metrics[name] = _metrics(derived)
+    for k in ("1", "0.75", "0.5"):
+        assert metrics[f"quality/hf_ppl_k{k}"]["ppl"] > 0
+    # nondecreasing ppl across the sweep (same held-out windows)
+    assert metrics["quality/hf_ppl_k0.5"]["ppl"] >= \
+        metrics["quality/hf_ppl_k1"]["ppl"] * (1 - 1e-4)
+    if jax.device_count() >= 4:
+        # full-kept rotation on the mesh kernel path: token-identical
+        assert metrics["quality/hf_match_k1@mesh2x2"]["token_match"] == 1.0
